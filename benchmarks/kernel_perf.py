@@ -1,0 +1,99 @@
+"""Pallas kernel + simulator engine performance benchmarks.
+
+On this CPU container the Pallas kernel runs in interpret mode (semantics
+validation only — interpret timing is meaningless for TPU), so the numbers
+that matter here are (a) the jitted dense-step oracle, which is the same
+math the kernel computes per tile, and (b) the production segment-sum
+simulator throughput at paper scale.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fully_connected, make_links, torus3d
+from repro.core.controller import ControllerConfig
+from repro.core.frame_model import SimConfig, simulate
+from repro.kernels import bittide_step, densify
+from repro.kernels.ref import bittide_dense_step_ref
+
+
+def _bench(fn, iters=20):
+    fn()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_dense_step_oracle():
+    """Fused dense step (jnp oracle, jitted): N=1024 pod-scale domain."""
+    topo = fully_connected(64)  # dense-ish block
+    links = make_links(topo, cable_m=2.0)
+    a, lam, lat, npad = densify(topo, links)
+    # tile up to N=1024 by block-diagonal replication
+    reps = 8
+    n = npad * reps
+    a_big = jnp.zeros((a.shape[0], n, n), jnp.float32)
+    for r in range(reps):
+        a_big = a_big.at[:, r * npad:(r + 1) * npad, r * npad:(r + 1) * npad].set(a)
+    lam_big = jnp.zeros_like(a_big)
+    rng = np.random.default_rng(0)
+    psi = jnp.asarray(rng.normal(0, 10, n).astype(np.float32))
+    nu = jnp.asarray(rng.normal(0, 1e-5, n).astype(np.float32))
+    nu_u = jnp.asarray(rng.uniform(-8e-6, 8e-6, n).astype(np.float32))
+
+    step = jax.jit(lambda p, v: bittide_dense_step_ref(
+        p, v, nu_u, a_big, lam_big, lat, 2e-9, 0.0, 125000.0)[:2])
+    us = _bench(lambda: step(psi, nu))
+    flops = 2 * a_big.shape[0] * n * n  # matvec-dominated
+    return ("kernel_dense_step_n1024_oracle", us,
+            f"n={n};classes={a.shape[0]};mflops_per_call={flops/1e6:.1f}")
+
+
+def bench_pallas_interpret_parity():
+    """Pallas kernel in interpret mode vs oracle on one step (correctness +
+    interpret overhead measurement; TPU perf is a compile-target claim)."""
+    topo = fully_connected(20)
+    links = make_links(topo, cable_m=2.0)
+    a, lam, lat, npad = densify(topo, links)
+    rng = np.random.default_rng(1)
+    psi = jnp.asarray(rng.normal(0, 10, npad).astype(np.float32))
+    nu = jnp.asarray(rng.normal(0, 1e-5, npad).astype(np.float32))
+    nu_u = jnp.asarray(rng.uniform(-8e-6, 8e-6, npad).astype(np.float32))
+    kw = dict(kp=2e-9, beta_off=0.0, dt_frames=125000.0)
+    p1, n1 = bittide_step(psi, nu, nu_u, a, lam, lat, interpret=True, **kw)
+    p2, n2, _ = bittide_dense_step_ref(psi, nu, nu_u, a, lam, lat, **kw)
+    err = float(jnp.abs(n1 - n2).max())
+    us = _bench(lambda: bittide_step(psi, nu, nu_u, a, lam, lat,
+                                     interpret=True, **kw), iters=5)
+    return ("kernel_pallas_interpret_parity", us,
+            f"max_nu_err={err:.2e};match={err < 1e-10}")
+
+
+def bench_sim_engine_throughput():
+    """Production simulator: node-steps/second on the 22^3 torus."""
+    topo = torus3d(22)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, topo.num_nodes).astype(np.float32)
+    cfg = SimConfig(dt=5e-3, steps=500, record_every=100, record_beta=False)
+    ctrl = ControllerConfig(kind="proportional", kp=2e-8)
+
+    def run():
+        return simulate(topo, links, ctrl, ppm, cfg)
+
+    run()  # warm compile
+    t0 = time.perf_counter()
+    run()
+    dt = time.perf_counter() - t0
+    node_steps = topo.num_nodes * cfg.steps / dt
+    return ("sim_engine_torus_throughput", dt * 1e6,
+            f"node_steps_per_s={node_steps:.2e};nodes={topo.num_nodes}")
+
+
+ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
+       bench_sim_engine_throughput]

@@ -1,0 +1,249 @@
+"""One benchmark per paper table/figure (§5, §6).
+
+Each function runs the corresponding experiment on the abstract frame model
+(the paper's own validated semantics, Fig 17), times the dominant compute,
+checks the paper's quantitative claim, and returns a CSV row:
+
+    name, us_per_call, derived
+
+`derived` encodes the reproduced quantity (convergence time, ppm band,
+RTT, ...) and a PASS/FAIL against the paper's reported value.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BittideNetwork, ControllerConfig, OscillatorSpec,
+                        SimConfig, cube, fully_connected, hourglass, simulate,
+                        torus3d, make_links)
+from repro.core.latency import round_trip_latency, rtt_table
+from repro.core.reframing import reframe
+
+# Experiment-calibrated gains (units: relative frequency per frame of
+# occupancy error; see controller.py docstring for the hardware mapping).
+# SLOW is calibrated so FC8 takes ~50 s to enter the 1 ppm band (§5.3).
+SLOW = ControllerConfig(kind="proportional", kp=5e-11)       # §5.2 k_p=0.25
+SLOW_HW = ControllerConfig(kind="discrete", kp=2e-10, fs=1e-8,
+                           pulses_per_update=2000)           # 0.01 ppm steps
+FAST_HW = ControllerConfig(kind="discrete", kp=2e-8, fs=1e-7,
+                           pulses_per_update=50)             # §5.7 realistic
+
+
+def _ppm(seed, n=8):
+    return np.random.default_rng(seed).uniform(-8, 8, n)  # ±8 ppm (§3.1)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def _sim(topo, ctrl, cfg, seed=0, cable=2.0):
+    links = make_links(topo, cable_m=cable)
+    return simulate(topo, links, ctrl, _ppm(seed, topo.num_nodes).astype(np.float32), cfg)
+
+
+def bench_fig6_7_fully_connected():
+    """Fig 6/7: FC8 frequencies converge into a <1 ppm band; buffers settle
+    symmetrically and stay bounded."""
+    cfg = SimConfig(dt=2e-3, steps=50_000, record_every=100)  # 100 s
+    res, us = _timed(lambda: _sim(fully_connected(8), SLOW, cfg))
+    band = float(res.freq_ppm[-1].max() - res.freq_ppm[-1].min())
+    tconv = res.convergence_time(1.0)
+    rev = res.topo.reverse_edge_index()
+    asym = float(np.abs(res.beta[-1] + res.beta[-1][rev]).max())
+    ok = band < 1.0 and np.isfinite(tconv) and asym < 2.0
+    return ("fig6_7_fully_connected", us,
+            f"band_ppm={band:.3f};conv_s={tconv:.1f};buf_antisym={asym:.2f};"
+            f"{'PASS' if ok else 'FAIL'} (paper: <1ppm, ~50s, symmetric)")
+
+
+def bench_fig9_10_hourglass():
+    """Fig 9/10: two cliques align internally first; bridge reconciles them
+    (node-4 pull-up-then-down), then global convergence."""
+    cfg = SimConfig(dt=2e-3, steps=60_000, record_every=100)
+    # node 4 starts below its own clique (5,6,7): it is first pulled UP to
+    # them, then the whole clique is pulled DOWN across the bridge — the
+    # trajectory the paper highlights for node 4 (red) in Fig 9.
+    ppm = np.array([-5.0, -4.5, -4.2, -4.8, -1.0, 4.5, 4.2, 4.8], np.float32)
+    topo = hourglass(4)
+    links = make_links(topo, cable_m=2.0)
+    (res, us) = _timed(lambda: simulate(
+        topo, links, ControllerConfig(kind="proportional", kp=1e-9), ppm, cfg))
+    f = res.freq_ppm
+    t_early = len(f) // 16
+    intra = max(np.ptp(f[t_early, :4]), np.ptp(f[t_early, 4:]))
+    inter = abs(f[t_early, :4].mean() - f[t_early, 4:].mean())
+    band = float(np.ptp(f[-1]))
+    # node-4 overshoot: rises toward its clique, then comes back down
+    n4 = f[:, 4]
+    overshoot = bool(n4.max() - n4[0] > 0.5 and n4[-1] < n4.max() - 0.5)
+    ok = intra < inter and band < 1.0 and overshoot
+    return ("fig9_10_hourglass", us,
+            f"early_intra={intra:.2f};early_inter={inter:.2f};band={band:.3f};"
+            f"node4_overshoot={overshoot};{'PASS' if ok else 'FAIL'}")
+
+
+def bench_fig11_12_cube():
+    """Fig 11/12: degree-3 cube topology also converges to <1 ppm."""
+    cfg = SimConfig(dt=2e-3, steps=50_000, record_every=100)
+    res, us = _timed(lambda: _sim(cube(), ControllerConfig(kind="proportional", kp=1e-9), cfg, seed=2))
+    band = float(np.ptp(res.freq_ppm[-1]))
+    settled = float(np.abs(res.beta[-1] - res.beta[-2]).max())
+    ok = band < 1.0 and settled < 1.0
+    return ("fig11_12_cube", us,
+            f"band_ppm={band:.3f};buf_settled_delta={settled:.3f};"
+            f"{'PASS' if ok else 'FAIL'}")
+
+
+def bench_table1_rtt():
+    """Table 1: FC8 round-trip logical latencies hover around 69."""
+    topo = fully_connected(8)
+    rng = np.random.default_rng(3)
+    cable = rng.uniform(1.0, 2.0, topo.num_edges)
+    rev = topo.reverse_edge_index()
+    cable = (cable + cable[rev]) / 2
+    links = make_links(topo, cable_m=cable)
+    (rtt, us) = _timed(lambda: round_trip_latency(topo, links,
+                                                  phase_jitter_seed=3))
+    lo, hi, mean = int(rtt.min()), int(rtt.max()), float(rtt.mean())
+    ok = 67 <= lo and hi <= 71 and abs(mean - 69) <= 1.5
+    return ("table1_rtt", us,
+            f"rtt_min={lo};rtt_max={hi};rtt_mean={mean:.1f};"
+            f"{'PASS' if ok else 'FAIL'} (paper: 67..70, ~69)")
+
+
+def bench_fig13_14_table2_long_link():
+    """§5.6: 2 km fiber (1 km/direction) between nodes 0 and 2: dynamics
+    unchanged, RTT on that link jumps to ~1299 (+~1230)."""
+    topo = fully_connected(8)
+    cable = np.full(topo.num_edges, 1.5)
+    for e in range(topo.num_edges):
+        if {int(topo.src[e]), int(topo.dst[e])} == {0, 2}:
+            cable[e] = 1000.0
+    links_long = make_links(topo, cable_m=cable)
+    links_short = make_links(topo, cable_m=1.5)
+    cfg = SimConfig(dt=2e-3, steps=30_000, record_every=100)
+    ppm = _ppm(4).astype(np.float32)
+
+    def run():
+        r1 = simulate(topo, links_short, SLOW, ppm, cfg)
+        r2 = simulate(topo, links_long, SLOW, ppm, cfg)
+        return r1, r2
+
+    (r1, r2), us = _timed(run)
+    dyn_delta = float(np.abs(r1.freq_ppm[-1] - r2.freq_ppm[-1]).max())
+    rtt = round_trip_latency(topo, links_long, phase_jitter_seed=4)
+    long_rtt = int(rtt.max())
+    short_rtt = int(np.median(rtt[rtt < 100]))
+    ok = dyn_delta < 0.05 and 1296 <= long_rtt <= 1302 and 67 <= short_rtt <= 71
+    return ("fig13_14_table2_long_link", us,
+            f"freq_delta_ppm={dyn_delta:.4f};rtt_long={long_rtt};"
+            f"rtt_short={short_rtt};increase={long_rtt - short_rtt};"
+            f"{'PASS' if ok else 'FAIL'} (paper: unchanged, 1299, +1230)")
+
+
+def bench_fig15_realistic():
+    """§5.7: step 0.1 ppm, aggressive gain, hardware FINC/FDEC actuator:
+    convergence within 300 ms."""
+    cfg = SimConfig(dt=5e-5, steps=10_000, record_every=20, quantize_beta=True)
+    res, us = _timed(lambda: _sim(fully_connected(8), FAST_HW, cfg, seed=5))
+    tconv = res.convergence_time(1.0)
+    ok = tconv < 0.3
+    return ("fig15_realistic", us,
+            f"conv_s={tconv:.3f};{'PASS' if ok else 'FAIL'} (paper: <0.3 s)")
+
+
+def bench_fig16_measured_vs_calculated():
+    """Fig 16: frequency reconstructed from accumulated FINC/FDEC equals the
+    (noisy) measured frequency up to telemetry noise."""
+    cfg = SimConfig(dt=5e-5, steps=8_000, record_every=20,
+                    quantize_beta=True, telemetry_noise_ppm=0.05, seed=6)
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = _ppm(6).astype(np.float32)
+    res, us = _timed(lambda: simulate(topo, links, FAST_HW, ppm, cfg))
+    # calculated = nu_u + c_est (accumulated discrete corrections), final
+    calc_ppm = (ppm * 1e-6 + res.c_state["c_est"] +
+                ppm * 1e-6 * res.c_state["c_est"]) * 1e6
+    meas_ppm = res.freq_ppm[-1]
+    err = float(np.abs(calc_ppm - meas_ppm).max())
+    ok = err < 0.25  # within telemetry noise envelope (5 sigma)
+    return ("fig16_measured_vs_calculated", us,
+            f"max_err_ppm={err:.3f};noise_ppm=0.05;{'PASS' if ok else 'FAIL'}")
+
+
+def bench_fig17_model_validation():
+    """Fig 17: the smooth mathematical model tracks the hardware-discretized
+    system (our stand-in for FPGA data) on the hourglass topology."""
+    topo = hourglass(4)
+    links = make_links(topo, cable_m=2.0)
+    ppm = _ppm(7).astype(np.float32)
+    cfg = SimConfig(dt=5e-5, steps=12_000, record_every=50, quantize_beta=True)
+    cfg_smooth = SimConfig(dt=5e-5, steps=12_000, record_every=50)
+
+    def run():
+        hw = simulate(topo, links, ControllerConfig(
+            kind="discrete", kp=2e-8, fs=1e-8, pulses_per_update=50), ppm, cfg)
+        model = simulate(topo, links, ControllerConfig(
+            kind="proportional", kp=2e-8), ppm, cfg_smooth)
+        return hw, model
+
+    (hw, model), us = _timed(run)
+    err = float(np.abs(hw.freq_ppm - model.freq_ppm).max())
+    ok = err < 0.5
+    return ("fig17_model_validation", us,
+            f"max_traj_err_ppm={err:.3f};{'PASS' if ok else 'FAIL'} "
+            f"(paper: close match)")
+
+
+def bench_fig18_torus_22():
+    """Fig 18: 22^3 = 10648-node 3-D torus converges (the scale experiment).
+
+    This is the sim-engine stress benchmark: 10648 nodes, 63888 directed
+    edges, segment-sum path."""
+    topo = torus3d(22)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(8).uniform(-8, 8, topo.num_nodes).astype(np.float32)
+    cfg = SimConfig(dt=5e-3, steps=6_000, record_every=20, record_beta=False)
+    ctrl = ControllerConfig(kind="proportional", kp=2e-8)
+    res, us = _timed(lambda: simulate(topo, links, ctrl, ppm, cfg))
+    band = float(np.ptp(res.freq_ppm[-1]))
+    start_band = float(np.ptp(res.freq_ppm[0]))
+    # NOTE: the initial 16 ppm spread collapses within ~0.1 s (the torus's
+    # fast local consensus modes, rate ~ ω·kp·λ_max ≈ 30/s); the slow
+    # large-scale modes (λ₂ = 0.081) set the final convergence.
+    ok = band < 0.5 and start_band > band
+    steps_per_s = cfg.steps / (us / 1e6)
+    return ("fig18_torus_22cubed", us,
+            f"nodes={topo.num_nodes};band0={start_band:.3f};band_ppm={band:.4f};"
+            f"sim_steps_per_s={steps_per_s:.0f};{'PASS' if ok else 'FAIL'}")
+
+
+def bench_reframing():
+    """§4.2/[15]: after sync, buffers recenter to half-full+2 and the λ
+    shift equals the applied read-pointer shift."""
+    cfg = SimConfig(dt=2e-3, steps=20_000, record_every=100)
+    res, us = _timed(lambda: _sim(fully_connected(8), SLOW, cfg, seed=9))
+    rf = reframe(res, target=2.0)
+    resid = float(np.abs(rf.occupancy_after - 2.0).max())
+    ok = resid < 1.0
+    return ("reframing", us,
+            f"residual_frames={resid:.3f};{'PASS' if ok else 'FAIL'}")
+
+
+ALL = [
+    bench_fig6_7_fully_connected,
+    bench_fig9_10_hourglass,
+    bench_fig11_12_cube,
+    bench_table1_rtt,
+    bench_fig13_14_table2_long_link,
+    bench_fig15_realistic,
+    bench_fig16_measured_vs_calculated,
+    bench_fig17_model_validation,
+    bench_fig18_torus_22,
+    bench_reframing,
+]

@@ -1,0 +1,64 @@
+"""Roofline report: reads dry-run artifacts and prints the §Roofline table.
+
+Terms (per chip, TPU v5e model: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+    compute_s    = HLO_FLOPs / peak
+    memory_s     = HLO_bytes / HBM_bw
+    collective_s = wire_bytes / ICI_bw
+
+plus MODEL_FLOPS = 6·N·D (2·N·D for inference) and the useful-compute
+ratio MODEL_FLOPS / (chips · HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+CHIPS_SINGLE_POD = 256
+
+
+def load_artifacts(out_dir="artifacts/dryrun", variant="baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{variant}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def format_row(r):
+    name = f"{r['arch']}×{r['shape']}"
+    if r.get("skip_reason"):
+        return f"{name:44s} SKIP ({r['skip_reason'][:60]}...)"
+    if not r.get("ok") or "error" in r:
+        return f"{name:44s} FAIL ({r.get('error', '?')[:70]})"
+    if "roofline" not in r:
+        return f"{name:44s} compiled (no roofline pass)"
+    t = r["roofline"]["terms"]
+    dom = r["roofline"]["dominant"].replace("_s", "")
+    mf = r.get("model_flops_global") or 0.0
+    hlo_global = r["roofline"]["flops_per_device"] * CHIPS_SINGLE_POD
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(t.values())
+    frac = t["compute_s"] / bound if bound else 0.0
+    return (f"{name:44s} comp={t['compute_s']:9.3e} mem={t['memory_s']:9.3e} "
+            f"coll={t['collective_s']:9.3e} dom={dom:10s} "
+            f"useful={useful:5.2f} roofline_frac={frac:5.3f}")
+
+
+def bench_roofline_table():
+    rows = load_artifacts()
+    if not rows:
+        return ("roofline_table", 0.0, "no artifacts yet (run dryrun sweep)")
+    n_skip = sum(1 for r in rows if r.get("skip_reason"))
+    n_ok = sum(1 for r in rows
+               if r.get("ok") and "error" not in r and not r.get("skip_reason"))
+    print("# --- roofline table (single-pod 16x16, per-chip seconds) ---")
+    for r in rows:
+        print("# " + format_row(r))
+    return ("roofline_table", 0.0,
+            f"cells_ok={n_ok};cells_skipped={n_skip};cells_total={len(rows)}")
+
+
+ALL = [bench_roofline_table]

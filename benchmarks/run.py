@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV (stdout), one row each.
+
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name contains this")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_perf, paper_experiments, roofline_report
+    from benchmarks import straggler_bench
+
+    benches = (paper_experiments.ALL + kernel_perf.ALL + straggler_bench.ALL
+               + roofline_report.ALL)
+    print("name,us_per_call,derived")
+    failed = 0
+    for fn in benches:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            name, us, derived = fn()
+            print(f"{name},{us:.1f},{derived}", flush=True)
+            if "FAIL" in derived:
+                failed += 1
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{fn.__name__},nan,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

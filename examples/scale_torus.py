@@ -1,0 +1,49 @@
+"""Scale demo (paper Fig 18): synchronize a 22^3 = 10648-node 3-D torus,
+then scan network size to show convergence-time scaling with algebraic
+connectivity — the question the paper says simulation exists to answer
+("how long does it take for buffer occupancies to converge when there are
+many thousands of nodes").
+
+    PYTHONPATH=src python examples/scale_torus.py [--k 22]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ControllerConfig, SimConfig, make_links, simulate, torus3d
+
+
+def sync_torus(k: int, kp: float = 2e-8, duration_s: float = 30.0):
+    topo = torus3d(k)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, topo.num_nodes).astype(np.float32)
+    dt = 5e-3
+    cfg = SimConfig(dt=dt, steps=int(duration_s / dt), record_every=100,
+                    record_beta=False)
+    t0 = time.time()
+    res = simulate(topo, links, ControllerConfig(kp=kp), ppm, cfg)
+    wall = time.time() - t0
+    return topo, res, wall
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=22)
+    args = ap.parse_args()
+
+    for k in (6, 10, 14, args.k):
+        topo, res, wall = sync_torus(k)
+        band = np.ptp(res.freq_ppm[-1])
+        tconv = res.convergence_time(1.0)
+        # algebraic connectivity of a k-torus: 2 - 2cos(2*pi/k)
+        lam2 = 2 - 2 * np.cos(2 * np.pi / k)
+        print(f"k={k:3d} nodes={topo.num_nodes:6d} edges={topo.num_edges:6d} "
+              f"conv_1ppm={tconv:6.2f}s band={band:6.3f}ppm "
+              f"lambda2={lam2:.4f} wall={wall:5.1f}s")
+    print("\nconvergence time scales ~1/lambda2 — the simulator answers the "
+          "paper's scaling question without 10k FPGAs.")
+
+
+if __name__ == "__main__":
+    main()

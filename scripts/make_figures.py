@@ -1,0 +1,112 @@
+"""Render paper-style figures from the simulations into artifacts/figures/.
+
+    PYTHONPATH=src python scripts/make_figures.py
+"""
+import os
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+import numpy as np
+
+from repro.core import (ControllerConfig, SimConfig, cube, fully_connected,
+                        hourglass, make_links, simulate, torus3d)
+
+OUT = "artifacts/figures"
+os.makedirs(OUT, exist_ok=True)
+
+SLOW = ControllerConfig(kind="proportional", kp=5e-11)
+FAST_HW = ControllerConfig(kind="discrete", kp=2e-8, fs=1e-7, pulses_per_update=50)
+
+
+def ppm(seed, n=8):
+    return np.random.default_rng(seed).uniform(-8, 8, n).astype(np.float32)
+
+
+def plot_pair(res, title, fname, beta=True):
+    fig, axes = plt.subplots(1, 2 if beta else 1, figsize=(11, 3.4))
+    ax = axes[0] if beta else axes
+    ax.plot(res.times, res.freq_ppm, lw=0.8)
+    ax.set(xlabel="time [s]", ylabel="clock frequency offset [ppm]",
+           title=f"{title} — frequencies")
+    if beta:
+        axes[1].plot(res.times, res.beta[:, ::2], lw=0.5)
+        axes[1].set(xlabel="time [s]", ylabel="buffer occupancy [frames]",
+                    title=f"{title} — elastic buffers")
+    fig.tight_layout()
+    fig.savefig(f"{OUT}/{fname}.png", dpi=120)
+    plt.close(fig)
+    print("wrote", fname)
+
+
+def main():
+    cfg100 = SimConfig(dt=2e-3, steps=50_000, record_every=100)
+
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    plot_pair(simulate(topo, links, SLOW, ppm(0), cfg100),
+              "fully connected (Fig 6/7)", "fig6_7_fully_connected")
+
+    hg = hourglass(4)
+    hppm = np.array([-5.0, -4.5, -4.2, -4.8, -1.0, 4.5, 4.2, 4.8], np.float32)
+    plot_pair(simulate(hg, make_links(hg), ControllerConfig(kp=1e-9), hppm,
+                       SimConfig(dt=2e-3, steps=60_000, record_every=100)),
+              "hourglass (Fig 9/10)", "fig9_10_hourglass")
+
+    cb = cube()
+    plot_pair(simulate(cb, make_links(cb), ControllerConfig(kp=1e-9), ppm(2),
+                       cfg100), "cube (Fig 11/12)", "fig11_12_cube")
+
+    # long link: dynamics identical to FC
+    cable = np.full(topo.num_edges, 1.5)
+    for e in range(topo.num_edges):
+        if {int(topo.src[e]), int(topo.dst[e])} == {0, 2}:
+            cable[e] = 1000.0
+    plot_pair(simulate(topo, make_links(topo, cable_m=cable), SLOW, ppm(4),
+                       SimConfig(dt=2e-3, steps=30_000, record_every=100)),
+              "fully connected + 2 km fiber (Fig 13/14)", "fig13_14_long_link")
+
+    # realistic settings (Fig 15)
+    res = simulate(topo, links, FAST_HW, ppm(5),
+                   SimConfig(dt=5e-5, steps=10_000, record_every=20,
+                             quantize_beta=True))
+    plot_pair(res, "realistic settings, FINC/FDEC (Fig 15)", "fig15_realistic",
+              beta=False)
+
+    # measured vs calculated (Fig 16)
+    res = simulate(topo, links, FAST_HW, ppm(6),
+                   SimConfig(dt=5e-5, steps=8_000, record_every=20,
+                             quantize_beta=True, telemetry_noise_ppm=0.05,
+                             seed=6))
+    clean = simulate(topo, links, FAST_HW, ppm(6),
+                     SimConfig(dt=5e-5, steps=8_000, record_every=20,
+                               quantize_beta=True))
+    fig, ax = plt.subplots(figsize=(6, 3.4))
+    ax.plot(res.times, res.freq_ppm[:, 0], "k", lw=0.6, label="measured (noisy)")
+    ax.plot(clean.times, clean.freq_ppm[:, 0], "r", lw=1.2,
+            label="calculated (accumulated FINC/FDEC)")
+    ax.set(xlabel="time [s]", ylabel="freq offset [ppm]",
+           title="measured vs calculated (Fig 16)")
+    ax.legend()
+    fig.tight_layout(); fig.savefig(f"{OUT}/fig16_measured_vs_calculated.png",
+                                    dpi=120); plt.close(fig)
+    print("wrote fig16")
+
+    # 22^3 torus (Fig 18)
+    t22 = torus3d(22)
+    res = simulate(t22, make_links(t22), ControllerConfig(kp=2e-8),
+                   np.random.default_rng(8).uniform(-8, 8, t22.num_nodes
+                                                    ).astype(np.float32),
+                   SimConfig(dt=5e-3, steps=6_000, record_every=20,
+                             record_beta=False))
+    fig, ax = plt.subplots(figsize=(6, 3.4))
+    ax.plot(res.times, res.freq_ppm[:, ::97], lw=0.4)
+    ax.set(xlabel="time [s]", ylabel="freq offset [ppm]",
+           title="3-D torus, $22^3$ = 10648 nodes (Fig 18)")
+    fig.tight_layout(); fig.savefig(f"{OUT}/fig18_torus.png", dpi=120)
+    plt.close(fig)
+    print("wrote fig18")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Summarize the sharding-regime sweep: best profile per train cell."""
+import glob
+import json
+
+rows = {}
+for f in glob.glob("artifacts/dryrun/*__train_4k__*.json"):
+    d = json.load(open(f))
+    if not d.get("ok") or "roofline" not in d:
+        continue
+    t = d["roofline"]["terms"]
+    rows.setdefault(d["arch"], {})[d["variant"]] = max(t.values())
+
+print("| arch (train_4k) | baseline bound s | best variant | best bound s | × |")
+print("|---|---|---|---|---|")
+for arch in sorted(rows):
+    v = rows[arch]
+    if "baseline" not in v:
+        continue
+    base = v["baseline"]
+    best_name, best = min(((k, x) for k, x in v.items()), key=lambda kv: kv[1])
+    print(f"| {arch} | {base:.3f} | `{best_name}` | {best:.3f} | "
+          f"{base / best:.1f}× |")

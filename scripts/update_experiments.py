@@ -1,0 +1,40 @@
+"""Splice the generated dry-run/roofline/variant tables into EXPERIMENTS.md."""
+import re
+import subprocess
+import sys
+
+out = subprocess.run(
+    [sys.executable, "-m", "repro.launch.roofline"],
+    capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    cwd=".").stdout
+
+sections = {}
+cur = None
+for line in out.splitlines():
+    if line.startswith("### §Dry-run"):
+        cur = "dryrun"; sections[cur] = []
+    elif line.startswith("### §Roofline"):
+        cur = "roofline"; sections[cur] = []
+    elif line.startswith("### §Perf variants"):
+        cur = "variants"; sections[cur] = []
+    elif cur and (line.startswith("|") or not line.strip()):
+        sections[cur].append(line)
+
+doc = open("EXPERIMENTS.md").read()
+
+
+def splice(doc, marker, body):
+    block = marker + "\n" + "\n".join(body).strip() + "\n"
+    pat = re.compile(re.escape(marker) +
+                     r"(?:\n(?:###[^\n]*\n?|\|[^\n]*\n?|\n)*)?")
+    return pat.sub(block, doc, count=1)
+
+
+doc = splice(doc, "<!-- DRYRUN_TABLE -->", sections.get("dryrun", []))
+doc = splice(doc, "<!-- ROOFLINE_TABLE -->", sections.get("roofline", []))
+doc = splice(doc, "<!-- PERF_VARIANTS_TABLE -->",
+             ["### §Perf variant artifacts (all compiled variants)", ""] +
+             sections.get("variants", []))
+open("EXPERIMENTS.md", "w").write(doc)
+print("EXPERIMENTS.md updated",
+      {k: len(v) for k, v in sections.items()})

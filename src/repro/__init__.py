@@ -1,0 +1,2 @@
+"""repro: bittide (logical synchrony) reproduction + multi-pod JAX LM framework."""
+__version__ = "0.1.0"

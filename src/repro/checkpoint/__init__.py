@@ -1,0 +1,1 @@
+from .manager import CheckpointManager, save, restore, latest_step

@@ -1,0 +1,28 @@
+"""bittide core: decentralized clock control and logical synchrony in JAX.
+
+The paper's primary contribution — the bittide mechanism (buffer-occupancy
+feedback control of local oscillators ⇒ syntony ⇒ constant logical
+latencies ⇒ ahead-of-time schedulable distributed computation) — lives here
+as a composable, vectorized JAX library:
+
+  topology     network graphs (all paper experiments + generic families)
+  frame_model  the abstract frame model (paper §6), lax.scan simulation
+  controller   proportional / hardware-discretized FINC-FDEC / PI control
+  ddc          bit-faithful domain difference counters (paper §4.2)
+  reframing    elastic-buffer recentering (paper §4.2, ref [15])
+  latency      logical latency / RTT extraction (Tables 1, 2)
+  frame_level  frame-accurate discrete-event oracle (validation)
+  schedule     AOT collective/pipeline timetables on a logical synchrony net
+  network      BittideNetwork facade: sync() -> LogicalSynchronyNetwork
+"""
+from . import topology, frame_model, controller, ddc, reframing, latency
+from . import frame_level, schedule, network
+
+from .topology import (Topology, fully_connected, hourglass, cube, ring, line,
+                       star, torus3d, mesh2d, random_regular, from_links)
+from .controller import ControllerConfig, hardware_gain
+from .frame_model import (LinkParams, SimConfig, SimResult, simulate,
+                          make_links, OMEGA_NOM)
+from .network import BittideNetwork, OscillatorSpec, SyncOutcome
+from .schedule import (LogicalSynchronyNetwork, ring_allreduce_schedule,
+                       pipeline_schedule, verify_bounded)

@@ -1,0 +1,213 @@
+"""The abstract frame model (paper §6), vectorized in JAX.
+
+The paper's model:
+
+    dθ_i/dt   = ω_i(t)
+    β_{j→i}(t) = ⌊θ_j(t − l_{j→i})⌋ − ⌊θ_i(t)⌋ + λ_{j→i}
+    ω updated piecewise-constantly at each controller period from eq. (1).
+
+Absolute phases reach ~1.25e10 ticks within a 100 s experiment, far beyond
+float32.  We therefore integrate *relative* coordinates, which is exact under
+the model's piecewise-constant-ω semantics:
+
+    ψ_i = θ_i − ω_nom·t            (|ψ| ≲ 1e6 ticks)
+    ν_i = ω_i/ω_nom − 1            (|ν| ≲ 1e-4)
+
+    β_{j→i} = ψ_j − ν_j·ω_nom·l_{j→i} − ψ_i + λeff_{j→i}
+    λeff    = λ − ω_nom·l          (constant; fixed by initial occupancy)
+
+The hardware's floor quantization is an O(1)-frame effect; ``quantize_beta``
+rounds β to integers to model it (the analysis model in [10] omits floors).
+
+The simulation advances at a fixed control period ``dt``; between control
+events frequencies are constant, so phase integration is exact — this is the
+same event semantics as the Callisto simulator, restricted to synchronous
+sampling (the paper notes behavior is insensitive to sampling jitter and to
+the actuation delay d).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .controller import ControllerConfig, controller_init, controller_step
+from .topology import Topology
+
+__all__ = ["LinkParams", "SimConfig", "SimResult", "simulate", "make_links", "OMEGA_NOM"]
+
+OMEGA_NOM = 125e6  # frames/s — the paper's 125 MHz node clock.
+
+# Calibrated physical constants (paper §5.6): group velocity in fiber such
+# that a 2 km spool (~1 km per direction) adds ~1231 frames of round-trip
+# logical latency, and 16 frames of transceiver pipeline per direction.
+SIGNAL_VELOCITY = 2.03e8   # m/s
+PIPE_FRAMES = 16.0         # serdes/transceiver pipeline, frames per direction
+EB_INIT = 18.0             # elastic buffer init: 32-deep, half-full + 2 (§5.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkParams:
+    """Per-directed-edge physical link parameters.
+
+    latency_s: one-way physical latency (cable + transceiver pipeline).
+    beta0: initial elastic-buffer occupancy in frames (normalized; the DDC
+      phase uses 0 = half-full).
+    """
+
+    latency_s: np.ndarray
+    beta0: np.ndarray
+
+    @property
+    def num_edges(self) -> int:
+        return int(np.asarray(self.latency_s).shape[0])
+
+
+def make_links(
+    topo: Topology,
+    cable_m: float | np.ndarray = 2.0,
+    beta0: float | np.ndarray = 0.0,
+    omega_nom: float = OMEGA_NOM,
+    pipe_frames: float = PIPE_FRAMES,
+    velocity: float = SIGNAL_VELOCITY,
+) -> LinkParams:
+    """Build LinkParams from cable lengths in meters (per directed edge)."""
+    cable = np.broadcast_to(np.asarray(cable_m, np.float64), (topo.num_edges,))
+    lat = cable / velocity + pipe_frames / omega_nom
+    b0 = np.broadcast_to(np.asarray(beta0, np.float64), (topo.num_edges,))
+    return LinkParams(latency_s=lat.astype(np.float64), beta0=b0.astype(np.float64))
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    omega_nom: float = OMEGA_NOM
+    dt: float = 1e-3            # control period, seconds
+    steps: int = 50_000
+    record_every: int = 10      # telemetry decimation (keeps big sims small)
+    quantize_beta: bool = False # model the hardware's integer occupancy reads
+    record_beta: bool = True
+    telemetry_noise_ppm: float = 0.0  # observation noise on *recorded* freq (Fig 16)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Telemetry + final state of a bittide simulation.
+
+    freq_ppm: (T, N) recorded clock frequency offsets from nominal, ppm.
+    beta: (T, E) recorded occupancies (empty if record_beta=False).
+    times: (T,) physical time of each record, seconds.
+    psi/nu/c_state: final simulator state (for chaining, e.g. reframing).
+    """
+
+    freq_ppm: np.ndarray
+    beta: np.ndarray
+    times: np.ndarray
+    psi: np.ndarray
+    nu: np.ndarray
+    c_state: dict
+    topo: Topology
+    links: LinkParams
+    cfg: SimConfig
+
+    @property
+    def final_freq_ppm(self) -> np.ndarray:
+        return self.freq_ppm[-1]
+
+    def convergence_time(self, band_ppm: float = 1.0) -> float:
+        """First recorded time after which all nodes stay within band_ppm."""
+        spread = self.freq_ppm.max(axis=1) - self.freq_ppm.min(axis=1)
+        ok = spread <= band_ppm
+        # last time it was violated
+        bad = np.nonzero(~ok)[0]
+        if len(bad) == 0:
+            return float(self.times[0])
+        if bad[-1] == len(ok) - 1:
+            return float("inf")
+        return float(self.times[bad[-1] + 1])
+
+
+@partial(jax.jit, static_argnames=("ctrl", "cfg", "num_nodes", "inner", "outer"))
+def _run(src, dst, lat_frames, lam_eff, nu_u, ctrl: ControllerConfig, cfg: SimConfig,
+         num_nodes: int, inner: int, outer: int, noise_key):
+    """Scan outer telemetry records; fori_loop `inner` control periods each."""
+
+    beta_off = jnp.float32(ctrl.beta_off)
+    dt_frames = jnp.float32(cfg.omega_nom * cfg.dt)
+
+    def control_period(carry):
+        psi, nu, c_state = carry
+        # Occupancies from current state (ν is piecewise-constant over the
+        # period, so the delayed-phase term uses the sender's current ν).
+        beta = psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
+        if cfg.quantize_beta:
+            beta = jnp.round(beta)
+        err = jax.ops.segment_sum(beta - beta_off, dst, num_segments=num_nodes)
+        c_state, c_corr = controller_step(ctrl, c_state, err)
+        # (1+ν_u)(1+c) − 1 without forming 1 + O(1e-6) (f32 cancellation)
+        nu_next = nu_u + c_corr + nu_u * c_corr
+        psi_next = psi + nu_next * dt_frames
+        return (psi_next, nu_next, c_state), beta
+
+    def outer_step(carry, _):
+        carry = jax.lax.fori_loop(
+            0, inner, lambda _, c: control_period(c)[0], carry)
+        # Read out β consistently with the post-update state.
+        (psi, nu, c_state) = carry
+        beta = psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
+        rec = (nu * 1e6, beta if cfg.record_beta else jnp.zeros((0,), jnp.float32))
+        return carry, rec
+
+    psi0 = jnp.zeros((num_nodes,), jnp.float32)
+    c0 = controller_init(ctrl, num_nodes)
+    nu0 = nu_u  # before any correction, clocks run at their unadjusted rate
+    carry, (freq, beta) = jax.lax.scan(outer_step, (psi0, nu0, c0), None, length=outer)
+    if cfg.telemetry_noise_ppm > 0:
+        freq = freq + cfg.telemetry_noise_ppm * jax.random.normal(noise_key, freq.shape)
+    return carry, freq, beta
+
+
+def simulate(
+    topo: Topology,
+    links: LinkParams,
+    ctrl: ControllerConfig,
+    ppm_u: np.ndarray,
+    cfg: SimConfig = SimConfig(),
+) -> SimResult:
+    """Run the abstract frame model.
+
+    Args:
+      topo: network topology.
+      links: per-edge physical parameters.
+      ctrl: controller configuration.
+      ppm_u: (N,) unadjusted oscillator offsets in ppm (paper: ±8 ppm initial
+        accuracy, ±98 ppm worst-case envelope).
+      cfg: simulation configuration.
+    """
+    ppm_u = np.asarray(ppm_u, np.float32)
+    if ppm_u.shape != (topo.num_nodes,):
+        raise ValueError(f"ppm_u must be ({topo.num_nodes},), got {ppm_u.shape}")
+    inner = cfg.record_every
+    outer = cfg.steps // inner
+    if outer < 1:
+        raise ValueError("steps must be >= record_every")
+
+    lat_frames = jnp.asarray(links.latency_s * cfg.omega_nom, jnp.float32)
+    lam_eff = jnp.asarray(links.beta0, jnp.float32)  # β(0) with ψ(0)=0
+    nu_u = jnp.asarray(ppm_u * 1e-6, jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    (psi, nu, c_state), freq, beta = _run(
+        jnp.asarray(topo.src), jnp.asarray(topo.dst), lat_frames, lam_eff,
+        nu_u, ctrl, cfg, topo.num_nodes, inner, outer, key)
+
+    times = (np.arange(1, outer + 1) * inner) * cfg.dt
+    return SimResult(
+        freq_ppm=np.asarray(freq), beta=np.asarray(beta), times=times,
+        psi=np.asarray(psi), nu=np.asarray(nu),
+        c_state={k: np.asarray(v) for k, v in c_state.items()},
+        topo=topo, links=links, cfg=cfg)

@@ -1,0 +1,68 @@
+"""Deterministic, stateless synthetic LM data pipeline.
+
+Batches are a pure function of (seed, step): resume-after-restart needs no
+data-state checkpoint beyond the step counter, and every data shard can be
+generated independently on its host (what a 1000-node deployment needs —
+no central data server in the loop).
+
+The stream is a noisy affine Markov chain over the vocabulary, so models
+can actually learn it (the end-to-end example's loss goes well below ln V):
+
+    t_{i+1} = (a * t_i + b) mod V     with prob (1 - noise)
+              uniform(V)              otherwise
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticPipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.2
+    mult: int = 17
+    offset: int = 31
+
+
+class SyntheticPipeline:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._gen = jax.jit(self._make_batch, static_argnums=())
+
+    def _make_batch(self, step):
+        c = self.cfg
+        key = jax.random.fold_in(self._key, step)
+        k0, k1, k2 = jax.random.split(key, 3)
+        first = jax.random.randint(k0, (c.global_batch, 1), 0, c.vocab_size)
+
+        def body(tok, ks):
+            kn, ku = ks
+            nxt = (tok * c.mult + c.offset) % c.vocab_size
+            rand = jax.random.randint(ku, tok.shape, 0, c.vocab_size)
+            take_rand = jax.random.bernoulli(kn, c.noise, tok.shape)
+            nxt = jnp.where(take_rand, rand, nxt)
+            return nxt, nxt
+
+        kns = jax.random.split(k1, c.seq_len)
+        kus = jax.random.split(k2, c.seq_len)
+        _, rest = jax.lax.scan(body, first[:, 0], (kns, kus))
+        seq = jnp.concatenate([first, rest.T], axis=1)  # (B, S+1)
+        return {"tokens": seq[:, :-1].astype(jnp.int32),
+                "labels": seq[:, 1:].astype(jnp.int32)}
+
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        return self._gen(jnp.asarray(step, jnp.int32))
+
+    def batch_numpy(self, step: int) -> Dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in self.batch(step).items()}

@@ -1,0 +1,2 @@
+from .elastic import HealthTracker, plan_mesh, remesh
+from .straggler import StragglerReport, simulate_stragglers

@@ -1,0 +1,67 @@
+"""Elastic scaling: remesh around failed hosts and resume from checkpoint.
+
+Policy: the model axis (TP degree) is fixed by the architecture's sharding;
+failures shrink the *data* axis.  Given the surviving device list we build
+the largest (pod, data, model) mesh that fits, restore the latest
+checkpoint with the new NamedShardings (checkpoint.manager handles
+cross-mesh placement), and continue at the recorded step.  The data
+pipeline is stateless-by-step so no data state is lost.
+
+Failure *detection* on real fleets comes from the runtime (missed
+heartbeats); here `HealthTracker` provides the same interface for tests
+and simulations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import make_mesh_from_devices
+
+__all__ = ["HealthTracker", "plan_mesh", "remesh"]
+
+
+@dataclasses.dataclass
+class HealthTracker:
+    """Heartbeat bookkeeping (simulated clock for tests)."""
+
+    num_hosts: int
+    timeout_s: float = 10.0
+
+    def __post_init__(self):
+        self.last_seen = {h: 0.0 for h in range(self.num_hosts)}
+        self.now = 0.0
+
+    def heartbeat(self, host: int, t: Optional[float] = None):
+        self.now = t if t is not None else self.now
+        self.last_seen[host] = self.now
+
+    def advance(self, dt: float):
+        self.now += dt
+
+    def failed_hosts(self) -> List[int]:
+        return [h for h, t in self.last_seen.items()
+                if self.now - t > self.timeout_s]
+
+    def alive_hosts(self) -> List[int]:
+        failed = set(self.failed_hosts())
+        return [h for h in range(self.num_hosts) if h not in failed]
+
+
+def plan_mesh(num_devices: int, model_size: int) -> Tuple[int, int]:
+    """Largest (data, model) grid with the model axis kept intact."""
+    if num_devices < model_size:
+        raise ValueError(
+            f"cannot keep model axis of {model_size} with {num_devices} devices")
+    data = num_devices // model_size
+    return data, model_size
+
+
+def remesh(devices: Sequence, model_size: int):
+    """Build the largest (data, model) mesh from surviving devices."""
+    data, model = plan_mesh(len(devices), model_size)
+    used = list(devices)[: data * model]
+    return make_mesh_from_devices(used, (data, model), ("data", "model"))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the bittide simulation hot-spot.
+
+bittide_step  pl.pallas_call fused control-period step (BlockSpec VMEM tiling)
+ops           jit wrappers + topology densification + scan-based runner
+ref           pure-jnp oracle the kernel is validated against
+"""
+from .bittide_step import bittide_step_pallas, TILE
+from .ops import bittide_step, densify, simulate_dense
+from .ref import bittide_dense_step_ref, occupancy_ref

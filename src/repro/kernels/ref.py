@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused bittide simulation step.
+
+Dense-adjacency formulation of one control period of the abstract frame
+model (see `repro.core.frame_model` for the derivation of the relative-
+coordinate form):
+
+    β[c,i,j]  = A[c,i,j] · (ψ_j − ν_j·lat_c − ψ_i + λeff[c,i,j])
+    err_i     = Σ_{c,j} (β[c,i,j] − A[c,i,j]·β_off)
+    ν'_i      = (1 + ν_u_i)(1 + kp·err_i) − 1
+    ψ'_i      = ψ_i + ν'_i · Δt_frames
+
+A is a (C, N, N) stack of 0/1 adjacency masks, one per physical-latency
+class (the paper's networks have very few distinct latencies: short copper,
+short fiber, one long fiber).  This oracle materializes the full (C, N, N)
+occupancy tensor; the Pallas kernel computes the same values tile-by-tile
+in VMEM without ever materializing β.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bittide_dense_step_ref", "occupancy_ref"]
+
+
+def occupancy_ref(psi, nu, a, lam_eff, lat_frames):
+    """(C, N, N) occupancy tensor β (zero where no edge)."""
+    x = psi[None, None, :] - nu[None, None, :] * lat_frames[:, None, None]
+    beta = a * (x - psi[None, :, None] + lam_eff)
+    return beta
+
+
+def bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
+                           kp, beta_off, dt_frames):
+    """One fused control period. Returns (psi', nu', err)."""
+    beta = occupancy_ref(psi, nu, a, lam_eff, lat_frames)
+    err = (beta - a * beta_off).sum(axis=(0, 2))
+    # cancellation-free form of (1+ν_u)(1+c) − 1 (see kernel docstring)
+    c_rel = kp * err
+    nu_next = nu_u + c_rel + nu_u * c_rel
+    psi_next = psi + nu_next * dt_frames
+    return psi_next, nu_next, err

@@ -1,0 +1,2 @@
+"""Launcher: production mesh, distributed step builders, dry-run driver."""
+from .mesh import make_production_mesh, make_mesh_from_devices, dp_axes_of

@@ -1,0 +1,98 @@
+"""Parse collective ops + wire bytes out of compiled HLO text.
+
+`cost_analysis()` does not expose collective bytes, so the roofline's
+collective term is derived from the post-SPMD HLO: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+instruction contributes ring-model wire bytes:
+
+    all-reduce          2 (n-1)/n * bytes(result)
+    all-gather            (n-1)/n * bytes(result)
+    reduce-scatter        (n-1)   * bytes(result)   (input = n * result)
+    all-to-all            (n-1)/n * bytes(result)
+    collective-permute              bytes(result)
+
+where n is the replica-group size parsed from `replica_groups` (both the
+explicit {{...}} and the iota [g,n]<=[...] forms are handled).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_stats", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if kind == "collective-permute":
+        return 1.0  # point-to-point: full payload regardless of groups
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    return (n - 1) / n  # all-to-all
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> Dict[str, Dict]:
+    """Returns {kind: {count, result_bytes, wire_bytes}} + a 'total'."""
+    out: Dict[str, Dict] = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+                            for k in _COLL}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result type precedes '= kind(' ; skip -done ops (counted at -start)
+        m = re.match(r"%?[\w.\-]+ = ([^=]+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", stripped)
+        if not m:
+            continue
+        type_str, kind, _ = m.group(1), m.group(2), m.group(3)
+        rb = _shape_bytes(type_str)
+        n = _group_size(stripped, default_group)
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += rb
+        out[kind]["wire_bytes"] += rb * _wire_factor(kind, n)
+    out["total"] = {
+        "count": sum(v["count"] for v in out.values()),
+        "result_bytes": sum(v["result_bytes"] for v in out.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in out.values()),
+    }
+    return out

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device query, and smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh_from_devices", "dp_axes_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_devices(devices, shape: Tuple[int, ...],
+                           axes: Tuple[str, ...]):
+    """Build a mesh from an explicit device list — the elastic-rescale path
+    (ft.elastic) uses this to re-mesh the survivors after a host failure."""
+    arr = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    """The batch ('data-parallel') axes of a mesh: every axis except model."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,163 @@
+"""Distributed train/serve step construction + abstract (dry-run) inputs.
+
+Everything here is mesh-parameterized and allocation-free until a real
+array is passed: `abstract_*` builders produce ShapeDtypeStructs with
+NamedShardings, which `.lower()` accepts directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import ModelZoo
+from repro.models.layers import ParamDef, abstract, materialize, pspec_tree, dtype_of
+from repro.models.model_zoo import InputDef
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["use_fsdp", "TrainState", "make_train_step", "make_prefill_step",
+           "make_decode_step", "abstract_train_args", "abstract_serve_args",
+           "init_train_state", "lr_schedule"]
+
+FSDP_PARAM_THRESHOLD = 2_000_000_000  # shard weights over data above 2B params
+
+
+def use_fsdp(cfg: ArchConfig) -> bool:
+    return cfg.param_count() >= FSDP_PARAM_THRESHOLD
+
+
+def lr_schedule(step, base_lr=3e-4, warmup=200, total=10_000):
+    warm = jnp.minimum(1.0, (step + 1) / warmup)
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+# ------------------------------------------------------------------- steps
+
+def make_train_step(cfg: ArchConfig, opt: Optional[AdamWConfig] = None):
+    zoo = ModelZoo(cfg)
+    opt = opt or AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(zoo.train_loss)(params, batch)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, opt, lr_scale=lr_schedule(step) / opt.lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    zoo = ModelZoo(cfg)
+
+    def prefill_step(params, batch):
+        return zoo.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    zoo = ModelZoo(cfg)
+
+    def decode_step(params, caches, batch):
+        return zoo.decode(params, caches, batch)
+
+    return decode_step
+
+
+# ------------------------------------------------- abstract argument trees
+
+def _profile(cfg: ArchConfig, dp_axes: Tuple[str, ...]):
+    """(dp_axes, use_tp, fsdp_axes) for the arch's sharding profile.
+
+    'tp'    — baseline: TP over model (+ FSDP over data for big archs).
+    'dp'    — replicate weights; model axis becomes extra batch (small archs).
+    'zero3' — no TP; weights/opt fully sharded over (data, model); batch over
+              every axis (tests the FSDP-vs-TP collective tradeoff, §Perf).
+    """
+    if cfg.sharding_profile == "dp":
+        return tuple(dp_axes) + ("model",), False, ()
+    if cfg.sharding_profile == "zero3":
+        return tuple(dp_axes) + ("model",), False, ("data", "model")
+    return tuple(dp_axes), True, None
+
+
+def _input_abstract(inp_defs: Dict[str, InputDef], mesh, dp_axes):
+    from repro.models.layers import fit_spec_to_shape, resolve_spec
+
+    def mk(d: InputDef):
+        spec = resolve_spec(d.spec, use_fsdp=False, dp_axes=dp_axes)
+        spec = fit_spec_to_shape(d.shape, spec, mesh)
+        return jax.ShapeDtypeStruct(d.shape, d.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return {k: mk(v) for k, v in inp_defs.items()}
+
+
+def abstract_train_args(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                        dp_axes: Tuple[str, ...]):
+    """(params, opt_state, batch, step) as ShapeDtypeStructs."""
+    zoo = ModelZoo(cfg)
+    fsdp = use_fsdp(cfg)
+    dp_axes, use_tp, fsdp_axes = _profile(cfg, dp_axes)
+    pdt = dtype_of(cfg.param_dtype)
+    params = abstract(zoo.param_defs(), pdt, mesh, use_fsdp=fsdp,
+                      dp_axes=dp_axes, use_tp=use_tp, fsdp_axes=fsdp_axes)
+    mdt = dtype_of(cfg.opt_moment_dtype)
+    mom = lambda: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, mdt, sharding=s.sharding), params)
+    opt_state = {"mu": mom(), "nu": mom(),
+                 "count": jax.ShapeDtypeStruct((), jnp.int32,
+                                               sharding=NamedSharding(mesh, P()))}
+    batch = _input_abstract(zoo.input_defs(shape), mesh, dp_axes)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return params, opt_state, batch, step
+
+
+def abstract_serve_args(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                        dp_axes: Tuple[str, ...]):
+    """(params, caches, batch) for decode; (params, batch) for prefill."""
+    zoo = ModelZoo(cfg)
+    fsdp = use_fsdp(cfg)
+    dp_axes, use_tp, fsdp_axes = _profile(cfg, dp_axes)
+    pdt = dtype_of(cfg.param_dtype)
+    params = abstract(zoo.param_defs(), pdt, mesh, use_fsdp=fsdp,
+                      dp_axes=dp_axes, use_tp=use_tp, fsdp_axes=fsdp_axes)
+    batch = _input_abstract(zoo.input_defs(shape), mesh, dp_axes)
+    if shape.kind == "prefill":
+        return params, batch
+    kv_dt = {"bfloat16": jnp.bfloat16,
+             "float8_e4m3fn": jnp.float8_e4m3fn}[cfg.kv_cache_dtype]
+    cdefs = zoo.cache_defs(shape)
+    # Reduced-precision cache applies to attention K/V streams only; SSM
+    # states are recurrent accumulators and stay bf16.
+    caches = {
+        k: abstract(v, kv_dt if k in ("kv", "shared_kv", "cross_kv")
+                    else jnp.bfloat16, mesh, use_fsdp=False,
+                    dp_axes=dp_axes, use_tp=use_tp)
+        for k, v in cdefs.items()}
+    return params, caches, batch
+
+
+# ------------------------------------------------- concrete initialization
+
+def init_train_state(cfg: ArchConfig, mesh: Optional[Mesh], key,
+                     opt: Optional[AdamWConfig] = None,
+                     dp_axes: Tuple[str, ...] = ("data",)):
+    """Real params + optimizer state (small configs / examples / tests)."""
+    zoo = ModelZoo(cfg)
+    opt = opt or AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+    pdt = dtype_of(cfg.param_dtype)
+    params = materialize(zoo.param_defs(), key, pdt)
+    if mesh is not None:
+        specs = pspec_tree(zoo.param_defs(), use_fsdp=use_fsdp(cfg),
+                           dp_axes=dp_axes)
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)
+    opt_state = adamw_init(params, opt)
+    return params, opt_state

@@ -1,0 +1,3 @@
+"""Composable model definitions for the assigned architectures."""
+from .model_zoo import ModelZoo, InputDef
+from .layers import ParamDef, materialize, abstract, pspec_tree

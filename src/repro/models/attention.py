@@ -1,0 +1,107 @@
+"""GQA attention: full, query-chunked (memory-bounded), and decode paths.
+
+Query-chunked attention (`chunked_attention`) bounds peak memory to
+O(chunk * S) per device instead of O(S^2): the query axis is scanned in
+blocks, each block computing a masked softmax against the full K/V.  For
+causal masks this does ~2x the minimal FLOPs (the masked upper triangle is
+still computed) — a deliberate baseline simplicity/perf trade recorded in
+EXPERIMENTS.md §Perf and attacked in the hillclimb.
+
+All shapes are (batch, seq, heads, head_dim); GQA is computed by reshaping
+queries into (kv_head, group) without materializing repeated K/V.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention", "chunked_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,H,D), k: (B,Sk,Kh,D) -> scores (B, Kh, G, Sq, Sk)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(d).astype(np.float32)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Kh,G,Sq,Sk), v: (B,Sk,Kh,D) -> (B,Sq,H,D)."""
+    b, kh, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, kh * g, -1)
+
+
+def attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Unchunked reference attention (small sequences / smoke tests)."""
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    if causal:
+        sq, sk = scores.shape[-2], scores.shape[-1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0,
+                      causal_unroll: bool = False, static_unroll: bool = False):
+    """Query-chunked attention; memory O(chunk * Sk) per device.
+
+    causal_unroll (perf knob, §Perf): python-unroll the chunk loop and slice
+    K/V to the causal prefix per chunk — skips the fully-masked blocks the
+    scan path still multiplies (~2x attention FLOPs on causal shapes), at
+    the cost of nq distinct matmul shapes in the compiled module.
+    """
+    b, sq, h, d = q.shape
+    if sq <= chunk:
+        return attention(q, k, v, causal=causal, q_offset=q_offset)
+    if sq % chunk:
+        raise ValueError(f"seq {sq} not divisible by chunk {chunk}")
+    nq = sq // chunk
+
+    if causal and causal_unroll and q_offset == 0 and k.shape[1] == sq:
+        outs = []
+        for i in range(nq):
+            qi = q[:, i * chunk:(i + 1) * chunk]
+            hi = (i + 1) * chunk
+            outs.append(attention(qi, k[:, :hi], v[:, :hi], causal=True,
+                                  q_offset=i * chunk))
+        return jnp.concatenate(outs, axis=1)
+
+    qc = q.reshape(b, nq, chunk, h, d).transpose(1, 0, 2, 3, 4)  # (nq,B,c,H,D)
+    kpos = jnp.arange(k.shape[1])
+
+    def body(_, args):
+        i, qi = args
+        scores = _gqa_scores(qi, k).astype(jnp.float32)
+        if causal:
+            qpos = i * chunk + jnp.arange(chunk) + q_offset
+            mask = qpos[:, None] >= kpos[None, :]
+            scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return None, _gqa_out(probs, v)
+
+    if static_unroll:  # roofline compiles: count every chunk's FLOPs
+        outs = [body(None, (jnp.asarray(i), qc[i]))[1] for i in range(nq)]
+        out = jnp.stack(outs)
+    else:
+        _, out = jax.lax.scan(body, None, (jnp.arange(nq), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len: Optional[int] = None):
+    """Single-token decode: q (B,1,H,D) against a (B,S,Kh,D) cache."""
+    scores = _gqa_scores(q, k_cache).astype(jnp.float32)  # (B,Kh,G,1,S)
+    if valid_len is not None:
+        mask = jnp.arange(k_cache.shape[1]) < valid_len
+        scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v_cache)

@@ -1,0 +1,177 @@
+"""Parameter descriptors + elementary layers.
+
+Every weight is declared once as a `ParamDef` (shape, logical sharding tags,
+init); the same tree serves three purposes:
+  * `materialize`  -> real initialized params (smoke tests, examples),
+  * `abstract`     -> ShapeDtypeStructs with NamedShardings (dry-run: no
+                      allocation ever happens for the full-size configs),
+  * `pspec_tree`   -> PartitionSpecs for jit in_shardings.
+
+Sharding tags are *logical*: 'model' (tensor-parallel axis), 'fsdp'
+(weights/optimizer sharded over the data axis for big archs — ZeRO-3 style),
+'dp' (batch). `resolve` maps tags to mesh axes; tags keep param definitions
+mesh-agnostic so the same model code runs single-pod (16x16) and multi-pod
+(2x16x16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ParamDef", "materialize", "abstract", "pspec_tree", "resolve_spec",
+           "rmsnorm", "layernorm", "swiglu", "gelu_mlp", "rope", "dtype_of"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]   # logical tags per dim
+    init: str = "normal"              # normal | zeros | ones
+    std: float = 0.02
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.spec):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.spec}")
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def resolve_spec(tags: Sequence[Optional[str]], *, use_fsdp: bool,
+                 dp_axes: Tuple[str, ...], use_tp: bool = True,
+                 fsdp_axes: Optional[Tuple[str, ...]] = None) -> P:
+    if fsdp_axes is None:
+        fsdp_axes = ("data",) if use_fsdp else ()
+    axes = []
+    for t in tags:
+        if t is None:
+            axes.append(None)
+        elif t == "model":
+            axes.append("model" if use_tp else None)
+        elif t == "fsdp":
+            if len(fsdp_axes) == 0:
+                axes.append(None)
+            elif len(fsdp_axes) == 1:
+                axes.append(fsdp_axes[0])
+            else:
+                axes.append(tuple(fsdp_axes))
+        elif t == "dp":
+            axes.append(dp_axes)
+        else:
+            raise ValueError(f"unknown sharding tag {t!r}")
+    return P(*axes)
+
+
+def fit_spec_to_shape(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding axes that do not evenly divide a dimension.
+
+    jax requires explicit in_shardings to divide evenly; small dims (e.g.
+    global_batch=1 in long_500k) therefore fall back to replication on the
+    offending axes.  Axis tuples are trimmed from the right so ('pod',
+    'data') degrades to ('pod',) before giving up entirely."""
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        while axes:
+            prod = int(np.prod([sizes[a] for a in axes]))
+            if dim % prod == 0:
+                break
+            axes = axes[:-1]
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def materialize(defs, key, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * d.std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(defs, dtype, mesh: Optional[Mesh] = None, *, use_fsdp: bool = False,
+             dp_axes: Tuple[str, ...] = ("data",), use_tp: bool = True,
+             fsdp_axes: Optional[Tuple[str, ...]] = None) -> Any:
+    def mk(d: ParamDef):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(d.shape, dtype)
+        spec = resolve_spec(d.spec, use_fsdp=use_fsdp, dp_axes=dp_axes,
+                            use_tp=use_tp, fsdp_axes=fsdp_axes)
+        spec = fit_spec_to_shape(d.shape, spec, mesh)
+        return jax.ShapeDtypeStruct(d.shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, defs, is_leaf=_is_def)
+
+
+def pspec_tree(defs, *, use_fsdp: bool = False,
+               dp_axes: Tuple[str, ...] = ("data",), use_tp: bool = True) -> Any:
+    return jax.tree.map(
+        lambda d: resolve_spec(d.spec, use_fsdp=use_fsdp, dp_axes=dp_axes,
+                               use_tp=use_tp),
+        defs, is_leaf=_is_def)
+
+
+def stack_defs(defs, n: int) -> Any:
+    """Prepend a layer dimension for scan-over-layers stacking."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.spec, d.init, d.std),
+        defs, is_leaf=_is_def)
+
+
+# ---------------- elementary ops (activations in bf16, norms in f32) -------
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

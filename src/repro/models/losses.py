@@ -1,0 +1,50 @@
+"""Sequence-chunked cross-entropy.
+
+Materializing (B, S, V) logits for V up to 256k is the single biggest
+activation in LM training; chunking the sequence axis through a scan keeps
+the live logits at (B, loss_chunk, V) — with the head weight V-sharded over
+the model axis, each chunk's softmax reduces locally then all-reduces the
+(B, chunk) max/sum scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_xent"]
+
+
+def chunked_xent(hidden, head_w, labels, chunk: int, valid_vocab: int = 0,
+                 static_unroll: bool = False):
+    """hidden: (B,S,d) bf16; head_w: (d,V); labels: (B,S) int32 -> scalar.
+
+    `valid_vocab`: logical vocab size; padded classes (sharding alignment)
+    are masked out of the softmax.
+    """
+    b, s, d = hidden.shape
+    v = head_w.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % loss_chunk {chunk} != 0")
+    nc = s // chunk
+    h = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)   # (nc,B,c,d)
+    y = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    pad_mask = (jnp.arange(v) >= valid_vocab) if 0 < valid_vocab < v else None
+
+    def body(acc, args):
+        hc, yc = args
+        logits = (hc @ head_w.astype(hc.dtype)).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if static_unroll:  # roofline compiles: count every chunk's FLOPs
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nc):
+            total, _ = body(total, (h[i], y[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, y))
+    return total / (b * s)

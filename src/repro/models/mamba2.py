@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) block, matmul-form chunked scan.
+
+The SSD recurrence per head (state N, head dim P):
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t x_t ⊗ B_t
+    y_t = C_t^T h_t + D x_t
+
+is evaluated in the chunked dual form of the Mamba2 paper: within a chunk of
+Q timesteps the output is a masked (Q,Q) matmul (MXU-friendly); across
+chunks the per-chunk states are combined with a `lax.scan` linear
+recurrence.  This is the TPU-idiomatic formulation: all heavy compute is
+batched einsums; the only sequential loop is over S/Q chunks.
+
+Decode is the O(1) recurrence on a carried (B, H, P, N) state plus a
+(B, k-1, conv_dim) causal-conv tail — which is why the SSM/hybrid archs run
+the long_500k shape that full-attention models cannot.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamDef, rmsnorm
+
+__all__ = ["ssm_dims", "mamba_defs", "mamba_apply", "mamba_decode_step",
+           "mamba_cache_defs"]
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "in_proj": ParamDef((d, 2 * d_inner + 2 * n + nheads), ("fsdp", "model")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "model")),
+        "conv_b": ParamDef((conv_dim,), ("model",), init="zeros"),
+        "A_log": ParamDef((nheads,), ("model",), init="zeros"),
+        "D": ParamDef((nheads,), ("model",), init="ones"),
+        "dt_bias": ParamDef((nheads,), ("model",), init="zeros"),
+        "norm_g": ParamDef((d_inner,), ("model",), init="ones"),
+        "out_proj": ParamDef((d_inner, d), ("model", "fsdp")),
+    }
+
+
+def _in_proj(params, x, cfg):
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, cfg):
+    d_inner, _, _ = ssm_dims(cfg)
+    n = cfg.ssm_state
+    return jnp.split(xbc, [d_inner, d_inner + n], axis=-1)  # xs, B, C
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv, kernel k, via k shifted adds (no gather)."""
+    k = conv_w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + conv_b[None, None, :])
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, chunk, static_unroll=False):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) softplus'd step sizes;
+    a_log: (H,) with A = -exp(a_log); bmat/cmat: (B,S,N).
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (H,)
+    dta = dt.astype(jnp.float32) * A[None, None, :]           # (B,S,H) ≤ 0
+    dtx = (xh * dt[..., None].astype(xh.dtype))               # Δx
+
+    s_orig = s
+    if s % q:  # pad the tail: Δ=0 pads are exact no-ops in the recurrence
+        pad = q - s % q
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        dta, dtx, bmat, cmat = map(padfn, (dta, dtx, bmat, cmat))
+        s = s + pad
+    nc = s // q
+
+    def chunked(t):  # (B,S,...) -> (nc,B,Q,...)
+        return t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_body(state, args):
+        dta_c, bc, cc, xc = args  # (B,Q,H) (B,Q,N) (B,Q,N) (B,Q,H,P)
+        cum = jnp.cumsum(dta_c, axis=1)                       # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]         # (B,Q,Q,H)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        # intra-chunk: y = ((C B^T) ∘ L) @ Δx
+        cb = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))               # (B,Q,Q)
+        w = cb[..., None] * L                                 # (B,Q,Q,H)
+        y_c = jnp.einsum("bijh,bjhp->bihp", w.astype(xh.dtype), xc)
+        # inter-chunk: y_i += (C_i · S_prev) * exp(cum_i)
+        y_c = y_c + jnp.einsum(
+            "bin,bhpn,bih->bihp", cc.astype(jnp.float32), state,
+            jnp.exp(cum).astype(jnp.float32)).astype(xh.dtype)
+        # state update: S = exp(cum_Q) S_prev + Σ_j exp(cum_Q − cum_j) B_j ⊗ Δx_j
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)             # (B,Q,H)
+        sc = jnp.einsum("bjn,bjh,bjhp->bhpn",
+                        bc.astype(jnp.float32), decay_out.astype(jnp.float32),
+                        xc.astype(jnp.float32))
+        state = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + sc
+        return state, y_c
+
+    xs = (chunked(dta), chunked(bmat), chunked(cmat), chunked(dtx))
+    if static_unroll:  # roofline compiles: count every chunk's FLOPs
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+        ys_list = []
+        for i in range(nc):
+            state, y_c = scan_body(state, tuple(t[i] for t in xs))
+            ys_list.append(y_c)
+        final, ys = state, jnp.stack(ys_list)
+    else:
+        final, ys = jax.lax.scan(
+            scan_body, jnp.zeros((b, h, p, n), jnp.float32), xs)
+    y = ys.swapaxes(0, 1)                                     # (B,nc,Q,H,P)
+    return y.reshape(b, s, h, p)[:, :s_orig], final
+
+
+def mamba_apply(params, x, cfg) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence Mamba2 block.
+
+    x: (B,S,d) -> (y (B,S,d), cache {conv tail (raw xbc), ssm state}).
+    """
+    b, s, d = x.shape
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    z, xbc_raw, dt = _in_proj(params, x, cfg)
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]
+    xbc = _causal_conv(xbc_raw, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xs, bmat, cmat = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(b, s, nheads, cfg.ssm_head_dim)
+    y, state = _ssd_chunked(xh, dt, params["A_log"], bmat, cmat, cfg.ssm_chunk,
+                            static_unroll=cfg.unroll_layers)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_g"])
+    cache = {"conv": conv_tail, "state": state}
+    return y @ params["out_proj"].astype(x.dtype), cache
+
+
+def mamba_cache_defs(cfg, batch: int) -> dict:
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": ParamDef((batch, cfg.ssm_conv - 1, conv_dim),
+                         ("dp", None, "model"), init="zeros"),
+        "state": ParamDef((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                          ("dp", "model", None, None), init="zeros"),
+    }
+
+
+def mamba_decode_step(params, cache, x, cfg):
+    """One-token decode. x: (B,1,d); cache: {conv (B,k-1,C), state (B,H,P,N)}."""
+    b = x.shape[0]
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    z, xbc, dt = _in_proj(params, x, cfg)                     # (B,1,...)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xbc], axis=1)
+    conv_w = params["conv_w"].astype(x.dtype)
+    y = (window * conv_w[None, :, :]).sum(axis=1, keepdims=True)
+    xbc_t = jax.nn.silu(y + params["conv_b"].astype(x.dtype)[None, None, :])
+    xs, bmat, cmat = _split_xbc(xbc_t, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,1,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0, :] * A[None, :])                 # (B,H)
+    xh = xs.reshape(b, nheads, cfg.ssm_head_dim)
+    dx = xh * dt[:, 0, :, None].astype(xh.dtype)
+    state = (cache["state"] * decay[:, :, None, None] +
+             jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+                        dx.astype(jnp.float32)))
+    yh = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), state)
+    yh = yh.astype(x.dtype) + params["D"].astype(x.dtype)[None, :, None] * xh
+    y = yh.reshape(b, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_g"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = {"conv": window[:, 1:, :].astype(cache["conv"].dtype),
+                 "state": state}
+    return out, new_cache

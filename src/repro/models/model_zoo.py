@@ -1,0 +1,101 @@
+"""Model zoo API: the single entry point the launcher/dry-run/tests use.
+
+    zoo = ModelZoo(cfg)
+    defs  = zoo.param_defs()                   # ParamDef tree
+    batch = zoo.input_defs(shape)              # input ParamDef tree (+dtypes)
+    loss  = zoo.train_loss(params, batch)
+    hidden, caches = zoo.prefill(params, batch)
+    logits, caches = zoo.decode(params, caches, batch)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from .layers import ParamDef, dtype_of
+from .losses import chunked_xent
+from .transformer import cache_defs, lm_decode_step, lm_forward, model_defs
+
+__all__ = ["ModelZoo", "InputDef"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputDef:
+    """Like ParamDef but with an explicit dtype (tokens are int32)."""
+    shape: Tuple[int, ...]
+    spec: Tuple[Any, ...]
+    dtype: Any
+
+
+class ModelZoo:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ structure
+    def param_defs(self):
+        return model_defs(self.cfg)
+
+    def cache_defs(self, shape: ShapeSpec):
+        return cache_defs(self.cfg, shape.global_batch, shape.seq_len)
+
+    def input_defs(self, shape: ShapeSpec) -> Dict[str, InputDef]:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = 1 if shape.kind == "decode" else shape.seq_len
+        toks = InputDef((b, s), ("dp", None), jnp.int32)
+        out = {"tokens": toks}
+        if shape.kind == "train":
+            out["labels"] = InputDef((b, s), ("dp", None), jnp.int32)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            n = min(cfg.num_patch_tokens, shape.seq_len)
+            out["patch_embeds"] = InputDef((b, n, cfg.d_model),
+                                           ("dp", None, None), jnp.bfloat16)
+        if cfg.family == "encdec" and shape.kind != "decode":
+            out["src_embeds"] = InputDef((b, shape.seq_len, cfg.d_model),
+                                         ("dp", None, None), jnp.bfloat16)
+        return out
+
+    # ------------------------------------------------------------- fwd paths
+    def train_loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        hidden, _, aux = lm_forward(params, batch, cfg, mode="train")
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        loss = chunked_xent(hidden, head, batch["labels"], cfg.loss_chunk,
+                            valid_vocab=cfg.vocab_size,
+                            static_unroll=cfg.unroll_layers)
+        return loss + 0.01 * aux
+
+    def prefill(self, params, batch):
+        hidden, caches, _ = lm_forward(params, batch, self.cfg, mode="prefill")
+        logits = self._last_logits(params, hidden)
+        return logits, caches
+
+    def decode(self, params, caches, batch):
+        hidden, new_caches = lm_decode_step(params, caches, batch, self.cfg)
+        logits = self._last_logits(params, hidden)
+        return logits, new_caches
+
+    def _last_logits(self, params, hidden):
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        h = hidden[:, -1:, :]
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        return logits[:, :, :cfg.vocab_size]  # drop sharding-pad classes
+
+    # ------------------------------------------------------ analytic model
+    def model_flops(self, shape: ShapeSpec) -> float:
+        """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N active params."""
+        n = self.cfg.active_param_count()
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            return 6.0 * n * tokens
+        if shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            return 2.0 * n * tokens
+        return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts block: GShard-style grouped one-hot dispatch.
+
+TPU-native MoE: routing is expressed as dense one-hot matmuls (dispatch and
+combine tensors) rather than gathers/scatters, so the MXU does the data
+movement and GSPMD lowers the expert-parallel resharding to all-to-alls.
+Tokens are processed in groups of `moe_group_size` with per-group capacity
+C = ceil(cf * group * k / E); over-capacity tokens are dropped (standard
+capacity-factor semantics).
+
+Supports the two assigned MoE designs:
+  * qwen2-moe: 60 routed (padded to 64 for EP divisibility; pads router-
+    masked) top-4 + 4 shared experts,
+  * arctic: 128 routed top-2 + a dense residual FFN in parallel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamDef
+
+__all__ = ["moe_defs", "moe_apply", "padded_experts"]
+
+
+def padded_experts(num_experts: int, tp: int = 16) -> int:
+    """Pad expert count up to a multiple of the model-axis size."""
+    return int(np.ceil(num_experts / tp) * tp)
+
+
+def moe_defs(cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    e = padded_experts(cfg.num_experts)
+    defs = {
+        "router": ParamDef((d, e), (None, None), std=0.02),
+        # experts: EP over 'model', ZeRO/FSDP over 'data' on the d dim
+        "w1": ParamDef((e, d, ff), ("model", "fsdp", None)),
+        "w3": ParamDef((e, d, ff), ("model", "fsdp", None)),
+        "w2": ParamDef((e, ff, d), ("model", None, "fsdp")),
+    }
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        defs["shared_w1"] = ParamDef((d, sff), ("fsdp", "model"))
+        defs["shared_w3"] = ParamDef((d, sff), ("fsdp", "model"))
+        defs["shared_w2"] = ParamDef((sff, d), ("model", "fsdp"))
+    if cfg.moe_dense_residual:
+        dff = cfg.d_ff_dense or ff
+        defs["dense_w1"] = ParamDef((d, dff), ("fsdp", "model"))
+        defs["dense_w3"] = ParamDef((d, dff), ("fsdp", "model"))
+        defs["dense_w2"] = ParamDef((dff, d), ("model", "fsdp"))
+    return defs
+
+
+def moe_apply(params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B,S,d), aux load-balance loss (scalar))."""
+    b, s, d = x.shape
+    e = params["w1"].shape[0]
+    k = cfg.num_experts_per_tok
+    gs = min(cfg.moe_group_size, b * s)
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    if t % gs:
+        raise ValueError(f"tokens {t} not divisible by group size {gs}")
+    g = t // gs
+    xg = tokens.reshape(g, gs, d)
+
+    logits = (xg @ params["router"].astype(xg.dtype)).astype(jnp.float32)
+    if cfg.num_experts < e:  # router-mask padded (inert) experts
+        pad_mask = jnp.arange(e) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+
+    gate_logits, idx = jax.lax.top_k(logits, k)            # (g, gs, k)
+    gates = jax.nn.softmax(gate_logits, axis=-1)           # normalize over top-k
+
+    cap = int(np.ceil(cfg.moe_capacity_factor * gs * k / e))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)     # (g, gs, k, e)
+    # slot position of each (token, choice) within its expert, priority by
+    # (token, choice) order — the classic GShard cumsum.
+    flat = onehot.reshape(g, gs * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # (g, gs*k, e)
+    pos = pos.reshape(g, gs, k, e)
+    keep = (pos < cap) * onehot                            # drop over-capacity
+    slot = jax.nn.one_hot(pos * keep, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (g, gs, e, cap); combine adds the gate weights
+    dispatch = slot.sum(axis=2).astype(x.dtype)
+    combine = (slot * gates[..., None, None]).sum(axis=2).astype(x.dtype)
+
+    ex_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)     # all-to-all under EP
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, params["w1"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", ex_in, params["w3"].astype(x.dtype))
+    ex_out = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(x.dtype))
+    out = jnp.einsum("gecd,gsec->gsd", ex_out, combine)
+
+    if "shared_w1" in params:
+        hs = jax.nn.silu(xg @ params["shared_w1"].astype(x.dtype))
+        hs = hs * (xg @ params["shared_w3"].astype(x.dtype))
+        out = out + hs @ params["shared_w2"].astype(x.dtype)
+    if "dense_w1" in params:
+        hd = jax.nn.silu(xg @ params["dense_w1"].astype(x.dtype))
+        hd = hd * (xg @ params["dense_w3"].astype(x.dtype))
+        out = out + hd @ params["dense_w2"].astype(x.dtype)
+
+    # Switch-style load-balance aux loss over the real experts.
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = onehot.sum(axis=2).mean(axis=1)          # (g, e)
+    frac_probs = probs.mean(axis=1)
+    aux = (frac_tokens * frac_probs).sum(axis=-1).mean() * (cfg.num_experts ** 1)
+
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

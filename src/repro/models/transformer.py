@@ -1,0 +1,482 @@
+"""Decoder-only transformer stack covering dense / moe / ssm / hybrid / vlm.
+
+Layer weights are stacked on a leading L axis and applied with
+`lax.scan` (+ remat), so compile time is depth-independent — essential for
+the 512-device dry-runs on a single-core host.
+
+Cache conventions (decode shapes): the KV cache holds `S` slots with
+`S - 1` valid entries; the decode step writes the new token's K/V at slot
+S-1 and attends over all S.  Caches are sharded batch-over-dp and
+sequence-over-model (sequence-parallel decode: GSPMD turns the softmax and
+the probs@V contraction into local partials + small all-reduces —
+flash-decoding's distribution scheme for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, chunked_attention, decode_attention
+from .layers import ParamDef, rmsnorm, rope, stack_defs, swiglu
+from .mamba2 import (mamba_apply, mamba_cache_defs, mamba_decode_step,
+                     mamba_defs)
+from .moe import moe_apply, moe_defs
+
+__all__ = ["attn_defs", "mlp_defs", "block_defs", "model_defs", "lm_forward",
+           "lm_decode_step", "cache_defs", "hidden_for_tokens"]
+
+
+# ----------------------------------------------------------------- attention
+
+def attn_defs(cfg, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, h * hd), ("fsdp", "model")),
+        "wk": ParamDef((d, kh * hd), ("fsdp", "model")),
+        "wv": ParamDef((d, kh * hd), ("fsdp", "model")),
+        "wo": ParamDef((h * hd, d), ("model", "fsdp")),
+    }
+
+
+def _qkv(params, x, cfg):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, kh, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, kh, hd)
+    return q, k, v
+
+
+def attn_apply(params, x, cfg, *, causal: bool = True, pos0: int = 0,
+               use_rope: bool = True):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if use_rope:
+        positions = jnp.arange(s) + pos0
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                            q_offset=pos0, causal_unroll=cfg.attn_causal_unroll,
+                            static_unroll=cfg.unroll_layers)
+    out = out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def attn_decode_apply(params, x, cfg, kv_cache, *, use_rope: bool = True):
+    """One-token decode. kv_cache: (2, B, S, Kh, hd); writes slot S-1."""
+    b, s_new, _ = x.shape
+    assert s_new == 1
+    q, k, v = _qkv(params, x, cfg)
+    slot = kv_cache.shape[2] - 1
+    if use_rope:
+        positions = jnp.full((1, 1), slot)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kv_cache[0], k.astype(kv_cache.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(kv_cache[1], v.astype(kv_cache.dtype), slot, axis=1)
+    out = decode_attention(q, kc.astype(x.dtype), vc.astype(x.dtype))
+    out = out.reshape(b, 1, -1) @ params["wo"].astype(x.dtype)
+    return out, jnp.stack([kc, vc])
+
+
+def cross_attn_apply(params, x, cfg, memory=None, kv_cache=None,
+                     use_rope: bool = False):
+    """Encoder-decoder cross attention; memory (B, S_src, d) or cached K/V."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    if kv_cache is None:
+        sk = memory.shape[1]
+        k = (memory @ params["wk"].astype(x.dtype)).reshape(b, sk, kh, hd)
+        v = (memory @ params["wv"].astype(x.dtype)).reshape(b, sk, kh, hd)
+        new_cache = (k, v)
+    else:
+        k, v = kv_cache[0].astype(x.dtype), kv_cache[1].astype(x.dtype)
+        new_cache = kv_cache
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                            static_unroll=cfg.unroll_layers)
+    out = out.reshape(b, s, -1) @ params["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_defs(cfg, d_ff: Optional[int] = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": ParamDef((d, ff), ("fsdp", "model")),
+        "w3": ParamDef((d, ff), ("fsdp", "model")),
+        "w2": ParamDef((ff, d), ("model", "fsdp")),
+    }
+
+
+def mlp_apply(params, x):
+    return swiglu(x, params["w1"].astype(x.dtype), params["w3"].astype(x.dtype),
+                  params["w2"].astype(x.dtype))
+
+
+# -------------------------------------------------------------------- blocks
+
+def block_defs(cfg) -> dict:
+    """One decoder layer's defs, by family."""
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {"ln1": ParamDef((d,), (None,), init="ones"),
+                "attn": attn_defs(cfg),
+                "ln2": ParamDef((d,), (None,), init="ones"),
+                "mlp": mlp_defs(cfg)}
+    if cfg.family == "moe":
+        return {"ln1": ParamDef((d,), (None,), init="ones"),
+                "attn": attn_defs(cfg),
+                "ln2": ParamDef((d,), (None,), init="ones"),
+                "moe": moe_defs(cfg)}
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln1": ParamDef((d,), (None,), init="ones"),
+                "mamba": mamba_defs(cfg)}
+    raise ValueError(cfg.family)
+
+
+def shared_attn_defs(cfg) -> dict:
+    """zamba2's shared attention block: consumes concat(x, x0)."""
+    d = cfg.d_model
+    return {"w_in": ParamDef((2 * d, d), ("fsdp", "model")),
+            "ln1": ParamDef((d,), (None,), init="ones"),
+            "attn": attn_defs(cfg),
+            "ln2": ParamDef((d,), (None,), init="ones"),
+            "mlp": mlp_defs(cfg)}
+
+
+def block_apply(params, x, cfg, mode: str, kv_cache=None):
+    """Apply one layer. Returns (x, new_kv, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm", "moe"):
+        h = rmsnorm(x, params["ln1"])
+        if mode == "decode":
+            a, new_kv = attn_decode_apply(params["attn"], h, cfg, kv_cache)
+        else:
+            a, kv = attn_apply(params["attn"], h, cfg, causal=True)
+            new_kv = jnp.stack(kv) if mode == "prefill" else None
+        x = x + a
+        h = rmsnorm(x, params["ln2"])
+        if cfg.family == "moe":
+            m, aux = moe_apply(params["moe"], h, cfg)
+        else:
+            m = mlp_apply(params["mlp"], h)
+        return x + m, new_kv, aux
+    # ssm / hybrid mamba layer
+    h = rmsnorm(x, params["ln1"])
+    if mode == "decode":
+        m, new_state = mamba_decode_step(params["mamba"], kv_cache, h, cfg)
+    else:
+        m, final_state = mamba_apply(params["mamba"], h, cfg)
+        new_state = final_state if mode == "prefill" else None
+    return x + m, new_state, aux
+
+
+def shared_attn_apply(params, x, x0, cfg, mode: str, kv_cache=None):
+    h = jnp.concatenate([x, x0], axis=-1) @ params["w_in"].astype(x.dtype)
+    h1 = rmsnorm(h, params["ln1"])
+    if mode == "decode":
+        a, new_kv = attn_decode_apply(params["attn"], h1, cfg, kv_cache)
+    else:
+        a, kv = attn_apply(params["attn"], h1, cfg, causal=True)
+        new_kv = jnp.stack(kv) if mode == "prefill" else None
+    h = h + a
+    h = h + mlp_apply(params["mlp"], rmsnorm(h, params["ln2"]))
+    return x + h, new_kv
+
+
+# -------------------------------------------------------------- model (defs)
+
+def hybrid_layout(cfg) -> Tuple[int, int, int]:
+    """(num_groups, layers_per_group, tail_layers) for zamba2-style stacks."""
+    k = cfg.shared_attn_every
+    groups = cfg.num_layers // k
+    tail = cfg.num_layers - groups * k
+    return groups, k, tail
+
+
+def model_defs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab()
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), (None, "model")),
+        "final_norm": ParamDef((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((d, v), ("fsdp", "model"))
+    if cfg.family == "encdec":
+        enc_block = {"ln1": ParamDef((d,), (None,), init="ones"),
+                     "attn": attn_defs(cfg),
+                     "ln2": ParamDef((d,), (None,), init="ones"),
+                     "mlp": mlp_defs(cfg)}
+        dec_block = {"ln1": ParamDef((d,), (None,), init="ones"),
+                     "attn": attn_defs(cfg),
+                     "lnx": ParamDef((d,), (None,), init="ones"),
+                     "xattn": attn_defs(cfg),
+                     "ln2": ParamDef((d,), (None,), init="ones"),
+                     "mlp": mlp_defs(cfg)}
+        defs["encoder"] = stack_defs(enc_block, cfg.encoder_layers)
+        defs["decoder"] = stack_defs(dec_block, cfg.decoder_layers)
+        defs["enc_final_norm"] = ParamDef((d,), (None,), init="ones")
+        return defs
+    if cfg.family == "hybrid":
+        groups, k, tail = hybrid_layout(cfg)
+        defs["shared_attn"] = shared_attn_defs(cfg)
+        defs["groups"] = stack_defs(stack_defs(block_defs(cfg), k), groups)
+        if tail:
+            defs["tail"] = stack_defs(block_defs(cfg), tail)
+        return defs
+    defs["layers"] = stack_defs(block_defs(cfg), cfg.num_layers)
+    return defs
+
+
+def cache_defs(cfg, batch: int, seq: int) -> dict:
+    """Decode-cache defs (ShapeDtypeStruct-able, shardable)."""
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    kv = lambda l: ParamDef((l, 2, batch, seq, kh, hd),
+                            (None, None, "dp", "model", None, None),
+                            init="zeros")
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": kv(cfg.num_layers)}
+    if cfg.family == "ssm":
+        return {"mamba": stack_defs(mamba_cache_defs(cfg, batch), cfg.num_layers)}
+    if cfg.family == "hybrid":
+        groups, k, tail = hybrid_layout(cfg)
+        out = {"mamba": stack_defs(stack_defs(mamba_cache_defs(cfg, batch), k), groups),
+               "shared_kv": kv(groups)}
+        if tail:
+            out["mamba_tail"] = stack_defs(mamba_cache_defs(cfg, batch), tail)
+        return out
+    if cfg.family == "encdec":
+        return {"kv": kv(cfg.decoder_layers),
+                "cross_kv": ParamDef((cfg.decoder_layers, 2, batch, seq, kh, hd),
+                                     (None, None, "dp", "model", None, None),
+                                     init="zeros")}
+    raise ValueError(cfg.family)
+
+
+# ------------------------------------------------------------- model (apply)
+
+def hidden_for_tokens(params, tokens, cfg):
+    """Embedding lookup (d-sharded table => local gather)."""
+    emb = params["embed"]
+    x = emb[tokens]  # (B, S, d)
+    return x.astype({"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        "bfloat16"])  # activations always bf16
+
+
+def _remat(body, cfg):
+    """Wrap a layer body in jax.checkpoint per cfg.remat_policy."""
+    if cfg.remat_policy == "none":
+        return body
+    policy = {"nothing": jax.checkpoint_policies.nothing_saveable,
+              "dots": jax.checkpoint_policies.dots_saveable,
+              }[cfg.remat_policy]
+    return jax.checkpoint(body, policy=policy)
+
+
+def _scan_or_unroll(body, carry, xs, cfg):
+    """lax.scan, or a python loop when cfg.unroll_layers (the roofline
+    compiles use L∈{1,2} unrolled so per-layer HLO cost deltas are exact —
+    XLA's cost analysis counts a while body once regardless of trip count)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        carry, out = body(carry, jax.tree.map(lambda a: a[i], xs))
+        outs.append(out)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    return carry, stacked
+
+
+def _scan_layers(layers_params, x, cfg, mode, caches, remat: bool = True):
+    """scan over stacked layers; threads per-layer caches in/out."""
+    def body(x, args):
+        lp, cache = args
+        x, new_cache, aux = block_apply(lp, x, cfg, mode, cache)
+        return x, (new_cache, aux)
+
+    if remat:
+        body = _remat(body, cfg)
+    x, (new_caches, auxs) = _scan_or_unroll(body, x, (layers_params, caches), cfg)
+    return x, new_caches, auxs.sum()
+
+
+def lm_forward(params, inputs: Dict[str, Any], cfg, mode: str = "train"):
+    """Forward over a full sequence.
+
+    Returns (hidden (B,S,d), caches or None, aux).
+    `inputs`: tokens (B,S) [+ patch_embeds for vlm | src_embeds for encdec].
+    """
+    if cfg.family == "encdec":
+        return _encdec_forward(params, inputs, cfg, mode)
+
+    x = hidden_for_tokens(params, inputs["tokens"], cfg)
+    if cfg.family == "vlm" and cfg.num_patch_tokens and "patch_embeds" in inputs:
+        pe = inputs["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, x, cfg, mode)
+
+    l = cfg.num_layers
+    caches = _empty_caches(cfg, l, x, mode)
+    x, new_caches, aux = _scan_layers(params["layers"], x, cfg, mode, caches)
+    x = rmsnorm(x, params["final_norm"])
+    out_caches = {"kv": new_caches} if cfg.family in ("dense", "vlm", "moe") \
+        else {"mamba": new_caches}
+    return x, (out_caches if mode == "prefill" else None), aux
+
+
+def _empty_caches(cfg, l, x, mode):
+    # For train/prefill scans the cache input is a dummy per-layer None-like;
+    # prefill emits fresh caches, train emits nothing.
+    del mode
+    b, s, _ = x.shape
+    if cfg.family in ("dense", "vlm", "moe"):
+        return jnp.zeros((l, 0), x.dtype)  # placeholder, unused in fwd
+    return jnp.zeros((l, 0), x.dtype)
+
+
+def _hybrid_forward(params, x, cfg, mode):
+    groups, k, tail = hybrid_layout(cfg)
+    x0 = x
+
+    def group_body(x, args):
+        gp, cache = args
+        x, new_kv = shared_attn_apply(params["shared_attn"], x, x0, cfg, mode,
+                                      cache)
+        dummy = jnp.zeros((k, 0), x.dtype)
+        x, states, aux = _scan_layers(gp, x, cfg, mode, dummy, remat=False)
+        return x, (new_kv, states, aux)
+
+    group_body = _remat(group_body, cfg)
+    dummy_g = jnp.zeros((groups, 0), x.dtype)
+    x, (shared_kv, states, auxs) = _scan_or_unroll(
+        group_body, x, (params["groups"], dummy_g), cfg)
+    aux = auxs.sum()
+    new_caches = None
+    if tail:
+        dummy_t = jnp.zeros((tail, 0), x.dtype)
+        x, tail_states, aux_t = _scan_layers(params["tail"], x, cfg, mode, dummy_t)
+        aux = aux + aux_t
+    x = rmsnorm(x, params["final_norm"])
+    if mode == "prefill":
+        new_caches = {"mamba": states, "shared_kv": shared_kv}
+        if tail:
+            new_caches["mamba_tail"] = tail_states
+    return x, new_caches, aux
+
+
+def _encdec_forward(params, inputs, cfg, mode):
+    src = inputs["src_embeds"].astype(jnp.bfloat16)
+
+    def enc_body(x, lp):
+        h = rmsnorm(x, lp["ln1"])
+        a, _ = attn_apply(lp["attn"], h, cfg, causal=False)
+        x = x + a
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]))
+        return x, None
+
+    enc_body = _remat(enc_body, cfg)
+    memory, _ = _scan_or_unroll(enc_body, src, params["encoder"], cfg)
+    memory = rmsnorm(memory, params["enc_final_norm"])
+
+    x = hidden_for_tokens(params, inputs["tokens"], cfg)
+
+    def dec_body(x, lp):
+        h = rmsnorm(x, lp["ln1"])
+        a, kv = attn_apply(lp["attn"], h, cfg, causal=True)
+        x = x + a
+        h = rmsnorm(x, lp["lnx"])
+        a, xkv = cross_attn_apply(lp["xattn"], h, cfg, memory=memory)
+        x = x + a
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]))
+        return x, (jnp.stack(kv), jnp.stack(xkv))
+
+    dec_body = _remat(dec_body, cfg)
+    x, caches = _scan_or_unroll(dec_body, x, params["decoder"], cfg)
+    x = rmsnorm(x, params["final_norm"])
+    out = None
+    if mode == "prefill":
+        out = {"kv": caches[0], "cross_kv": caches[1]}
+    return x, out, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------- decode
+
+def lm_decode_step(params, caches, inputs, cfg):
+    """One-token decode. inputs: tokens (B,1). Returns (hidden, new caches)."""
+    x = hidden_for_tokens(params, inputs["tokens"], cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, args):
+            lp, kv = args
+            x, new_kv, _ = block_apply(lp, x, cfg, "decode", kv)
+            return x, new_kv
+        x, new_kv = _scan_or_unroll(body, x, (params["layers"], caches["kv"]), cfg)
+        x = rmsnorm(x, params["final_norm"])
+        return x, {"kv": new_kv}
+
+    if cfg.family == "ssm":
+        def body(x, args):
+            lp, st = args
+            x, new_st, _ = block_apply(lp, x, cfg, "decode", st)
+            return x, new_st
+        x, new_st = _scan_or_unroll(body, x, (params["layers"], caches["mamba"]), cfg)
+        x = rmsnorm(x, params["final_norm"])
+        return x, {"mamba": new_st}
+
+    if cfg.family == "hybrid":
+        groups, k, tail = hybrid_layout(cfg)
+        x0 = x
+
+        def group_body(x, args):
+            gp, kv, states = args
+            x, new_kv = shared_attn_apply(params["shared_attn"], x, x0, cfg,
+                                          "decode", kv)
+            def inner(x, args2):
+                lp, st = args2
+                x, new_st, _ = block_apply(lp, x, cfg, "decode", st)
+                return x, new_st
+            x, new_states = _scan_or_unroll(inner, x, (gp, states), cfg)
+            return x, (new_kv, new_states)
+
+        x, (new_kv, new_states) = _scan_or_unroll(
+            group_body, x, (params["groups"], caches["shared_kv"],
+                            caches["mamba"]), cfg)
+        new_caches = {"shared_kv": new_kv, "mamba": new_states}
+        if tail:
+            def inner(x, args2):
+                lp, st = args2
+                x, new_st, _ = block_apply(lp, x, cfg, "decode", st)
+                return x, new_st
+            x, new_tail = _scan_or_unroll(inner, x, (params["tail"],
+                                                     caches["mamba_tail"]), cfg)
+            new_caches["mamba_tail"] = new_tail
+        x = rmsnorm(x, params["final_norm"])
+        return x, new_caches
+
+    if cfg.family == "encdec":
+        def body(x, args):
+            lp, kv, xkv = args
+            h = rmsnorm(x, lp["ln1"])
+            a, new_kv = attn_decode_apply(lp["attn"], h, cfg, kv)
+            x = x + a
+            h = rmsnorm(x, lp["lnx"])
+            a, _ = cross_attn_apply(lp["xattn"], h, cfg, kv_cache=xkv)
+            x = x + a
+            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"]))
+            return x, new_kv
+        x, new_kv = _scan_or_unroll(body, x, (params["decoder"], caches["kv"],
+                                              caches["cross_kv"]), cfg)
+        x = rmsnorm(x, params["final_norm"])
+        return x, {"kv": new_kv, "cross_kv": caches["cross_kv"]}
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,66 @@
+"""AdamW, functional, sharding-transparent.
+
+Moments inherit the parameter PartitionSpecs (ZeRO-style: with FSDP enabled
+the moments are sharded over data x model, which is what lets arctic-480b
+fit 16 GB/chip).  Moment dtype is per-arch configurable (`opt_moment_dtype`);
+updates are computed in float32 regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (mu32 / b1c) / (jnp.sqrt(nu32 / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, gnorm

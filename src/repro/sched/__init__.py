@@ -1,0 +1,1 @@
+from .pipeline import PipelinePlan, plan, pipeline_apply

@@ -1,0 +1,77 @@
+"""Property tests for the bit-faithful DDC arithmetic (paper §4.2)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ddc
+
+U64_MAX = (1 << 64) - 1
+
+u64s = st.integers(0, U64_MAX)
+u32s = st.integers(0, (1 << 32) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=u64s, b=u64s)
+def test_u64_add_sub_wraps_like_hardware(a, b):
+    s = ddc.u64_add(ddc.u64(a), ddc.u64(b))
+    assert ddc.u64_to_int(s) == (a + b) & U64_MAX
+    d = ddc.u64_sub(ddc.u64(a), ddc.u64(b))
+    assert ddc.u64_to_int(d) == (a - b) & U64_MAX
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=u32s)
+def test_gray_roundtrip(x):
+    g = ddc.gray_encode(jnp.uint32(x))
+    assert int(ddc.gray_decode(g)) == x
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=u32s)
+def test_gray_single_bit_property(x):
+    """The CDC-safety property: consecutive codes differ in exactly one bit."""
+    g0 = int(ddc.gray_encode(jnp.uint32(x)))
+    g1 = int(ddc.gray_encode(jnp.uint32((x + 1) & 0xFFFFFFFF)))
+    assert bin(g0 ^ g1).count("1") == 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(rx=u64s, delta=st.integers(-(2 ** 31) + 1, 2 ** 31 - 1))
+def test_occupancy_truncation_exact_within_pm_2_31(rx, delta):
+    """trunc32(rx − tx) is the exact signed difference while |Δ| < 2^31 —
+    the paper's '24 h of uncorrected 98 ppm drift' safety margin."""
+    tx = (rx - delta) & U64_MAX
+    occ = ddc.occupancy_s32(ddc.u64(rx), ddc.u64(tx))
+    assert int(occ) == delta
+
+
+def test_occupancy_wraps_beyond_2_31():
+    rx, tx = 2 ** 31, 0
+    occ = ddc.occupancy_s32(ddc.u64(rx), ddc.u64(tx))
+    assert int(occ) == -(2 ** 31)  # wraps — exactly like the hardware
+
+
+def test_ddc_step_virtual_buffer():
+    """The DDC acts as a virtual elastic buffer: occupancy = Σrx − Σtx."""
+    state = ddc.ddc_init(3)
+    rng = np.random.default_rng(0)
+    total = np.zeros(3, np.int64)
+    for _ in range(50):
+        rx = rng.integers(0, 100, 3).astype(np.uint32)
+        tx = rng.integers(0, 100, 3).astype(np.uint32)
+        state, occ = ddc.ddc_step(state, jnp.asarray(rx), jnp.asarray(tx))
+        total += rx.astype(np.int64) - tx.astype(np.int64)
+        np.testing.assert_array_equal(np.asarray(occ, np.int64), total)
+
+
+def test_ddc_step_wraps_lo_word():
+    """Force a low-word carry to exercise the (hi, lo) pair arithmetic."""
+    state = ddc.ddc_init(1)
+    state["rx_lo"] = jnp.asarray([0xFFFFFFF0], jnp.uint32)
+    state["tx_lo"] = jnp.asarray([0xFFFFFFF8], jnp.uint32)
+    state, occ = ddc.ddc_step(state, jnp.asarray([0x20], jnp.uint32),
+                              jnp.asarray([0x10], jnp.uint32))
+    assert int(state["rx_hi"][0]) == 1 and int(state["tx_hi"][0]) == 1
+    assert int(occ[0]) == (0xFFFFFFF0 + 0x20) - (0xFFFFFFF8 + 0x10)

@@ -1,0 +1,137 @@
+"""Unit + property tests for the abstract frame model simulation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ControllerConfig, SimConfig, fully_connected, hourglass,
+                        cube, ring, random_regular, simulate, make_links)
+from repro.core.frame_model import OMEGA_NOM
+
+
+def run(topo, ppm, ctrl=None, **cfg_kw):
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ctrl or ControllerConfig(kind="proportional", kp=2e-9)
+    cfg = SimConfig(**{**dict(dt=1e-3, steps=8000, record_every=20), **cfg_kw})
+    return simulate(topo, links, ctrl, np.asarray(ppm, np.float32), cfg)
+
+
+def test_two_node_convergence():
+    topo = fully_connected(2)
+    res = run(topo, [5.0, -5.0], ControllerConfig(kp=2e-8), steps=16000)
+    spread = res.freq_ppm[-1].max() - res.freq_ppm[-1].min()
+    assert spread < 0.1
+    # frequencies should meet near the midpoint of the two oscillators
+    assert abs(res.freq_ppm[-1].mean() - 0.0) < 1.0
+
+
+def test_fc8_converges_within_1ppm():
+    rng = np.random.default_rng(0)
+    res = run(fully_connected(8), rng.uniform(-8, 8, 8))
+    assert res.freq_ppm[-1].max() - res.freq_ppm[-1].min() < 1.0
+    assert np.isfinite(res.convergence_time(1.0))
+
+
+def test_buffers_bounded_and_settle():
+    rng = np.random.default_rng(1)
+    res = run(fully_connected(8), rng.uniform(-8, 8, 8))
+    # virtual (DDC) buffers must stay far from the 2^31 virtual bound
+    assert np.abs(res.beta).max() < 2 ** 20
+    # and settle: last two records nearly identical
+    assert np.abs(res.beta[-1] - res.beta[-2]).max() < 1.0
+
+
+def test_buffer_antisymmetry_fc():
+    """Fig 7: occupancy plot is near-symmetric — a slow node fills its own
+    buffer and drains its neighbor's by the same amount."""
+    rng = np.random.default_rng(2)
+    topo = fully_connected(4)
+    links = make_links(topo, cable_m=2.0)
+    res = simulate(topo, links, ControllerConfig(kp=2e-9),
+                   rng.uniform(-8, 8, 4).astype(np.float32),
+                   SimConfig(dt=1e-3, steps=4000, record_every=20))
+    rev = topo.reverse_edge_index()
+    asym = res.beta[-1] + res.beta[-1][rev]
+    # antisymmetric up to the O(latency*ppm) and O(1 frame) terms
+    assert np.abs(asym).max() < 2.0
+
+
+def test_uncontrolled_drift():
+    """kp=0: buffers drift linearly (the paper's motivation for control)."""
+    res = run(fully_connected(2), [8.0, -8.0], ControllerConfig(kp=0.0),
+              steps=4000)
+    drift = res.beta[-1] - res.beta[0]
+    # 16 ppm * 125 MHz = 2000 frames/s of divergence
+    assert np.abs(drift).max() > 1000
+
+
+def test_discrete_matches_proportional_envelope():
+    """The FINC/FDEC actuator must track the continuous controller."""
+    rng = np.random.default_rng(3)
+    ppm = rng.uniform(-8, 8, 8)
+    smooth = run(fully_connected(8), ppm, ControllerConfig(kind="proportional", kp=2e-8),
+                 dt=5e-5, steps=6000, record_every=10)
+    disc = run(fully_connected(8), ppm,
+               ControllerConfig(kind="discrete", kp=2e-8, fs=1e-8, pulses_per_update=50),
+               dt=5e-5, steps=6000, record_every=10, quantize_beta=True)
+    assert np.abs(smooth.freq_ppm[-1] - disc.freq_ppm[-1]).max() < 0.5
+
+
+def test_hourglass_two_cluster_dynamics():
+    """§5.4: clique nodes align with each other faster than across the bridge."""
+    ppm = np.array([4.0, 4.5, 5.0, 4.2, -5.0, -4.5, -4.2, -4.8], np.float32)
+    res = run(hourglass(4), ppm, ControllerConfig(kp=1e-8), steps=20000)
+    freq = res.freq_ppm
+    tq = freq.shape[0] // 16  # early time
+    spread_a = freq[tq, :4].max() - freq[tq, :4].min()
+    spread_b = freq[tq, 4:].max() - freq[tq, 4:].min()
+    cross = abs(freq[tq, :4].mean() - freq[tq, 4:].mean())
+    assert spread_a < cross and spread_b < cross
+    # and eventually everything converges
+    assert freq[-1].max() - freq[-1].min() < 1.0
+
+
+def test_long_link_insensitivity():
+    """§5.6: a 2 km fiber leaves frequency dynamics essentially unchanged."""
+    rng = np.random.default_rng(4)
+    ppm = rng.uniform(-8, 8, 8).astype(np.float32)
+    topo = fully_connected(8)
+    short = make_links(topo, cable_m=2.0)
+    cable = np.full(topo.num_edges, 2.0)
+    for e in range(topo.num_edges):
+        if {int(topo.src[e]), int(topo.dst[e])} == {0, 2}:
+            cable[e] = 1000.0
+    long = make_links(topo, cable_m=cable)
+    ctrl = ControllerConfig(kp=2e-9)
+    cfg = SimConfig(dt=1e-3, steps=8000, record_every=20)
+    r1 = simulate(topo, short, ctrl, ppm, cfg)
+    r2 = simulate(topo, long, ctrl, ppm, cfg)
+    assert np.abs(r1.freq_ppm[-1] - r2.freq_ppm[-1]).max() < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(3, 10),
+    seed=st.integers(0, 2 ** 16),
+    degree=st.integers(2, 4),
+)
+def test_property_connected_graphs_converge(n, seed, degree):
+    """Syntony property: any connected graph + bounded oscillator offsets +
+    small-enough gain -> frequencies align (stability theorem of [10])."""
+    topo = random_regular(n, degree, seed=seed)
+    rng = np.random.default_rng(seed)
+    ppm = rng.uniform(-8, 8, n).astype(np.float32)
+    res = run(topo, ppm, ControllerConfig(kp=1e-8), steps=12000)
+    assert res.freq_ppm[-1].max() - res.freq_ppm[-1].min() < 1.0
+    assert np.abs(res.beta).max() < 2 ** 22
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_mean_frequency_preserved(seed):
+    """The consensus value stays inside the hull of the oscillator offsets."""
+    rng = np.random.default_rng(seed)
+    ppm = rng.uniform(-8, 8, 8).astype(np.float32)
+    res = run(fully_connected(8), ppm)
+    final = res.freq_ppm[-1]
+    assert final.min() >= ppm.min() - 0.5
+    assert final.max() <= ppm.max() + 0.5

@@ -1,0 +1,108 @@
+"""Logical synchrony validation: frame-level oracle, latency, reframing,
+and AOT schedules (the consequences in paper §1.4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ControllerConfig, SimConfig, fully_connected, ring,
+                        make_links, simulate)
+from repro.core import frame_level as fl
+from repro.core.latency import logical_latency, round_trip_latency
+from repro.core.reframing import reframe
+from repro.core.schedule import (LogicalSynchronyNetwork, pipeline_schedule,
+                                 ring_allreduce_schedule, verify_bounded)
+
+
+def controller(kp=2e-7):
+    return lambda err: kp * err
+
+
+def test_frame_level_lambda_constant_and_matches_prediction():
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    r = fl.simulate_frames(topo, links, np.array([3.0, -2.0, 1.0]), 3.0,
+                           controller=controller(), control_period_s=1e-3)
+    assert r.lam_constant
+    assert not r.underflow and not r.overflow
+    np.testing.assert_array_equal(r.lam, logical_latency(topo, links))
+
+
+def test_frame_level_uncontrolled_eventually_unbounded():
+    """Without clock control, 16 ppm of relative drift must eventually over-
+    or underflow a 32-deep buffer (paper §1, §3.1)."""
+    topo = ring(2) if False else fully_connected(2)
+    links = make_links(topo, cable_m=2.0)
+    r = fl.simulate_frames(topo, links, np.array([300.0, -300.0]), 40.0,
+                           controller=None, depth=32)
+    assert r.underflow or r.overflow
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_controlled_frames_stay_bounded(seed):
+    rng = np.random.default_rng(seed)
+    topo = ring(4)
+    links = make_links(topo, cable_m=2.0)
+    r = fl.simulate_frames(topo, links, rng.uniform(-8, 8, 4), 2.0,
+                           controller=controller(), control_period_s=1e-3)
+    assert r.lam_constant and not r.underflow and not r.overflow
+    assert r.occupancy_max.max() <= 32
+
+
+def test_rtt_short_and_long_links():
+    topo = fully_connected(8)
+    cable = np.full(topo.num_edges, 1.5)
+    links = make_links(topo, cable_m=cable)
+    rtt = round_trip_latency(topo, links)
+    assert np.all((rtt >= 67) & (rtt <= 71))  # Table 1: 67..70
+    for e in range(topo.num_edges):
+        if {int(topo.src[e]), int(topo.dst[e])} == {0, 2}:
+            cable[e] = 1000.0  # 2 km spool ≈ 1 km per direction
+    rtt2 = round_trip_latency(topo, make_links(topo, cable_m=cable))
+    long = rtt2.max()
+    assert 1296 <= long <= 1302  # Table 2: 1299
+    assert np.all(rtt2[rtt2 < 100] == rtt[rtt2 < 100])  # others unchanged
+
+
+def test_reframing_recenters_buffers():
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    rng = np.random.default_rng(0)
+    res = simulate(topo, links, ControllerConfig(kp=2e-9),
+                   rng.uniform(-8, 8, 8).astype(np.float32),
+                   SimConfig(dt=1e-3, steps=8000, record_every=20))
+    rf = reframe(res, target=2.0)
+    assert np.abs(rf.occupancy_after - 2.0).max() < 1.0
+    # λ changes by exactly the applied shift
+    lam_before = logical_latency(topo, links)
+    lam_after = logical_latency(topo, rf.links)
+    np.testing.assert_array_equal(lam_after - lam_before,
+                                  rf.shift.astype(np.int64))
+
+
+def _lsn(n=4):
+    topo = ring(n)
+    links = make_links(topo, cable_m=2.0)
+    return LogicalSynchronyNetwork(topo, logical_latency(topo, links))
+
+
+def test_ring_allreduce_schedule_bounded():
+    lsn = _lsn(4)
+    sched = ring_allreduce_schedule(lsn, ring=[0, 1, 2, 3], chunk_frames=8,
+                                    combine_ticks=4)
+    assert len(sched.events) == 2 * 3 * 4
+    assert sched.makespan_ticks > 0
+    assert verify_bounded(sched, lsn, depth_frames=64)
+    assert not verify_bounded(sched, lsn, depth_frames=4)
+
+
+def test_pipeline_schedule_monotone_and_bounded():
+    lsn = _lsn(4)
+    sched = pipeline_schedule(lsn, stages=[0, 1, 2, 3], num_microbatches=8,
+                              fwd_ticks=100, bwd_ticks=200, activation_frames=16)
+    assert verify_bounded(sched, lsn, depth_frames=1024)
+    # all events schedulable before execution: receive ticks strictly set
+    for ev in sched.events:
+        assert ev.recv_tick == ev.send_tick + lsn.latency(ev.src, ev.dst)
+    # pipeline fill + drain: makespan at least (S-1) hops + all microbatches
+    assert sched.makespan_ticks >= 8 * (100 + 200)

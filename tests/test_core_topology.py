@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("builder,n,deg", [
+    (lambda: T.fully_connected(8), 8, 7),
+    (lambda: T.cube(), 8, 3),
+    (lambda: T.ring(5), 5, 2),
+    (lambda: T.star(6), 6, None),
+    (lambda: T.torus3d(3), 27, 6),
+    (lambda: T.mesh2d(4, 4), 16, 4),
+])
+def test_builders_bidirectional_connected(builder, n, deg):
+    topo = builder()
+    assert topo.num_nodes == n
+    assert topo.is_connected()
+    # bidirectional: reverse index exists and is an involution
+    rev = topo.reverse_edge_index()
+    assert np.all(rev[rev] == np.arange(topo.num_edges))
+    if deg is not None:
+        assert np.all(topo.in_degree == deg)
+
+
+def test_fully_connected_edge_count():
+    topo = T.fully_connected(8)
+    assert topo.num_edges == 8 * 7  # paper: 28 bidirectional links = 56 directed
+
+
+def test_hourglass_structure():
+    topo = T.hourglass(4)
+    assert topo.num_nodes == 8
+    # two K4 cliques (12 directed edges each) + 1 bridge (2 directed)
+    assert topo.num_edges == 2 * 12 + 2
+    bridge = [(int(s), int(d)) for s, d in zip(topo.src, topo.dst)
+              if (s < 4) != (d < 4)]
+    assert sorted(bridge) == [(3, 4), (4, 3)]
+
+
+def test_torus_22_size():
+    topo = T.torus3d(22)
+    assert topo.num_nodes == 22 ** 3 == 10648
+    assert topo.num_edges == 6 * 22 ** 3  # degree-6 torus
+
+
+def test_self_loop_rejected():
+    with pytest.raises(ValueError):
+        T.Topology(2, np.array([0]), np.array([0]))

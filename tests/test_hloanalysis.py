@@ -1,0 +1,50 @@
+"""Unit tests for the HLO collective parser used by the roofline report."""
+import pytest
+
+from repro.launch.hloanalysis import collective_stats, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _shape_bytes("f32[4]") == 16
+    assert _shape_bytes("(bf16[2,2]{1,0}, f32[2]{0})") == 8 + 8
+    assert _shape_bytes("u32[]") == 4  # scalar: empty dims
+    assert _shape_bytes("token[]") == 0  # unknown types ignored
+
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = bf16[16,256]{1,0} parameter(0)
+  %ar = bf16[16,256]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[64,256]{1,0} all-gather(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = bf16[4,256]{1,0} reduce-scatter(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = bf16[16,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %done = bf16[16,256]{1,0} all-reduce-done(%ar)
+}
+"""
+
+
+def test_collective_stats_counts_and_wire_model():
+    st = collective_stats(HLO)
+    assert st["all-reduce"]["count"] == 1          # -done not double-counted
+    assert st["all-gather"]["count"] == 1
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["collective-permute"]["count"] == 1
+
+    b = 16 * 256 * 2
+    # ring model: AR 2(n-1)/n with n=4
+    assert st["all-reduce"]["wire_bytes"] == pytest.approx(b * 2 * 3 / 4)
+    # AG result 64x256, iota groups of 4: (n-1)/n * result
+    assert st["all-gather"]["wire_bytes"] == pytest.approx(64 * 256 * 2 * 3 / 4)
+    # RS result 4x256, n=4: (n-1) * result
+    assert st["reduce-scatter"]["wire_bytes"] == pytest.approx(4 * 256 * 2 * 3)
+    assert st["collective-permute"]["wire_bytes"] == pytest.approx(b)
+    assert st["total"]["count"] == 4
+
+
+def test_iota_group_parsing():
+    hlo = "%x = f32[8]{0} all-reduce(%y), replica_groups=[16,32]<=[512], to_apply=%a"
+    st = collective_stats(hlo)
+    # group size 32: factor 2*31/32
+    assert st["all-reduce"]["wire_bytes"] == pytest.approx(32 * 2 * 31 / 32)

@@ -1,0 +1,87 @@
+"""Regression tests for the §Perf knobs: every optimization variant must
+preserve model semantics (same loss/logits as baseline within dtype noise)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ModelZoo
+from repro.models.layers import materialize
+
+
+def _batch(cfg, rng, b=2, s=64):
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+
+
+@pytest.mark.parametrize("knob", [
+    dict(remat_policy="dots"),
+    dict(remat_policy="none"),
+    dict(attn_causal_unroll=True),
+    dict(loss_chunk=16),
+    dict(attn_chunk=16),
+])
+def test_knobs_preserve_loss(knob):
+    base_cfg = get_config("smollm-135m").reduced()
+    zoo0 = ModelZoo(base_cfg)
+    params = materialize(zoo0.param_defs(), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = _batch(base_cfg, rng)
+    loss0 = float(jax.jit(zoo0.train_loss)(params, batch))
+
+    cfg = dataclasses.replace(base_cfg, **knob)
+    loss1 = float(jax.jit(ModelZoo(cfg).train_loss)(params, batch))
+    assert loss1 == pytest.approx(loss0, rel=2e-3), knob
+
+
+@pytest.mark.parametrize("knob", [
+    dict(remat_policy="dots"),
+    dict(attn_causal_unroll=True),
+])
+def test_knobs_preserve_gradients(knob):
+    base_cfg = get_config("smollm-135m").reduced()
+    zoo0 = ModelZoo(base_cfg)
+    params = materialize(zoo0.param_defs(), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(1)
+    batch = _batch(base_cfg, rng)
+    g0 = jax.jit(jax.grad(zoo0.train_loss))(params, batch)
+    cfg = dataclasses.replace(base_cfg, **knob)
+    g1 = jax.jit(jax.grad(ModelZoo(cfg).train_loss))(params, batch)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-4)
+
+
+def test_f8_kv_cache_decode_close_to_bf16():
+    """kv8 serving optimization: logits within ~1% of the bf16-cache path."""
+    cfg = get_config("smollm-135m").reduced()
+    zoo = ModelZoo(cfg)
+    params = materialize(zoo.param_defs(), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(2)
+    b, s = 2, 32
+    toks = rng.integers(0, cfg.vocab_size, (b, s))
+    _, caches = jax.jit(zoo.prefill)(
+        params, {"tokens": jnp.asarray(toks[:, :-1], jnp.int32)})
+    kv = jnp.pad(caches["kv"], [(0, 0)] * 2 + [(0, 0), (0, 1), (0, 0), (0, 0)])
+    dec = {"tokens": jnp.asarray(toks[:, -1:], jnp.int32)}
+    ref, _ = jax.jit(zoo.decode)(params, {"kv": kv}, dec)
+    got, _ = jax.jit(zoo.decode)(
+        params, {"kv": kv.astype(jnp.float8_e4m3fn)}, dec)
+    scale = np.abs(np.asarray(ref)).max()
+    assert np.abs(np.asarray(got) - np.asarray(ref)).max() / scale < 0.02
+
+
+def test_unroll_layers_matches_scan():
+    cfg = get_config("smollm-135m").reduced()
+    zoo0 = ModelZoo(cfg)
+    params = materialize(zoo0.param_defs(), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(3)
+    batch = _batch(cfg, rng)
+    loss0 = float(jax.jit(zoo0.train_loss)(params, batch))
+    cfg_u = dataclasses.replace(cfg, unroll_layers=True)
+    loss1 = float(jax.jit(ModelZoo(cfg_u).train_loss)(params, batch))
+    assert loss1 == pytest.approx(loss0, rel=1e-4)
