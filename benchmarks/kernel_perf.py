@@ -1,10 +1,11 @@
 """Pallas kernel + simulator engine performance benchmarks.
 
-On this CPU container the Pallas kernel runs in interpret mode (semantics
-validation only — interpret timing is meaningless for TPU), so the numbers
-that matter here are (a) the jitted dense-step oracle, which is the same
-math the kernel computes per tile, and (b) the production segment-sum
-simulator throughput at paper scale.
+On this CPU container the Pallas kernels run in interpret mode (semantics
+validation; interpret timing measures the XLA-compiled interpreter program,
+not Mosaic), so the headline numbers are *relative*: fused multi-period
+engine vs the per-step-launch baseline on identical work, and batched
+ensemble vs a per-draw loop.  Absolute TPU throughput is a compile-target
+claim; see benchmarks/README.md for the measurement methodology.
 """
 from __future__ import annotations
 
@@ -14,10 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fully_connected, make_links, torus3d
+from repro.core import fully_connected, make_links, simulate_ensemble, torus3d
 from repro.core.controller import ControllerConfig
 from repro.core.frame_model import SimConfig, simulate
-from repro.kernels import bittide_step, densify
+from repro.kernels import (bittide_step, densify, simulate_dense_perstep,
+                           simulate_ensemble_dense, simulate_fused)
 from repro.kernels.ref import bittide_dense_step_ref
 
 
@@ -75,6 +77,112 @@ def bench_pallas_interpret_parity():
             f"max_nu_err={err:.2e};match={err < 1e-10}")
 
 
+def bench_fused_vs_per_step():
+    """The tentpole measurement: fused multi-period engine vs the old
+    one-pallas_call-per-period lax.scan on IDENTICAL work (same topology,
+    same number of control periods, interpret/CPU-jit mode).
+
+    node_steps/s counts topology nodes x control periods; the fused path
+    additionally decimates telemetry in-kernel (record_every=32), which is
+    part of the win being measured — the per-step engine has no decimation.
+    """
+    topo = fully_connected(24)          # pads to one 128-tile
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, topo.num_nodes)
+    steps, record_every = 128, 32
+
+    def run_perstep():
+        return simulate_dense_perstep(topo, links, ppm, steps=steps, kp=2e-9)
+
+    def run_fused():
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                              record_every=record_every)
+
+    # correctness gate before timing: fused trajectory must equal the
+    # per-step one at the decimated record points (FAIL fails the harness)
+    f_step, _ = run_perstep()
+    f_fused, _ = run_fused()
+    err = float(np.abs(f_fused - f_step[record_every - 1::record_every]).max())
+
+    us_step = _bench(run_perstep, iters=3)
+    us_fused = _bench(run_fused, iters=3)
+    node_steps = topo.num_nodes * steps
+    ns_step = node_steps / (us_step / 1e6)
+    ns_fused = node_steps / (us_fused / 1e6)
+    speedup = us_step / us_fused
+    return ("kernel_fused_vs_per_step", us_fused,
+            f"speedup={speedup:.1f};node_steps_per_s_fused={ns_fused:.3e};"
+            f"node_steps_per_s_perstep={ns_step:.3e};steps={steps};"
+            f"record_every={record_every};max_err_ppm={err:.2e};"
+            f"pass_parity={'PASS' if err <= 1e-6 else 'FAIL'};"
+            f"pass_5x={'PASS' if speedup >= 5.0 else 'FAIL'}")
+
+
+def bench_ensemble_throughput():
+    """Batched ensemble lane: B=16 oscillator draws through the fused
+    kernel in ONE compiled call vs per-draw loops.
+
+    Two baselines: the naive per-draw loop (B=1 calls, each padded to the
+    8-row sublane quantum — what replaced user code actually did, so the
+    end-to-end win includes reclaiming that padding) and a like-for-like
+    loop of full sublane chunks (B=8 per call, no dead rows — the pure
+    batching/amortization win).
+    """
+    topo = fully_connected(24)
+    links = make_links(topo, cable_m=2.0)
+    B, steps, record_every = 16, 128, 32
+    ppm = np.random.default_rng(1).uniform(-8, 8, (B, topo.num_nodes))
+
+    def run_batched():
+        return simulate_ensemble_dense(topo, links, ppm, steps=steps,
+                                       kp=2e-9, record_every=record_every)
+
+    def run_loop():
+        return [simulate_fused(topo, links, ppm[b], steps=steps, kp=2e-9,
+                               record_every=record_every)
+                for b in range(B)]
+
+    def run_chunked():
+        return [simulate_ensemble_dense(topo, links, ppm[b:b + 8],
+                                        steps=steps, kp=2e-9,
+                                        record_every=record_every)
+                for b in range(0, B, 8)]
+
+    us_batched = _bench(run_batched, iters=3)
+    us_loop = _bench(run_loop, iters=1)
+    us_chunked = _bench(run_chunked, iters=3)
+    node_steps = B * topo.num_nodes * steps
+    ns_batched = node_steps / (us_batched / 1e6)
+    return ("kernel_ensemble_throughput", us_batched,
+            f"draws={B};node_steps_per_s={ns_batched:.3e};"
+            f"batched_speedup_vs_loop={us_loop / us_batched:.1f};"
+            f"batched_speedup_vs_sublane_chunks={us_chunked / us_batched:.2f}")
+
+
+def bench_ensemble_xla_engine():
+    """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
+    compile (the frame_model.simulate_ensemble lane)."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    B = 16
+    ppm = np.random.default_rng(2).uniform(-8, 8, (B, 8)).astype(np.float32)
+    cfg = SimConfig(dt=1e-3, steps=4000, record_every=100, record_beta=False)
+    ctrl = ControllerConfig(kind="proportional", kp=2e-8)
+
+    def run():
+        return simulate_ensemble(topo, links, ctrl, ppm, cfg)
+
+    run()  # warm compile
+    t0 = time.perf_counter()
+    out = run()
+    dt = time.perf_counter() - t0
+    node_steps = B * topo.num_nodes * cfg.steps / dt
+    conv = out.convergence_times(1.0)
+    return ("sim_ensemble_xla_throughput", dt * 1e6,
+            f"draws={B};node_steps_per_s={node_steps:.3e};"
+            f"conv_s_p50={np.median(conv):.3f}")
+
+
 def bench_sim_engine_throughput():
     """Production simulator: node-steps/second on the 22^3 torus."""
     topo = torus3d(22)
@@ -96,4 +204,10 @@ def bench_sim_engine_throughput():
 
 
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
-       bench_sim_engine_throughput]
+       bench_fused_vs_per_step, bench_ensemble_throughput,
+       bench_ensemble_xla_engine, bench_sim_engine_throughput]
+
+# Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
+# benches for the fused engine, skipping the 10k-node torus.
+SMOKE = [bench_fused_vs_per_step, bench_ensemble_throughput,
+         bench_ensemble_xla_engine]

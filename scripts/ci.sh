@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Per-PR gate: tier-1 tests + fast benchmark smoke with a JSON perf record.
+#
+#   scripts/ci.sh [extra pytest args...]
+#
+# Writes BENCH_kernels.json at the repo root (the fused-engine perf
+# trajectory; see benchmarks/README.md).  Exits nonzero if tests fail or
+# any smoke bench reports FAIL.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+python -m benchmarks.run --smoke --json BENCH_kernels.json
+echo "ci: tests green, BENCH_kernels.json written"

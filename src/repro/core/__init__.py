@@ -21,8 +21,8 @@ from . import frame_level, schedule, network
 from .topology import (Topology, fully_connected, hourglass, cube, ring, line,
                        star, torus3d, mesh2d, random_regular, from_links)
 from .controller import ControllerConfig, hardware_gain
-from .frame_model import (LinkParams, SimConfig, SimResult, simulate,
-                          make_links, OMEGA_NOM)
+from .frame_model import (EnsembleResult, LinkParams, SimConfig, SimResult,
+                          simulate, simulate_ensemble, make_links, OMEGA_NOM)
 from .network import BittideNetwork, OscillatorSpec, SyncOutcome
 from .schedule import (LogicalSynchronyNetwork, ring_allreduce_schedule,
                        pipeline_schedule, verify_bounded)

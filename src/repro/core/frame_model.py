@@ -28,6 +28,7 @@ the actuation delay d).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Optional
 
@@ -38,7 +39,8 @@ import numpy as np
 from .controller import ControllerConfig, controller_init, controller_step
 from .topology import Topology
 
-__all__ = ["LinkParams", "SimConfig", "SimResult", "simulate", "make_links", "OMEGA_NOM"]
+__all__ = ["LinkParams", "SimConfig", "SimResult", "EnsembleResult",
+           "simulate", "simulate_ensemble", "make_links", "OMEGA_NOM"]
 
 OMEGA_NOM = 125e6  # frames/s — the paper's 125 MHz node clock.
 
@@ -121,54 +123,149 @@ class SimResult:
     def convergence_time(self, band_ppm: float = 1.0) -> float:
         """First recorded time after which all nodes stay within band_ppm."""
         spread = self.freq_ppm.max(axis=1) - self.freq_ppm.min(axis=1)
-        ok = spread <= band_ppm
-        # last time it was violated
-        bad = np.nonzero(~ok)[0]
-        if len(bad) == 0:
-            return float(self.times[0])
-        if bad[-1] == len(ok) - 1:
-            return float("inf")
-        return float(self.times[bad[-1] + 1])
+        return _convergence_time(spread, self.times, band_ppm)
 
 
-@partial(jax.jit, static_argnames=("ctrl", "cfg", "num_nodes", "inner", "outer"))
-def _run(src, dst, lat_frames, lam_eff, nu_u, ctrl: ControllerConfig, cfg: SimConfig,
-         num_nodes: int, inner: int, outer: int, noise_key):
-    """Scan outer telemetry records; fori_loop `inner` control periods each."""
+def _convergence_time(spread, times, band_ppm: float) -> float:
+    """First recorded time after which a (T,) spread stays within band."""
+    ok = spread <= band_ppm
+    bad = np.nonzero(~ok)[0]   # last record the band was violated
+    if len(bad) == 0:
+        return float(times[0])
+    if bad[-1] == len(ok) - 1:
+        return float("inf")
+    return float(times[bad[-1] + 1])
+
+
+@dataclasses.dataclass
+class EnsembleResult:
+    """Telemetry + final state of a batched (Monte Carlo) bittide run.
+
+    Same fields as SimResult with a leading batch axis B:
+      freq_ppm: (B, T, N); beta: (B, T, E); psi/nu: (B, N);
+      c_state values: (B, N).
+    """
+
+    freq_ppm: np.ndarray
+    beta: np.ndarray
+    times: np.ndarray
+    psi: np.ndarray
+    nu: np.ndarray
+    c_state: dict
+    topo: Topology
+    links: LinkParams
+    cfg: SimConfig
+
+    @property
+    def num_draws(self) -> int:
+        return int(self.freq_ppm.shape[0])
+
+    @property
+    def final_spread_ppm(self) -> np.ndarray:
+        """(B,) final recorded frequency band per draw."""
+        last = self.freq_ppm[:, -1]
+        return last.max(axis=1) - last.min(axis=1)
+
+    def convergence_times(self, band_ppm: float = 1.0) -> np.ndarray:
+        """(B,) first recorded time after which each draw stays in band."""
+        spread = self.freq_ppm.max(axis=2) - self.freq_ppm.min(axis=2)
+        return np.array([_convergence_time(s, self.times, band_ppm)
+                         for s in spread])
+
+    def draw(self, b: int) -> SimResult:
+        """View draw b as a SimResult (chainable: c_state is per-draw)."""
+        return SimResult(
+            freq_ppm=self.freq_ppm[b], beta=self.beta[b], times=self.times,
+            psi=self.psi[b], nu=self.nu[b],
+            c_state={k: v[b] for k, v in self.c_state.items()},
+            topo=self.topo, links=self.links, cfg=self.cfg)
+
+
+def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
+              noise_ppm, noise_key, ctrl: ControllerConfig, num_nodes: int,
+              outer: int, quantize_beta: bool, record_beta: bool):
+    """Scan `outer` telemetry records; fori_loop `inner` control periods each.
+
+    ``dt_frames``, ``inner`` and ``noise_ppm`` are traced (not static), so
+    sweeps over the control period, the telemetry decimation, or the
+    observation-noise level reuse one compiled executable; only topology
+    size, ``outer`` and the controller/record flags key the compile cache.
+    """
 
     beta_off = jnp.float32(ctrl.beta_off)
-    dt_frames = jnp.float32(cfg.omega_nom * cfg.dt)
+
+    def occupancies(psi, nu):
+        # ν is piecewise-constant over the period, so the delayed-phase
+        # term uses the sender's current ν.
+        return psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
 
     def control_period(carry):
         psi, nu, c_state = carry
-        # Occupancies from current state (ν is piecewise-constant over the
-        # period, so the delayed-phase term uses the sender's current ν).
-        beta = psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
-        if cfg.quantize_beta:
+        beta = occupancies(psi, nu)
+        if quantize_beta:
             beta = jnp.round(beta)
-        err = jax.ops.segment_sum(beta - beta_off, dst, num_segments=num_nodes)
+        # Per-node aggregation: scatter-add (the supported successor of the
+        # deprecated jax.ops.segment_sum; identical XLA scatter lowering).
+        err = jnp.zeros((num_nodes,), beta.dtype).at[dst].add(beta - beta_off)
         c_state, c_corr = controller_step(ctrl, c_state, err)
         # (1+ν_u)(1+c) − 1 without forming 1 + O(1e-6) (f32 cancellation)
         nu_next = nu_u + c_corr + nu_u * c_corr
         psi_next = psi + nu_next * dt_frames
-        return (psi_next, nu_next, c_state), beta
+        return (psi_next, nu_next, c_state)
 
     def outer_step(carry, _):
         carry = jax.lax.fori_loop(
-            0, inner, lambda _, c: control_period(c)[0], carry)
+            0, inner, lambda _, c: control_period(c), carry)
         # Read out β consistently with the post-update state.
         (psi, nu, c_state) = carry
-        beta = psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
-        rec = (nu * 1e6, beta if cfg.record_beta else jnp.zeros((0,), jnp.float32))
+        beta = occupancies(psi, nu)
+        rec = (nu * 1e6, beta if record_beta else jnp.zeros((0,), jnp.float32))
         return carry, rec
 
     psi0 = jnp.zeros((num_nodes,), jnp.float32)
     c0 = controller_init(ctrl, num_nodes)
     nu0 = nu_u  # before any correction, clocks run at their unadjusted rate
     carry, (freq, beta) = jax.lax.scan(outer_step, (psi0, nu0, c0), None, length=outer)
-    if cfg.telemetry_noise_ppm > 0:
-        freq = freq + cfg.telemetry_noise_ppm * jax.random.normal(noise_key, freq.shape)
+    # noise_ppm == 0 adds exact zeros, so the noiseless path stays bitwise
+    # identical without a recompile-keying static flag.
+    freq = freq + noise_ppm * jax.random.normal(noise_key, freq.shape)
     return carry, freq, beta
+
+
+_RUN_STATIC = ("ctrl", "num_nodes", "outer", "quantize_beta", "record_beta")
+
+
+def _donate_nu_u():
+    # jax buffer donation is a no-op (warning spam) on CPU; only donate the
+    # state-sized ν_u buffer where the runtime can actually reuse it.
+    # Queried lazily so importing this module never initializes the backend
+    # (which would pin the platform before callers can configure it).
+    return (4,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run():
+    return partial(jax.jit, static_argnames=_RUN_STATIC,
+                   donate_argnums=_donate_nu_u())(_run_core)
+
+
+def _run_ensemble_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
+                       noise_ppm, noise_keys, ctrl, num_nodes, outer,
+                       quantize_beta, record_beta):
+    """vmap of `_run_core` over a leading batch of oscillator draws."""
+
+    def one(nu_u_row, key):
+        return _run_core(src, dst, lat_frames, lam_eff, nu_u_row, dt_frames,
+                         inner, noise_ppm, key, ctrl, num_nodes, outer,
+                         quantize_beta, record_beta)
+
+    return jax.vmap(one)(nu_u, noise_keys)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run_ensemble():
+    return partial(jax.jit, static_argnames=_RUN_STATIC,
+                   donate_argnums=_donate_nu_u())(_run_ensemble_core)
 
 
 def simulate(
@@ -191,22 +288,77 @@ def simulate(
     ppm_u = np.asarray(ppm_u, np.float32)
     if ppm_u.shape != (topo.num_nodes,):
         raise ValueError(f"ppm_u must be ({topo.num_nodes},), got {ppm_u.shape}")
+    inner, outer = _split_steps(cfg)
+    args = _sim_arrays(topo, links, cfg)
+
+    (psi, nu, c_state), freq, beta = _jitted_run()(
+        *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
+        jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
+        jnp.float32(cfg.telemetry_noise_ppm), jax.random.PRNGKey(cfg.seed),
+        ctrl=ctrl, num_nodes=topo.num_nodes, outer=outer,
+        quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
+
+    times = (np.arange(1, outer + 1) * inner) * cfg.dt
+    return SimResult(
+        freq_ppm=np.asarray(freq), beta=np.asarray(beta), times=times,
+        psi=np.asarray(psi), nu=np.asarray(nu),
+        c_state={k: np.asarray(v) for k, v in c_state.items()},
+        topo=topo, links=links, cfg=cfg)
+
+
+def _split_steps(cfg: SimConfig):
     inner = cfg.record_every
     outer = cfg.steps // inner
     if outer < 1:
         raise ValueError("steps must be >= record_every")
+    return inner, outer
 
-    lat_frames = jnp.asarray(links.latency_s * cfg.omega_nom, jnp.float32)
-    lam_eff = jnp.asarray(links.beta0, jnp.float32)  # β(0) with ψ(0)=0
-    nu_u = jnp.asarray(ppm_u * 1e-6, jnp.float32)
-    key = jax.random.PRNGKey(cfg.seed)
 
-    (psi, nu, c_state), freq, beta = _run(
-        jnp.asarray(topo.src), jnp.asarray(topo.dst), lat_frames, lam_eff,
-        nu_u, ctrl, cfg, topo.num_nodes, inner, outer, key)
+def _sim_arrays(topo: Topology, links: LinkParams, cfg: SimConfig):
+    return (jnp.asarray(topo.src), jnp.asarray(topo.dst),
+            jnp.asarray(links.latency_s * cfg.omega_nom, jnp.float32),
+            jnp.asarray(links.beta0, jnp.float32))  # β(0) with ψ(0)=0
+
+
+def simulate_ensemble(
+    topo: Topology,
+    links: LinkParams,
+    ctrl: ControllerConfig,
+    ppm_u: np.ndarray,
+    cfg: SimConfig = SimConfig(),
+) -> "EnsembleResult":
+    """Run B independent oscillator draws in ONE compiled call.
+
+    The batch is a ``jax.vmap`` over the same scan `simulate` runs, so one
+    XLA executable serves B × steps × N node-steps — the Monte Carlo regime
+    of the paper's ±8 ppm experiments (convergence-time distributions,
+    worst-case envelopes) without per-draw dispatch or recompilation.
+
+    Args:
+      ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per draw.
+
+    Returns:
+      EnsembleResult with leading batch axes; draw b reproduces
+      ``simulate(topo, links, ctrl, ppm_u[b], cfg)`` up to vmap'd-reduction
+      float noise (telemetry noise uses per-draw derived keys).
+    """
+    ppm_u = np.asarray(ppm_u, np.float32)
+    if ppm_u.ndim != 2 or ppm_u.shape[1] != topo.num_nodes:
+        raise ValueError(
+            f"ppm_u must be (B, {topo.num_nodes}), got {ppm_u.shape}")
+    inner, outer = _split_steps(cfg)
+    args = _sim_arrays(topo, links, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), ppm_u.shape[0])
+
+    (psi, nu, c_state), freq, beta = _jitted_run_ensemble()(
+        *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
+        jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
+        jnp.float32(cfg.telemetry_noise_ppm), keys,
+        ctrl=ctrl, num_nodes=topo.num_nodes, outer=outer,
+        quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
 
     times = (np.arange(1, outer + 1) * inner) * cfg.dt
-    return SimResult(
+    return EnsembleResult(
         freq_ppm=np.asarray(freq), beta=np.asarray(beta), times=times,
         psi=np.asarray(psi), nu=np.asarray(nu),
         c_state={k: np.asarray(v) for k, v in c_state.items()},

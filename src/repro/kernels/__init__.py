@@ -1,9 +1,15 @@
 """Pallas TPU kernels for the bittide simulation hot-spot.
 
-bittide_step  pl.pallas_call fused control-period step (BlockSpec VMEM tiling)
-ops           jit wrappers + topology densification + scan-based runner
-ref           pure-jnp oracle the kernel is validated against
+bittide_step  pl.pallas_call kernels: per-step baseline + fused multi-period
+              batched engine (VMEM-resident adjacency, scratch-carried state,
+              in-kernel telemetry decimation)
+ops           jit wrappers + topology densification + fused/ensemble runners
+ref           pure-jnp oracles the kernels are validated against
 """
-from .bittide_step import bittide_step_pallas, TILE
-from .ops import bittide_step, densify, simulate_dense
-from .ref import bittide_dense_step_ref, occupancy_ref
+from .bittide_step import (SUBLANE, TILE, bittide_fused_pallas,
+                           bittide_step_pallas)
+from .ops import (bittide_step, densify, simulate_dense,
+                  simulate_dense_perstep, simulate_ensemble_dense,
+                  simulate_fused)
+from .ref import (bittide_dense_multistep_ref, bittide_dense_step_ref,
+                  occupancy_ref)

@@ -1,12 +1,12 @@
-"""Pallas TPU kernel: fused bittide control-period step.
+"""Pallas TPU kernels: fused bittide control-period stepping.
 
 This is the compute hot-spot of large-scale bittide simulation (the paper
 simulates 22^3-node networks in Callisto, Fig 18; the FPGA evaluates the
 same update per-frame in hardware).  The GPU-ish formulation would be an
 edge-list gather/scatter; TPUs want dense tiles, so the network is
 expressed as a small stack of (N, N) adjacency masks — one per physical-
-latency class — and one step is computed as tiled matvecs + elementwise ops
-entirely in VMEM:
+latency class — and one control period is computed as matvecs +
+elementwise ops entirely in VMEM:
 
     err_i = Σ_c [A_c @ (ψ − ν·lat_c)]_i  −  (ψ_i + β_off)·deg_i  +  lamsum_i
     ν'_i  = (1 + ν_u_i)(1 + kp·err_i) − 1
@@ -17,16 +17,30 @@ step-invariant and precomputed once (they fold the per-edge λeff and β_off
 terms into per-node constants — this algebraic refactor is what removes the
 need to ever materialize the (C, N, N) occupancy tensor β).
 
-Tiling: grid (N/TI, N/TJ); A tiles (C, TI, TJ) stream through VMEM; the
-err accumulator lives in the ν' output block (revisited across the j axis,
-legal because its index map depends only on i).  TI = TJ = 128 aligns the
-matvec contraction to the MXU/VPU lane width.
+Two kernels are provided:
 
-The kernel asserts nothing about topology sparsity: zero blocks cost the
-same as dense ones.  That trade is intentional — pod-scale bittide domains
-(N ≤ 2048) are dense enough that regular tiles beat gathers on TPU; the
-mega-scale path (Fig 18) uses the XLA segment-sum simulator in
-`repro.core.frame_model`, which is also the oracle for this kernel.
+``bittide_step_pallas``
+    One control period, grid (N/TILE, N/TILE), err accumulated in the ν'
+    output block across the j axis.  Kept as the per-step baseline and for
+    N too large to hold (C, N, N) in VMEM at once.
+
+``bittide_fused_pallas``
+    The production engine: ONE ``pallas_call`` advances ``num_records ×
+    record_every`` control periods for a whole batch of B independent
+    oscillator draws.  The grid iterates over telemetry records (TPU grids
+    execute sequentially); the (B, N) state lives in VMEM *scratch* that
+    persists across grid steps, the adjacency stack and per-node invariants
+    stay resident (their index maps are constant, so the blocks are fetched
+    once), and each grid step runs ``record_every`` periods with an
+    in-kernel ``fori_loop`` — telemetry is decimated in-kernel, so ν is
+    written back to HBM once per record instead of once per period.  The
+    per-period matvec becomes a (B, N) × (N, N) matmul, which is exactly
+    the MXU's shape.  This removes the per-period kernel-launch + HBM
+    round-trip that dominated the old ``lax.scan``-of-``pallas_call`` path.
+
+State layout: B is the sublane axis (pad to a multiple of 8 for float32),
+N the lane axis (pad to a multiple of 128); padding nodes have degree 0 and
+stay inert, padding batch rows are dead weight.
 """
 from __future__ import annotations
 
@@ -35,10 +49,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bittide_step_pallas", "TILE"]
+__all__ = ["bittide_step_pallas", "bittide_fused_pallas", "TILE", "SUBLANE",
+           "VMEM_BUDGET_BYTES"]
 
-TILE = 128  # MXU/VPU-aligned tile edge
+TILE = 128     # MXU/VPU-aligned tile edge (lane axis)
+SUBLANE = 8    # float32 sublane quantum (batch axis of the fused kernel)
+
+# Conservative per-core VMEM budget for the fused kernel's resident set
+# (real TPU cores have ~16 MB; leave headroom for Mosaic's own buffers).
+VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 
 
 def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_u_ref,
@@ -84,7 +105,7 @@ def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_u_ref,
 def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
                         kp: float, beta_off: float, dt_frames: float,
                         *, interpret: bool = False):
-    """One fused bittide control period.
+    """One fused bittide control period (per-step baseline kernel).
 
     Args:
       psi, nu, nu_u: (N,) float32 node state (N a multiple of TILE; pad via
@@ -141,3 +162,132 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
       a.astype(jnp.float32), row(psi), row(nu), row(psi), row(nu_u),
       row(deg), row(lamsum))
     return psi_next[0], nu_next[0]
+
+
+def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, deg_ref,
+                  lamsum_ref, psi_out_ref, nu_out_ref, rec_ref,
+                  psi_s, nu_s,
+                  *, kp: float, beta_off: float, dt_frames: float,
+                  record_every: int, num_classes: int):
+    t = pl.program_id(0)
+
+    # First grid step: load initial state into the persistent VMEM scratch.
+    @pl.when(t == 0)
+    def _seed():
+        psi_s[...] = psi0_ref[...]
+        nu_s[...] = nu0_ref[...]
+
+    nu_u = nu_u_ref[...]        # (B, N), resident across the whole run
+    deg = deg_ref[...]          # (1, N), broadcasts over B
+    lamsum = lamsum_ref[...]
+
+    def period(_, carry):
+        psi, nu = carry
+        acc = jnp.zeros_like(psi)
+        for c in range(num_classes):
+            x = psi - nu * lat_ref[c, 0]                          # (B, N)
+            # err[b, i] += Σ_j A[c, i, j] · x[b, j]  — an MXU matmul.
+            acc = acc + jax.lax.dot_general(
+                x, a_ref[c],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        err = acc - (psi + beta_off) * deg + lamsum
+        c_rel = kp * err
+        nu_next = nu_u + c_rel + nu_u * c_rel
+        psi_next = psi + nu_next * dt_frames
+        return psi_next, nu_next
+
+    psi, nu = jax.lax.fori_loop(
+        0, record_every, period, (psi_s[...], nu_s[...]))
+    psi_s[...] = psi
+    nu_s[...] = nu
+
+    # Decimated telemetry: ν once per record, not once per period.
+    rec_ref[...] = nu[None]
+    psi_out_ref[...] = psi
+    nu_out_ref[...] = nu
+
+
+def fused_vmem_bytes(b: int, n: int, c: int) -> int:
+    """Resident-set estimate for the fused kernel (adjacency + state)."""
+    return 4 * (c * n * n          # A stack
+                + 5 * b * n        # psi0/nu0/nu_u inputs + 2 scratch
+                + 3 * b * n        # psi/nu outputs + one record block
+                + 2 * n)           # deg, lamsum
+
+
+def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
+                         kp: float, beta_off: float, dt_frames: float,
+                         *, num_records: int, record_every: int,
+                         interpret: bool = False):
+    """Advance ``num_records * record_every`` control periods in ONE kernel.
+
+    Args:
+      psi, nu, nu_u: (B, N) float32 state for B independent oscillator
+        draws (B a multiple of SUBLANE, N a multiple of TILE).
+      a: (C, N, N) float32 adjacency masks per latency class.
+      deg, lamsum: (1, N) float32 step-invariant per-node folds
+        (Σ_{c,j} A[c,·,j] and Σ_{c,j} λeff[c,·,j]).
+      lat_frames: (C,) float32 per-class physical latency in frames.
+      kp, beta_off, dt_frames: static controller/integration constants.
+      num_records: telemetry records to emit (grid length).
+      record_every: control periods fused per record (in-kernel loop).
+      interpret: run in interpret mode (CPU validation).
+
+    Returns:
+      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N)).
+    """
+    b, n = psi.shape
+    c = a.shape[0]
+    if n % TILE:
+        raise ValueError(f"N={n} must be a multiple of {TILE}")
+    if b % SUBLANE:
+        raise ValueError(f"B={b} must be a multiple of {SUBLANE}")
+    if num_records < 1 or record_every < 1:
+        raise ValueError("num_records and record_every must be >= 1")
+    vmem = fused_vmem_bytes(b, n, c)
+    if vmem > VMEM_BUDGET_BYTES and not interpret:
+        raise ValueError(
+            f"fused kernel resident set {vmem/2**20:.1f} MiB exceeds the "
+            f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB VMEM budget (B={b}, N={n}, "
+            f"C={c}); use the segment-sum simulator in repro.core.frame_model "
+            "for networks this large")
+
+    kern = functools.partial(
+        _fused_kernel, kp=float(kp), beta_off=float(beta_off),
+        dt_frames=float(dt_frames), record_every=int(record_every),
+        num_classes=int(c))
+
+    full2 = lambda t: (0, 0)
+    psi_f, nu_f, rec = pl.pallas_call(
+        kern,
+        grid=(num_records,),
+        in_specs=[
+            pl.BlockSpec((c, 1), full2),                 # lat (C, 1)
+            pl.BlockSpec((c, n, n), lambda t: (0, 0, 0)),  # A, resident
+            pl.BlockSpec((b, n), full2),                 # psi0
+            pl.BlockSpec((b, n), full2),                 # nu0
+            pl.BlockSpec((b, n), full2),                 # nu_u
+            pl.BlockSpec((1, n), full2),                 # deg
+            pl.BlockSpec((1, n), full2),                 # lamsum
+        ],
+        out_specs=[
+            pl.BlockSpec((b, n), full2),                 # psi final
+            pl.BlockSpec((b, n), full2),                 # nu final
+            pl.BlockSpec((1, b, n), lambda t: (t, 0, 0)),  # ν record t
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, n), jnp.float32),             # ψ carry
+            pltpu.VMEM((b, n), jnp.float32),             # ν carry
+        ],
+        interpret=interpret,
+    )(lat_frames.reshape(c, 1).astype(jnp.float32), a.astype(jnp.float32),
+      psi.astype(jnp.float32), nu.astype(jnp.float32),
+      nu_u.astype(jnp.float32), deg.reshape(1, n).astype(jnp.float32),
+      lamsum.reshape(1, n).astype(jnp.float32))
+    return psi_f, nu_f, rec

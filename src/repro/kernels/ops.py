@@ -1,16 +1,35 @@
-"""jit'd wrappers around the Pallas bittide kernel + topology densification.
+"""jit'd wrappers around the Pallas bittide kernels + topology densification.
 
 `densify` converts an edge-list topology into the latency-class dense form
-the kernel consumes (padding N up to the tile size); `simulate_dense` runs a
-whole synchronization with `lax.scan` over fused kernel steps and matches
-`repro.core.frame_model.simulate` for the proportional controller.
+the kernels consume (padding N up to the tile size).  The production entry
+points are:
 
-On CPU (this container) the kernel runs in interpret mode; on TPU the same
+``simulate_fused``
+    One synchronization run on the fused multi-period engine: a single
+    ``pallas_call`` advances ``steps`` control periods with the adjacency
+    stack resident in VMEM, state carried in VMEM scratch across the
+    record grid, and ν telemetry decimated in-kernel to every
+    ``record_every`` periods.
+
+``simulate_ensemble_dense``
+    The batched lane: B independent oscillator draws (Monte Carlo over the
+    paper's ±8 ppm envelope) advance together through the same fused
+    kernel — the per-period matvec becomes a (B, N) × (N, N) MXU matmul
+    and one compile serves B × steps × N node-steps.
+
+``simulate_dense``
+    Back-compat wrapper (per-period telemetry, single draw); delegates to
+    the fused engine.  The old one-``pallas_call``-per-period
+    ``lax.scan`` runner survives only as ``simulate_dense_perstep``, the
+    benchmark baseline that the fused engine is measured against.
+
+On CPU (this container) the kernels run in interpret mode; on TPU the same
 code path compiles to Mosaic.  `interpret=None` auto-detects.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -20,10 +39,19 @@ import numpy as np
 from repro.core.frame_model import LinkParams, OMEGA_NOM
 from repro.core.topology import Topology
 
-from .bittide_step import TILE, bittide_step_pallas
-from .ref import bittide_dense_step_ref
+from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES,
+                           bittide_fused_pallas, bittide_step_pallas,
+                           fused_vmem_bytes)
+from .ref import bittide_dense_multistep_ref, bittide_dense_step_ref
 
-__all__ = ["densify", "bittide_step", "simulate_dense"]
+__all__ = ["densify", "bittide_step", "simulate_dense",
+           "simulate_dense_perstep", "simulate_fused",
+           "simulate_ensemble_dense"]
+
+
+# Beyond this many exact latency classes, densify falls back to quantized
+# merging (the dense stack is (C, N, N) — C must stay small).
+MAX_EXACT_CLASSES = 8
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -33,26 +61,50 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 
 
 def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
-            quantum_frames: float = 0.25, tile: int = TILE):
+            quantum_frames: Optional[float] = None, tile: int = TILE):
     """Edge list -> (A, lam_eff, lat_classes, n_padded).
 
-    Edges are grouped into latency classes by quantizing their physical
-    latency to `quantum_frames`; the paper's setups have C ∈ {1, 2}
-    (uniform short links, plus one long-fiber class in §5.6).
+    Edges are grouped into latency classes; the paper's setups have
+    C ∈ {1, 2} (uniform short links, plus one long-fiber class in §5.6).
+    With ``quantum_frames=None`` (default) each distinct physical latency
+    becomes its own class, which keeps the dense path bit-consistent with
+    the segment-sum simulator; pass a quantum (e.g. 0.25 frames) to merge
+    near-equal latencies when a heterogeneous harness would otherwise
+    produce too many classes.
+
+    The per-class scatter is a vectorized ``np.add.at`` (duplicate edges
+    accumulate, so multigraphs are supported).
     """
     lat_frames = np.asarray(links.latency_s, np.float64) * omega_nom
-    q = np.rint(lat_frames / quantum_frames).astype(np.int64)
-    classes, inv = np.unique(q, return_inverse=True)
+    if quantum_frames is None:
+        classes, inv = np.unique(lat_frames, return_inverse=True)
+        if len(classes) > MAX_EXACT_CLASSES:
+            # Heterogeneous latencies (e.g. per-edge jittered cable lengths)
+            # would make C explode and the (C, N, N) stack unaffordable;
+            # merge with a quantum sized from the latency spread so the
+            # class count stays bounded whatever the distribution.
+            spread = float(lat_frames.max() - lat_frames.min())
+            quantum_frames = max(0.25, spread / MAX_EXACT_CLASSES)
+            warnings.warn(
+                f"densify: {len(classes)} exact latency classes > "
+                f"{MAX_EXACT_CLASSES}; merging with quantum_frames="
+                f"{quantum_frames:.3g} (pass quantum_frames explicitly to "
+                "control this)", stacklevel=2)
+        else:
+            lat_classes = classes.astype(np.float32)
+    if quantum_frames is not None:
+        q = np.rint(lat_frames / quantum_frames).astype(np.int64)
+        classes, inv = np.unique(q, return_inverse=True)
+        lat_classes = (classes * quantum_frames).astype(np.float32)
     c = len(classes)
     n = topo.num_nodes
     n_pad = ((n + tile - 1) // tile) * tile
     a = np.zeros((c, n_pad, n_pad), np.float32)
     lam = np.zeros((c, n_pad, n_pad), np.float32)
-    for e in range(topo.num_edges):
-        ci, i, j = int(inv[e]), int(topo.dst[e]), int(topo.src[e])
-        a[ci, i, j] += 1.0
-        lam[ci, i, j] += float(links.beta0[e])
-    lat_classes = (classes * quantum_frames).astype(np.float32)
+    dst = np.asarray(topo.dst, np.int64)
+    src = np.asarray(topo.src, np.int64)
+    np.add.at(a, (inv, dst, src), 1.0)
+    np.add.at(lam, (inv, dst, src), np.asarray(links.beta0, np.float64))
     return (jnp.asarray(a), jnp.asarray(lam), jnp.asarray(lat_classes), n_pad)
 
 
@@ -60,6 +112,7 @@ def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
                                              "interpret", "use_ref"))
 def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
                  interpret: bool = True, use_ref: bool = False):
+    """One control period (per-step baseline path)."""
     if use_ref:
         psi2, nu2, _ = bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat,
                                               kp, beta_off, dt_frames)
@@ -68,12 +121,136 @@ def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
                                kp, beta_off, dt_frames, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
+                                             "num_records", "record_every",
+                                             "interpret", "use_ref"))
+def _fused_engine(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
+                  num_records, record_every, interpret, use_ref):
+    """jit entry for the fused engine; one compile per (B, N, C, statics)."""
+    if use_ref:
+        return bittide_dense_multistep_ref(
+            psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
+            num_records, record_every)
+    # Step-invariant per-node folds, hoisted out of the record grid.
+    deg = a.sum(axis=(0, 2))
+    lamsum = lam_eff.sum(axis=(0, 2))
+    return bittide_fused_pallas(
+        psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
+        num_records=num_records, record_every=record_every,
+        interpret=interpret)
+
+
+def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]:
+    """(B, n) ppm draws -> (B_pad, n_pad) ν_u with inert padding."""
+    b = ppm_u.shape[0]
+    b_pad = ((b + SUBLANE - 1) // SUBLANE) * SUBLANE
+    nu_u = np.zeros((b_pad, n_pad), np.float32)
+    nu_u[:b, :n] = ppm_u * 1e-6
+    return jnp.asarray(nu_u), b_pad
+
+
+def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
+                            steps: int, kp: float, dt: float = 1e-3,
+                            beta_off: float = 0.0, record_every: int = 1,
+                            omega_nom: float = OMEGA_NOM,
+                            interpret: Optional[bool] = None,
+                            use_ref: bool = False,
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched fused synchronization: B draws in one compiled call.
+
+    Args:
+      ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per
+        independent draw (the paper's ±8 ppm Monte Carlo sweeps).
+      steps: control periods to advance (floor-truncated to a multiple of
+        ``record_every``).
+      record_every: in-kernel telemetry decimation.
+      use_ref: run the jnp multistep oracle instead of the Pallas kernel.
+
+    Returns:
+      (freq_ppm (B, R, N), psi (B, N)) with R = steps // record_every.
+    """
+    ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
+    if ppm_u.shape[1] != topo.num_nodes:
+        raise ValueError(
+            f"ppm_u must be (B, {topo.num_nodes}), got {ppm_u.shape}")
+    num_records = steps // record_every
+    if num_records < 1:
+        raise ValueError("steps must be >= record_every")
+    b = ppm_u.shape[0]
+
+    a, lam_eff, lat, n_pad = densify(topo, links, omega_nom)
+    nu_u, b_pad = _pad_batch(ppm_u, topo.num_nodes, n_pad)
+    psi = jnp.zeros_like(nu_u)
+    interp = _auto_interpret(interpret)
+
+    if (not use_ref and not interp
+            and fused_vmem_bytes(b_pad, n_pad, a.shape[0]) > VMEM_BUDGET_BYTES):
+        # Network too large for the VMEM-resident fused kernel on real
+        # hardware: keep old callers working via the tiled per-step kernel,
+        # decimating its per-period telemetry to the requested records.
+        warnings.warn(
+            f"fused kernel resident set exceeds VMEM budget for B={b_pad}, "
+            f"N={n_pad}; falling back to the tiled per-step kernel",
+            stacklevel=2)
+        freqs, psis = [], []
+        for row in ppm_u:
+            f, p = simulate_dense_perstep(
+                topo, links, row, num_records * record_every, kp, dt=dt,
+                beta_off=beta_off, omega_nom=omega_nom, interpret=interp)
+            freqs.append(f[record_every - 1::record_every])
+            psis.append(p)
+        return np.stack(freqs), np.stack(psis)
+
+    psi_f, _, rec = _fused_engine(
+        psi, nu_u, nu_u, a, lam_eff, lat, float(kp), float(beta_off),
+        float(omega_nom * dt), int(num_records), int(record_every),
+        interp, bool(use_ref))
+
+    freq = np.asarray(rec)[:, :b, :topo.num_nodes] * 1e6   # (R, B, N)
+    return (np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
+            np.asarray(psi_f)[:b, :topo.num_nodes])
+
+
+def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
+                   kp: float, dt: float = 1e-3, beta_off: float = 0.0,
+                   record_every: int = 1, omega_nom: float = OMEGA_NOM,
+                   interpret: Optional[bool] = None,
+                   use_ref: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-draw fused run; returns (freq_ppm (R, N), psi (N,))."""
+    freq, psi = simulate_ensemble_dense(
+        topo, links, np.atleast_2d(np.asarray(ppm_u, np.float32)), steps, kp,
+        dt=dt, beta_off=beta_off, record_every=record_every,
+        omega_nom=omega_nom, interpret=interpret, use_ref=use_ref)
+    return freq[0], psi[0]
+
+
 def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    kp: float, dt: float = 1e-3, beta_off: float = 0.0,
                    omega_nom: float = OMEGA_NOM,
                    interpret: Optional[bool] = None,
                    use_ref: bool = False) -> Tuple[np.ndarray, np.ndarray]:
-    """Fused-kernel synchronization run; returns (freq_ppm (T,N), psi (N,))."""
+    """Fused-kernel synchronization run; returns (freq_ppm (T,N), psi (N,)).
+
+    Back-compat API (per-period telemetry); delegates to the fused
+    multi-period engine with ``record_every=1``.
+    """
+    return simulate_fused(topo, links, ppm_u, steps, kp, dt=dt,
+                          beta_off=beta_off, record_every=1,
+                          omega_nom=omega_nom, interpret=interpret,
+                          use_ref=use_ref)
+
+
+def simulate_dense_perstep(topo: Topology, links: LinkParams, ppm_u,
+                           steps: int, kp: float, dt: float = 1e-3,
+                           beta_off: float = 0.0,
+                           omega_nom: float = OMEGA_NOM,
+                           interpret: Optional[bool] = None,
+                           use_ref: bool = False
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """The pre-fusion engine: one ``pallas_call`` per control period inside
+    a ``lax.scan``.  Kept as the benchmark baseline — it re-streams the
+    (C, N, N) adjacency and round-trips the (N,) state through HBM every
+    period, which is exactly the overhead the fused engine removes."""
     a, lam_eff, lat, n_pad = densify(topo, links, omega_nom)
     nu_u = jnp.zeros((n_pad,), jnp.float32).at[:topo.num_nodes].set(
         jnp.asarray(np.asarray(ppm_u, np.float32) * 1e-6))

@@ -12,20 +12,34 @@ coordinate form):
 A is a (C, N, N) stack of 0/1 adjacency masks, one per physical-latency
 class (the paper's networks have very few distinct latencies: short copper,
 short fiber, one long fiber).  This oracle materializes the full (C, N, N)
-occupancy tensor; the Pallas kernel computes the same values tile-by-tile
-in VMEM without ever materializing β.
+occupancy tensor; the Pallas kernels compute the same values in VMEM
+without ever materializing β.
+
+`bittide_dense_multistep_ref` extends the oracle to the fused engine's
+semantics: many control periods per call, ν telemetry decimated to every
+``record_every`` periods, and an optional leading batch axis over
+independent oscillator draws — the parity target for
+`repro.kernels.bittide_step.bittide_fused_pallas`.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["bittide_dense_step_ref", "occupancy_ref"]
+__all__ = ["bittide_dense_step_ref", "bittide_dense_multistep_ref",
+           "occupancy_ref"]
 
 
 def occupancy_ref(psi, nu, a, lam_eff, lat_frames):
-    """(C, N, N) occupancy tensor β (zero where no edge)."""
+    """(C, N, N) summed occupancy tensor β (zero where no edge).
+
+    Multigraph semantics: entry (c, i, j) is the SUM of β over the
+    A[c,i,j] parallel edges — the phase term scales with multiplicity
+    while λeff already accumulates per-edge in densify, so it is added
+    unscaled (multiplying it by A again would double-count it).
+    """
     x = psi[None, None, :] - nu[None, None, :] * lat_frames[:, None, None]
-    beta = a * (x - psi[None, :, None] + lam_eff)
+    beta = a * (x - psi[None, :, None]) + lam_eff
     return beta
 
 
@@ -39,3 +53,40 @@ def bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
     nu_next = nu_u + c_rel + nu_u * c_rel
     psi_next = psi + nu_next * dt_frames
     return psi_next, nu_next, err
+
+
+def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
+                                kp, beta_off, dt_frames,
+                                num_records: int, record_every: int):
+    """Multi-period, optionally batched oracle for the fused engine.
+
+    Args:
+      psi, nu, nu_u: (N,) or (B, N) float32 state.
+      a, lam_eff, lat_frames: dense topology (shared across the batch).
+      kp, beta_off, dt_frames: controller/integration constants.
+      num_records: telemetry records to emit.
+      record_every: control periods per record.
+
+    Returns:
+      (psi_final, nu_final, nu_rec) with nu_rec of shape
+      (num_records, N) or (num_records, B, N).
+    """
+    step = bittide_dense_step_ref
+    if psi.ndim == 2:
+        step = jax.vmap(
+            bittide_dense_step_ref,
+            in_axes=(0, 0, 0, None, None, None, None, None, None))
+
+    def one_period(_, carry):
+        p, v = carry
+        p2, v2, _ = step(p, v, nu_u, a, lam_eff, lat_frames,
+                         kp, beta_off, dt_frames)
+        return p2, v2
+
+    def one_record(carry, _):
+        carry = jax.lax.fori_loop(0, record_every, one_period, carry)
+        return carry, carry[1]
+
+    (psi, nu), rec = jax.lax.scan(one_record, (psi, nu), None,
+                                  length=num_records)
+    return psi, nu, rec

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.base import SHAPES, skip_reason
-from repro.launch.hloanalysis import collective_stats
+from repro.launch.hloanalysis import collective_stats, cost_analysis_dict
 from repro.launch.mesh import dp_axes_of, make_production_mesh
 from repro.launch.train import (abstract_serve_args, abstract_train_args,
                                 make_decode_step, make_prefill_step,
@@ -80,7 +80,7 @@ def _compile(cfg, shape, mesh):
     lowered = jax.jit(step).lower(*args)
     compiled = lowered.compile()
     dt = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     mem = {}
     if ma is not None:

@@ -19,7 +19,19 @@ from __future__ import annotations
 import re
 from typing import Dict
 
-__all__ = ["collective_stats", "DTYPE_BYTES"]
+__all__ = ["collective_stats", "cost_analysis_dict", "DTYPE_BYTES"]
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-program list of dicts (usually length 1), newer
+    jax returns the dict directly; either way callers want one flat dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,

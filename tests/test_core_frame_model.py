@@ -1,7 +1,7 @@
 """Unit + property tests for the abstract frame model simulation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import (ControllerConfig, SimConfig, fully_connected, hourglass,
                         cube, ring, random_regular, simulate, make_links)

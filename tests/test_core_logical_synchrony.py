@@ -2,7 +2,7 @@
 and AOT schedules (the consequences in paper §1.4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import (ControllerConfig, SimConfig, fully_connected, ring,
                         make_links, simulate)

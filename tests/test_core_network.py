@@ -1,7 +1,7 @@
 """BittideNetwork facade + AOT schedule property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import (BittideNetwork, ControllerConfig, OscillatorSpec,
                         SimConfig, fully_connected, make_links, ring)

@@ -1,0 +1,236 @@
+"""Fused multi-period engine + batched ensemble: parity and invariants.
+
+The fused Pallas kernel (one ``pallas_call`` advancing many control periods
+with in-kernel telemetry decimation) is validated against two independent
+implementations: the jnp multistep oracle (same dense math, no Pallas) and
+the production segment-sum simulator in ``repro.core.frame_model`` (edge-
+list math, scan-of-periods) — at every record point.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, SimConfig, fully_connected,
+                        make_links, random_regular, simulate,
+                        simulate_ensemble, torus3d)
+from repro.core.frame_model import OMEGA_NOM, _jitted_run
+from repro.kernels import (densify, simulate_dense, simulate_dense_perstep,
+                           simulate_ensemble_dense, simulate_fused)
+from repro.kernels.ops import _fused_engine
+
+
+PARITY_TOPOS = [fully_connected(8), torus3d(4)]
+
+
+@pytest.mark.parametrize("topo", PARITY_TOPOS, ids=lambda t: t.name)
+def test_fused_matches_segment_sum_simulator(topo):
+    """ν trajectories match the frame-model simulator at ALL record points
+    (proportional controller, quantize off) to <= 1e-6 ppm."""
+    links = make_links(topo, cable_m=2.0)
+    rng = np.random.default_rng(7)
+    ppm = rng.uniform(-8, 8, topo.num_nodes)
+    steps, rec = 300, 10
+    freq, _ = simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                             dt=1e-3, record_every=rec)
+    res = simulate(topo, links, ControllerConfig(kp=2e-9),
+                   ppm.astype(np.float32),
+                   SimConfig(dt=1e-3, steps=steps, record_every=rec))
+    assert freq.shape == res.freq_ppm.shape
+    np.testing.assert_allclose(freq, res.freq_ppm, rtol=0, atol=1e-6)
+
+
+def test_fused_matches_multistep_oracle():
+    topo = random_regular(130, 3, 0)  # crosses a tile boundary
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(3).uniform(-8, 8, topo.num_nodes)
+    kw = dict(steps=120, kp=2e-9, dt=1e-3, record_every=12)
+    f_pallas, p_pallas = simulate_fused(topo, links, ppm, **kw)
+    f_ref, p_ref = simulate_fused(topo, links, ppm, use_ref=True, **kw)
+    np.testing.assert_allclose(f_pallas, f_ref, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(p_pallas, p_ref, rtol=1e-5, atol=1e-3)
+
+
+def test_fused_decimation_samples_per_period_trajectory():
+    """record_every=k must return exactly every k-th per-period record."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(11).uniform(-8, 8, 8)
+    full, _ = simulate_fused(topo, links, ppm, steps=60, kp=2e-9,
+                             record_every=1)
+    dec, _ = simulate_fused(topo, links, ppm, steps=60, kp=2e-9,
+                            record_every=15)
+    np.testing.assert_array_equal(dec, full[14::15])
+
+
+def test_simulate_dense_delegates_to_fused():
+    """Back-compat wrapper: same trajectory as the old per-step engine."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(5).uniform(-8, 8, 8)
+    f_fused, p_fused = simulate_dense(topo, links, ppm, steps=80, kp=2e-9)
+    f_step, p_step = simulate_dense_perstep(topo, links, ppm, steps=80,
+                                            kp=2e-9)
+    np.testing.assert_allclose(f_fused, f_step, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(p_fused, p_step, rtol=1e-5, atol=1e-3)
+
+
+def test_ensemble_dense_matches_per_draw_loop():
+    """Batched fused kernel == B independent single-draw runs."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    B = 16
+    ppm = np.random.default_rng(1).uniform(-8, 8, (B, 8))
+    fB, pB = simulate_ensemble_dense(topo, links, ppm, steps=100, kp=2e-9,
+                                     record_every=10)
+    assert fB.shape == (B, 10, 8)
+    for b in range(0, B, 5):
+        f1, p1 = simulate_fused(topo, links, ppm[b], steps=100, kp=2e-9,
+                                record_every=10)
+        np.testing.assert_allclose(fB[b], f1, rtol=0, atol=1e-6)
+        np.testing.assert_allclose(pB[b], p1, rtol=1e-5, atol=1e-3)
+
+
+def test_ensemble_dense_single_compile():
+    """B >= 16 draws run through ONE jit entry (no per-draw compile)."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(2).uniform(-8, 8, (16, 8))
+    before = _fused_engine._cache_size()
+    simulate_ensemble_dense(topo, links, ppm, steps=40, kp=2e-9,
+                            record_every=10)
+    after = _fused_engine._cache_size()
+    assert after <= before + 1
+
+
+def test_simulate_ensemble_matches_per_draw_loop():
+    """frame_model batched lane == looped simulate(), bit-for-bit."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ControllerConfig(kp=2e-8)
+    cfg = SimConfig(dt=1e-3, steps=400, record_every=20)
+    B = 16
+    ppm = np.random.default_rng(4).uniform(-8, 8, (B, 8)).astype(np.float32)
+    ens = simulate_ensemble(topo, links, ctrl, ppm, cfg)
+    assert ens.num_draws == B and ens.freq_ppm.shape == (B, 20, 8)
+    for b in (0, 7, 15):
+        single = simulate(topo, links, ctrl, ppm[b], cfg)
+        np.testing.assert_array_equal(ens.freq_ppm[b], single.freq_ppm)
+        np.testing.assert_array_equal(ens.beta[b], single.beta)
+    # derived statistics are per-draw
+    assert ens.convergence_times(1.0).shape == (B,)
+    assert ens.final_spread_ppm.shape == (B,)
+
+
+def test_no_recompile_across_dt_and_record_every_sweeps():
+    """dt / record_every / noise sweeps must reuse one executable."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ControllerConfig(kp=2e-8)
+    ppm = np.random.default_rng(6).uniform(-8, 8, 8).astype(np.float32)
+    simulate(topo, links, ctrl, ppm,
+             SimConfig(dt=1e-3, steps=200, record_every=20))
+    size0 = _jitted_run()._cache_size()
+    for dt, rec, noise in [(2e-3, 20, 0.0), (5e-4, 10, 0.0),
+                           (1e-3, 40, 0.1)]:
+        simulate(topo, links, ctrl, ppm,
+                 SimConfig(dt=dt, steps=rec * 10, record_every=rec,
+                           telemetry_noise_ppm=noise))
+    assert _jitted_run()._cache_size() == size0
+
+
+def _densify_loop_reference(topo, links, omega_nom, quantum_frames, tile):
+    """The pre-vectorization per-edge loop, kept as the regression oracle."""
+    lat_frames = np.asarray(links.latency_s, np.float64) * omega_nom
+    if quantum_frames is None:
+        classes, inv = np.unique(lat_frames, return_inverse=True)
+        lat_classes = classes.astype(np.float32)
+    else:
+        q = np.rint(lat_frames / quantum_frames).astype(np.int64)
+        classes, inv = np.unique(q, return_inverse=True)
+        lat_classes = (classes * quantum_frames).astype(np.float32)
+    c = len(classes)
+    n_pad = ((topo.num_nodes + tile - 1) // tile) * tile
+    a = np.zeros((c, n_pad, n_pad), np.float32)
+    lam = np.zeros((c, n_pad, n_pad), np.float32)
+    for e in range(topo.num_edges):
+        ci, i, j = int(inv[e]), int(topo.dst[e]), int(topo.src[e])
+        a[ci, i, j] += 1.0
+        lam[ci, i, j] += float(links.beta0[e])
+    return a, lam, lat_classes, n_pad
+
+
+@pytest.mark.parametrize("quantum", [None, 0.25])
+def test_densify_scatter_matches_loop_on_multigraph(quantum):
+    """np.add.at densify == per-edge loop, including duplicate (multi)edges
+    and multiple latency classes."""
+    from repro.core import Topology
+    from repro.core.frame_model import make_links
+
+    rng = np.random.default_rng(42)
+    n, e = 30, 120
+    src = rng.integers(0, n, e)
+    dst = (src + 1 + rng.integers(0, n - 1, e)) % n   # no self-loops
+    # duplicate a third of the edges -> a genuine multigraph
+    dup = rng.integers(0, e, e // 3)
+    src = np.concatenate([src, src[dup]]).astype(np.int32)
+    dst = np.concatenate([dst, dst[dup]]).astype(np.int32)
+    topo = Topology(n, src, dst, name="multigraph")
+    cable = rng.choice([2.0, 2.0, 1000.0], size=topo.num_edges)
+    links = make_links(topo, cable_m=cable,
+                       beta0=rng.normal(0, 3, topo.num_edges))
+
+    a, lam, lat, n_pad = densify(topo, links, quantum_frames=quantum)
+    a_ref, lam_ref, lat_ref, n_pad_ref = _densify_loop_reference(
+        topo, links, OMEGA_NOM, quantum, 128)
+    assert n_pad == n_pad_ref
+    np.testing.assert_array_equal(np.asarray(a), a_ref)
+    np.testing.assert_allclose(np.asarray(lam), lam_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(lat), lat_ref)
+    # multigraph actually exercised: some multiplicity > 1
+    assert np.asarray(a).max() > 1
+
+
+def test_densify_heterogeneous_latencies_fall_back_to_quantum():
+    """Per-edge jittered cable lengths must not explode the class count:
+    above MAX_EXACT_CLASSES densify merges with the 0.25-frame quantum."""
+    from repro.kernels.ops import MAX_EXACT_CLASSES
+
+    topo = random_regular(20, 3, 2)
+    rng = np.random.default_rng(0)
+    links = make_links(topo, cable_m=rng.uniform(1.5, 2.5, topo.num_edges))
+    with pytest.warns(UserWarning, match="latency classes"):
+        a, lam, lat, npad = densify(topo, links)
+    assert a.shape[0] <= MAX_EXACT_CLASSES
+    # total multiplicity is preserved across the merge
+    assert int(np.asarray(a).sum()) == topo.num_edges
+
+
+def test_multigraph_oracle_matches_kernel():
+    """Duplicate edges with nonzero beta0: the jnp oracle must agree with
+    the Pallas kernels (regression: lam_eff used to be double-counted by
+    the A mask on multi-edges)."""
+    from repro.core import Topology
+
+    rng = np.random.default_rng(13)
+    src = np.array([0, 1, 1, 2, 2, 0, 0, 1], np.int32)   # 0->1 twice both ways
+    dst = np.array([1, 0, 0, 1, 0, 2, 1, 0], np.int32)
+    topo = Topology(3, src, dst, name="tiny_multigraph")
+    links = make_links(topo, cable_m=2.0,
+                       beta0=rng.normal(0, 3, topo.num_edges))
+    ppm = rng.uniform(-8, 8, 3)
+    kw = dict(steps=20, kp=2e-9, dt=1e-3, record_every=5)
+    f_pallas, _ = simulate_fused(topo, links, ppm, **kw)
+    f_ref, _ = simulate_fused(topo, links, ppm, use_ref=True, **kw)
+    np.testing.assert_allclose(f_pallas, f_ref, rtol=0, atol=1e-6)
+
+
+def test_ensemble_padding_rows_and_nodes_inert():
+    """Batch padding to the sublane quantum must not leak into real draws."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(9).uniform(-8, 8, (3, 8))   # B=3 -> pad to 8
+    fB, pB = simulate_ensemble_dense(topo, links, ppm, steps=50, kp=2e-9,
+                                     record_every=10)
+    assert fB.shape == (3, 5, 8)
+    f1, _ = simulate_fused(topo, links, ppm[2], steps=50, kp=2e-9,
+                           record_every=10)
+    np.testing.assert_allclose(fB[2], f1, rtol=0, atol=1e-6)

@@ -114,7 +114,9 @@ def test_elastic_remesh_and_resume():
         assert n == 3
         p4, o4, loss4 = step(state["params"], state["opt"], data.batch(3), 3)
         print("LOSS8", float(loss8), "LOSS4", float(loss4))
-        assert abs(float(loss8) - float(loss4)) < 1e-4
+        # restore is exact, but the 4-device step reduces in a different
+        # order than the 8-device one -> O(1e-4) float32 drift is expected
+        assert abs(float(loss8) - float(loss4)) < 5e-4
         print("ELASTIC_OK")
     """)
     assert "ELASTIC_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-3000:]
@@ -129,7 +131,7 @@ def test_mini_dryrun_8dev():
         from repro.configs import get_config
         from repro.configs.base import ShapeSpec
         from repro.launch.train import make_train_step, abstract_train_args
-        from repro.launch.hloanalysis import collective_stats
+        from repro.launch.hloanalysis import collective_stats, cost_analysis_dict
 
         cfg = get_config("internlm2-1.8b").reduced()
         shape = ShapeSpec("train", "train", 64, 8)
@@ -138,7 +140,7 @@ def test_mini_dryrun_8dev():
         args = abstract_train_args(cfg, shape, mesh, ("pod", "data"))
         lowered = jax.jit(make_train_step(cfg)).lower(*args)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         coll = collective_stats(compiled.as_text())
         assert ca.get("flops", 0) > 0
         assert coll["total"]["count"] > 0, "expected collectives on a 3-axis mesh"

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.data import DataConfig, SyntheticPipeline
