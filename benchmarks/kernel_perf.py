@@ -17,9 +17,10 @@ import numpy as np
 
 from repro.core import fully_connected, make_links, simulate_ensemble, torus3d
 from repro.core.controller import ControllerConfig
-from repro.core.frame_model import SimConfig, simulate
+from repro.core.frame_model import SimConfig, _jitted_run_ensemble, simulate
 from repro.kernels import (bittide_step, densify, simulate_dense_perstep,
                            simulate_ensemble_dense, simulate_fused)
+from repro.kernels.ops import _fused_engine
 from repro.kernels.ref import bittide_dense_step_ref
 
 
@@ -159,6 +160,90 @@ def bench_ensemble_throughput():
             f"batched_speedup_vs_sublane_chunks={us_chunked / us_batched:.2f}")
 
 
+def bench_tiled_vs_fused():
+    """The tiled lane: torus3d(8) (512 nodes, beyond the resident cutoff)
+    through the j-panel streamed engine vs the VMEM-resident fused engine
+    on IDENTICAL work.
+
+    Gates: the dispatch heuristic must send torus3d(8) to the tiled path
+    (pass_path), and the streamed trajectory must match the resident one
+    at every record point (pass_parity).  ratio_vs_resident measures the
+    streaming overhead (panel re-fetch per period + the period loop moving
+    from an in-kernel fori_loop into the grid) — informational, since the
+    tiled engine exists for networks where the resident one cannot run.
+    """
+    topo = torus3d(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, topo.num_nodes)
+    steps, record_every = 32, 8
+
+    def run_auto():
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                              record_every=record_every)
+
+    def run_resident():
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                              record_every=record_every, engine="fused")
+
+    res_auto = run_auto()
+    res_res = run_resident()
+    err = float(np.abs(res_auto[0] - res_res[0]).max())
+    us_tiled = _bench(run_auto, iters=3)
+    us_res = _bench(run_resident, iters=3)
+    node_steps = topo.num_nodes * steps
+    ns_tiled = node_steps / (us_tiled / 1e6)
+    return ("kernel_tiled_vs_fused", us_tiled,
+            f"engine={res_auto.engine};tile_j={res_auto.tile_j};"
+            f"nodes={topo.num_nodes};node_steps_per_s_tiled={ns_tiled:.3e};"
+            f"ratio_vs_resident={us_tiled / us_res:.2f};"
+            f"max_err_ppm={err:.2e};"
+            f"pass_path={'PASS' if res_auto.engine == 'tiled' else 'FAIL'};"
+            f"pass_parity={'PASS' if err <= 1e-6 else 'FAIL'}")
+
+
+def bench_gain_sweep_compile():
+    """Fig-15 lane: an 8-point kp sweep as ONE batched call per engine.
+
+    The gains are traced per-draw state, so the second sweep (different
+    gain vector) must add ZERO compile-cache entries in both the fused
+    Pallas lane and the segment-sum vmap lane — that compile amortization
+    is the measured product, the wall time rides along.
+    """
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    kps = np.geomspace(5e-9, 5e-8, 8)
+    draw = np.random.default_rng(3).uniform(-8, 8, topo.num_nodes)
+    ppm = np.tile(draw, (len(kps), 1)).astype(np.float32)
+    cfg = SimConfig(dt=1e-3, steps=1000, record_every=20, record_beta=False)
+
+    def run_dense(k):
+        return simulate_ensemble_dense(topo, links, ppm, steps=200, kp=k,
+                                       record_every=20)
+
+    def run_segsum(k):
+        return simulate_ensemble(topo, links, ControllerConfig(kp=k),
+                                 ppm, cfg)
+
+    run_dense(kps)                       # warm compile
+    d0 = _fused_engine._cache_size()
+    us_dense = _bench(lambda: run_dense(kps * 1.3), iters=3)
+    dense_compiles = _fused_engine._cache_size() - d0
+
+    ens = run_segsum(kps)                # warm compile
+    s0 = _jitted_run_ensemble()._cache_size()
+    t0 = time.perf_counter()
+    ens = run_segsum(kps * 1.3)
+    us_seg = (time.perf_counter() - t0) * 1e6
+    seg_compiles = _jitted_run_ensemble()._cache_size() - s0
+    conv = ens.convergence_times(1.0)
+    mono = bool(np.all(np.diff(conv) <= 1e-9))
+    return ("kernel_gain_sweep_compile", us_dense,
+            f"gains={len(kps)};dense_sweep_compiles={dense_compiles};"
+            f"segsum_sweep_compiles={seg_compiles};us_segsum={us_seg:.1f};"
+            f"conv_monotone={mono};"
+            f"pass_one_compile={'PASS' if dense_compiles == 0 and seg_compiles == 0 else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -204,10 +289,12 @@ def bench_sim_engine_throughput():
 
 
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
-       bench_fused_vs_per_step, bench_ensemble_throughput,
+       bench_fused_vs_per_step, bench_tiled_vs_fused,
+       bench_gain_sweep_compile, bench_ensemble_throughput,
        bench_ensemble_xla_engine, bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
-# benches for the fused engine, skipping the 10k-node torus.
-SMOKE = [bench_fused_vs_per_step, bench_ensemble_throughput,
+# benches for the fused/tiled engines, skipping the 10k-node torus.
+SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
+         bench_gain_sweep_compile, bench_ensemble_throughput,
          bench_ensemble_xla_engine]

@@ -73,6 +73,21 @@ def main():
         print(f"  dt={dt*1e3:4.1f} ms -> conv_1ppm p50="
               f"{np.median(conv)*1e3:6.1f} ms")
 
+    # Fig-15-style proportional-gain sweep: kp is traced PER-DRAW state,
+    # so B gains over one oscillator draw run as a single batched kernel
+    # and the whole sweep costs one compile (in both engines).
+    kps = np.geomspace(5e-9, 5e-8, 8)
+    draw = np.random.default_rng(2).uniform(-8, 8, topo.num_nodes)
+    tiled = np.tile(draw, (len(kps), 1)).astype(np.float32)
+    cfg = SimConfig(dt=1e-3, steps=1500, record_every=20, record_beta=False)
+    t0 = time.time()
+    ens = simulate_ensemble(topo, links, ControllerConfig(kp=kps), tiled, cfg)
+    conv = ens.convergence_times(1.0)
+    print(f"\nkp sweep ({len(kps)} gains, one compile, "
+          f"{time.time()-t0:.2f} s wall):")
+    for kp, c in zip(kps, conv):
+        print(f"  kp={kp:.2e} -> conv_1ppm={c*1e3:6.1f} ms")
+
 
 if __name__ == "__main__":
     main()

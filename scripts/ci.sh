@@ -1,16 +1,27 @@
 #!/usr/bin/env bash
-# Per-PR gate: tier-1 tests + fast benchmark smoke with a JSON perf record.
+# Per-PR gate: tier-1 tests + cross-engine parity matrix + fast benchmark
+# smoke with a JSON perf record compared against the committed baseline.
 #
 #   scripts/ci.sh [extra pytest args...]
 #
-# Writes BENCH_kernels.json at the repo root (the fused-engine perf
-# trajectory; see benchmarks/README.md).  Exits nonzero if tests fail or
-# any smoke bench reports FAIL.
+# Writes BENCH_kernels.json at the repo root (the fused/tiled-engine perf
+# trajectory; see benchmarks/README.md).  Exits nonzero if tests fail, any
+# smoke bench reports FAIL, or the baseline comparison finds a hard gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 
+# The cross-engine parity matrix + dispatch/gain-sweep gates must run even
+# when the caller filtered the main pytest invocation down to a subset; a
+# no-argument run already covered them above, so don't pay for them twice.
+if [ $# -gt 0 ]; then
+    python -m pytest -q tests/test_kernels_fused.py \
+        tests/test_engine_dispatch.py tests/test_gain_sweep.py
+fi
+
 python -m benchmarks.run --smoke --json BENCH_kernels.json
-echo "ci: tests green, BENCH_kernels.json written"
+python scripts/compare_bench.py BENCH_kernels.json \
+    benchmarks/baselines/BENCH_kernels.json
+echo "ci: tests green, parity matrix green, BENCH_kernels.json written"

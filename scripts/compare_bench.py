@@ -1,0 +1,71 @@
+"""Compare a fresh BENCH_kernels.json against the committed baseline.
+
+    python scripts/compare_bench.py BENCH_kernels.json \
+        benchmarks/baselines/BENCH_kernels.json
+
+Hard gates (exit 1):
+  - any `pass_*` derived field reporting FAIL in the current run;
+  - a bench present in the baseline but missing (or errored) now.
+
+Soft gates (warn only): relative-throughput metrics regressing beyond
+REGRESSION_RATIO — baselines record one machine's CPU-interpret numbers,
+so cross-machine absolute comparisons are noise (benchmarks/README.md);
+the warning exists to flag trajectory regressions on a stable machine.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# Derived metrics treated as higher-is-better perf trajectory signals.
+PERF_KEYS = ("speedup", "node_steps_per_s", "node_steps_per_s_fused",
+             "node_steps_per_s_tiled", "batched_speedup_vs_loop")
+REGRESSION_RATIO = 0.7   # warn when current < 70% of baseline
+
+
+def main(current_path: str, baseline_path: str) -> int:
+    with open(current_path) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    failed = []
+    for bench, row in sorted(current.items()):
+        derived = row.get("derived") or {}
+        if "error" in derived:
+            failed.append(f"{bench}: errored ({derived['error']})")
+        for k, v in derived.items():
+            if k.startswith("pass_") and v != "PASS":
+                failed.append(f"{bench}: {k}={v}")
+
+    for bench in sorted(baseline):
+        if bench not in current:
+            failed.append(f"{bench}: present in baseline, missing from run")
+
+    warned = 0
+    for bench, row in sorted(current.items()):
+        base = (baseline.get(bench) or {}).get("derived") or {}
+        derived = row.get("derived") or {}
+        for k in PERF_KEYS:
+            cur_v, base_v = derived.get(k), base.get(k)
+            if (isinstance(cur_v, (int, float))
+                    and isinstance(base_v, (int, float)) and base_v > 0
+                    and cur_v < REGRESSION_RATIO * base_v):
+                warned += 1
+                print(f"compare_bench: WARN {bench}.{k} = {cur_v:.3g} < "
+                      f"{REGRESSION_RATIO:.0%} of baseline {base_v:.3g}")
+
+    if failed:
+        for msg in failed:
+            print(f"compare_bench: FAIL {msg}")
+        return 1
+    print(f"compare_bench: {len(current)} benches vs baseline OK "
+          f"({warned} perf warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -21,12 +21,21 @@ Controller kinds
 - ``pi`` — proportional–integral variant (beyond-paper; the integral term
   removes the steady-state buffer offset that pure-P control leaves, cf. the
   consensus literature the paper cites [33]).
+
+Gain sweeps
+-----------
+``kp`` and ``beta_off`` are *traced* through both simulation engines: they
+never key a compile, and in the batched ensemble lanes they may be arrays
+with one entry per draw (Fig-15-style gain sweeps run as ONE compiled
+batched kernel).  ``ControllerConfig.static_key()`` is the hashable copy
+the jit caches key on — identical for every gain value.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["ControllerConfig", "hardware_gain", "controller_init", "controller_step"]
 
@@ -43,8 +52,18 @@ class ControllerConfig:
     def __post_init__(self):
         if self.kind not in ("proportional", "discrete", "pi"):
             raise ValueError(f"unknown controller kind {self.kind!r}")
-        if self.kp < 0 or self.fs <= 0:
+        # kp / beta_off may be per-draw arrays (batched gain sweeps).
+        if np.any(np.asarray(self.kp) < 0) or self.fs <= 0:
             raise ValueError("kp must be >= 0 and fs > 0")
+
+    def static_key(self) -> "ControllerConfig":
+        """Hashable copy with the traced gains zeroed.
+
+        ``kp`` and ``beta_off`` are traced runtime values in both engines;
+        this is the config the jit caches key on, so sweeping gains (scalar
+        or per-draw arrays) can never trigger a recompile.
+        """
+        return dataclasses.replace(self, kp=0.0, beta_off=0.0)
 
 
 def hardware_gain(kp_hw: float, fs: float) -> float:
@@ -59,7 +78,7 @@ def controller_init(cfg: ControllerConfig, num_nodes: int):
     return {"c_est": zeros, "integ": zeros}
 
 
-def controller_step(cfg: ControllerConfig, state, agg_err):
+def controller_step(cfg: ControllerConfig, state, agg_err, kp=None):
     """One control update.
 
     Args:
@@ -68,12 +87,17 @@ def controller_step(cfg: ControllerConfig, state, agg_err):
       agg_err: (N,) summed occupancy error Σ_{j→i}(β − β_off) per node
         (the β_off subtraction happens in the caller so that the setpoint
         can vary per edge if needed).
+      kp: traced proportional gain overriding ``cfg.kp`` — the simulation
+        engines pass the gain here so it never keys a compile (and can be
+        a per-draw value under vmap).
 
     Returns:
       (new_state, c_corr) where c_corr is the applied relative frequency
       correction per node.
     """
-    c_rel = cfg.kp * agg_err
+    if kp is None:
+        kp = cfg.kp
+    c_rel = kp * agg_err
     if cfg.kind == "proportional":
         return state, c_rel
     if cfg.kind == "pi":

@@ -40,7 +40,8 @@ from .controller import ControllerConfig, controller_init, controller_step
 from .topology import Topology
 
 __all__ = ["LinkParams", "SimConfig", "SimResult", "EnsembleResult",
-           "simulate", "simulate_ensemble", "make_links", "OMEGA_NOM"]
+           "simulate", "simulate_ensemble", "make_links", "broadcast_gain",
+           "OMEGA_NOM"]
 
 OMEGA_NOM = 125e6  # frames/s — the paper's 125 MHz node clock.
 
@@ -115,6 +116,9 @@ class SimResult:
     topo: Topology
     links: LinkParams
     cfg: SimConfig
+    # Which engine produced this result ("segment-sum" for this module's
+    # scatter-add scan; the dense Pallas runners stamp their kernel path).
+    engine: str = "segment-sum"
 
     @property
     def final_freq_ppm(self) -> np.ndarray:
@@ -155,6 +159,7 @@ class EnsembleResult:
     topo: Topology
     links: LinkParams
     cfg: SimConfig
+    engine: str = "segment-sum"
 
     @property
     def num_draws(self) -> int:
@@ -178,21 +183,23 @@ class EnsembleResult:
             freq_ppm=self.freq_ppm[b], beta=self.beta[b], times=self.times,
             psi=self.psi[b], nu=self.nu[b],
             c_state={k: v[b] for k, v in self.c_state.items()},
-            topo=self.topo, links=self.links, cfg=self.cfg)
+            topo=self.topo, links=self.links, cfg=self.cfg,
+            engine=self.engine)
 
 
 def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
-              noise_ppm, noise_key, ctrl: ControllerConfig, num_nodes: int,
-              outer: int, quantize_beta: bool, record_beta: bool):
+              kp, beta_off, noise_ppm, noise_key, ctrl: ControllerConfig,
+              num_nodes: int, outer: int, quantize_beta: bool,
+              record_beta: bool):
     """Scan `outer` telemetry records; fori_loop `inner` control periods each.
 
-    ``dt_frames``, ``inner`` and ``noise_ppm`` are traced (not static), so
-    sweeps over the control period, the telemetry decimation, or the
-    observation-noise level reuse one compiled executable; only topology
-    size, ``outer`` and the controller/record flags key the compile cache.
+    ``dt_frames``, ``inner``, ``kp``, ``beta_off`` and ``noise_ppm`` are
+    traced (not static), so sweeps over the control period, the telemetry
+    decimation, the controller gains, or the observation-noise level reuse
+    one compiled executable; only topology size, ``outer`` and the
+    controller/record flags key the compile cache (``ctrl`` arrives with
+    its gains zeroed via ``ControllerConfig.static_key``).
     """
-
-    beta_off = jnp.float32(ctrl.beta_off)
 
     def occupancies(psi, nu):
         # ν is piecewise-constant over the period, so the delayed-phase
@@ -207,7 +214,7 @@ def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
         # Per-node aggregation: scatter-add (the supported successor of the
         # deprecated jax.ops.segment_sum; identical XLA scatter lowering).
         err = jnp.zeros((num_nodes,), beta.dtype).at[dst].add(beta - beta_off)
-        c_state, c_corr = controller_step(ctrl, c_state, err)
+        c_state, c_corr = controller_step(ctrl, c_state, err, kp)
         # (1+ν_u)(1+c) − 1 without forming 1 + O(1e-6) (f32 cancellation)
         nu_next = nu_u + c_corr + nu_u * c_corr
         psi_next = psi + nu_next * dt_frames
@@ -250,16 +257,20 @@ def _jitted_run():
 
 
 def _run_ensemble_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
-                       noise_ppm, noise_keys, ctrl, num_nodes, outer,
-                       quantize_beta, record_beta):
-    """vmap of `_run_core` over a leading batch of oscillator draws."""
+                       kp, beta_off, noise_ppm, noise_keys, ctrl, num_nodes,
+                       outer, quantize_beta, record_beta):
+    """vmap of `_run_core` over a leading batch of oscillator draws.
 
-    def one(nu_u_row, key):
+    ``kp`` and ``beta_off`` are (B,) per-draw gains — the batched
+    controller-gain axis (Fig-15-style kp sweeps in one compile).
+    """
+
+    def one(nu_u_row, key, kp_row, boff_row):
         return _run_core(src, dst, lat_frames, lam_eff, nu_u_row, dt_frames,
-                         inner, noise_ppm, key, ctrl, num_nodes, outer,
-                         quantize_beta, record_beta)
+                         inner, kp_row, boff_row, noise_ppm, key, ctrl,
+                         num_nodes, outer, quantize_beta, record_beta)
 
-    return jax.vmap(one)(nu_u, noise_keys)
+    return jax.vmap(one)(nu_u, noise_keys, kp, beta_off)
 
 
 @functools.lru_cache(maxsize=None)
@@ -288,14 +299,18 @@ def simulate(
     ppm_u = np.asarray(ppm_u, np.float32)
     if ppm_u.shape != (topo.num_nodes,):
         raise ValueError(f"ppm_u must be ({topo.num_nodes},), got {ppm_u.shape}")
+    if np.asarray(ctrl.kp).ndim or np.asarray(ctrl.beta_off).ndim:
+        raise ValueError("simulate() takes scalar gains; per-draw kp/beta_off "
+                         "arrays are the batched axis of simulate_ensemble()")
     inner, outer = _split_steps(cfg)
     args = _sim_arrays(topo, links, cfg)
 
     (psi, nu, c_state), freq, beta = _jitted_run()(
         *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
         jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
+        jnp.float32(ctrl.kp), jnp.float32(ctrl.beta_off),
         jnp.float32(cfg.telemetry_noise_ppm), jax.random.PRNGKey(cfg.seed),
-        ctrl=ctrl, num_nodes=topo.num_nodes, outer=outer,
+        ctrl=ctrl.static_key(), num_nodes=topo.num_nodes, outer=outer,
         quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
 
     times = (np.arange(1, outer + 1) * inner) * cfg.dt
@@ -320,6 +335,22 @@ def _sim_arrays(topo: Topology, links: LinkParams, cfg: SimConfig):
             jnp.asarray(links.beta0, jnp.float32))  # β(0) with ψ(0)=0
 
 
+def broadcast_gain(value, b: int, name: str = "kp") -> np.ndarray:
+    """Normalize a controller gain to a (B,) float32 per-draw vector.
+
+    Accepts a scalar (shared across draws) or a length-B array (one gain
+    per draw — the batched gain-sweep axis).
+    """
+    arr = np.asarray(value, np.float32).reshape(-1)
+    if arr.shape[0] == 1:
+        arr = np.broadcast_to(arr, (b,))
+    if arr.shape[0] != b:
+        raise ValueError(
+            f"{name} must be a scalar or length-{b} (one per draw), "
+            f"got shape {np.asarray(value).shape}")
+    return np.ascontiguousarray(arr)
+
+
 def simulate_ensemble(
     topo: Topology,
     links: LinkParams,
@@ -334,27 +365,37 @@ def simulate_ensemble(
     of the paper's ±8 ppm experiments (convergence-time distributions,
     worst-case envelopes) without per-draw dispatch or recompilation.
 
+    ``ctrl.kp`` / ``ctrl.beta_off`` may be length-B arrays — one gain per
+    draw.  The gains are traced per-draw state (never compile keys), so a
+    Fig-15-style kp sweep is ONE compiled batched kernel: tile the same
+    oscillator draw across B rows and vary only the gain.
+
     Args:
       ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per draw.
 
     Returns:
       EnsembleResult with leading batch axes; draw b reproduces
-      ``simulate(topo, links, ctrl, ppm_u[b], cfg)`` up to vmap'd-reduction
-      float noise (telemetry noise uses per-draw derived keys).
+      ``simulate(topo, links, ctrl, ppm_u[b], cfg)`` (with draw-b gains) up
+      to vmap'd-reduction float noise (telemetry noise uses per-draw
+      derived keys).
     """
     ppm_u = np.asarray(ppm_u, np.float32)
     if ppm_u.ndim != 2 or ppm_u.shape[1] != topo.num_nodes:
         raise ValueError(
             f"ppm_u must be (B, {topo.num_nodes}), got {ppm_u.shape}")
+    b = ppm_u.shape[0]
     inner, outer = _split_steps(cfg)
     args = _sim_arrays(topo, links, cfg)
-    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), ppm_u.shape[0])
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), b)
+    kp = broadcast_gain(ctrl.kp, b, "kp")
+    beta_off = broadcast_gain(ctrl.beta_off, b, "beta_off")
 
     (psi, nu, c_state), freq, beta = _jitted_run_ensemble()(
         *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
         jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
+        jnp.asarray(kp), jnp.asarray(beta_off),
         jnp.float32(cfg.telemetry_noise_ppm), keys,
-        ctrl=ctrl, num_nodes=topo.num_nodes, outer=outer,
+        ctrl=ctrl.static_key(), num_nodes=topo.num_nodes, outer=outer,
         quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
 
     times = (np.arange(1, outer + 1) * inner) * cfg.dt

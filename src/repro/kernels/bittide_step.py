@@ -25,7 +25,7 @@ Two kernels are provided:
     N too large to hold (C, N, N) in VMEM at once.
 
 ``bittide_fused_pallas``
-    The production engine: ONE ``pallas_call`` advances ``num_records ×
+    The resident engine: ONE ``pallas_call`` advances ``num_records ×
     record_every`` control periods for a whole batch of B independent
     oscillator draws.  The grid iterates over telemetry records (TPU grids
     execute sequentially); the (B, N) state lives in VMEM *scratch* that
@@ -37,6 +37,23 @@ Two kernels are provided:
     per-period matvec becomes a (B, N) × (N, N) matmul, which is exactly
     the MXU's shape.  This removes the per-period kernel-launch + HBM
     round-trip that dominated the old ``lax.scan``-of-``pallas_call`` path.
+
+``bittide_tiled_fused_pallas``
+    The tiled engine for networks whose (C, N, N) adjacency does NOT fit
+    in VMEM (Fig-18-scale tori).  The grid gains two inner dimensions,
+    ``(num_records, record_every, j_tiles)``: the period loop moves from
+    an in-kernel ``fori_loop`` into the grid, and each period accumulates
+    its aggregation over (C, N, TILE_J) column panels of the adjacency.
+    The Pallas pipeline streams the panels from HBM with double buffering
+    (the panel index map advances every grid step, so the next panel's DMA
+    overlaps the current panel's matmul); only the panel, the (B, N) state
+    scratch and an accumulator are VMEM-resident.  With a single j tile
+    (TILE_J == N) it degenerates to the resident engine's schedule minus
+    the in-kernel period loop.
+
+Controller gains (``kp``, ``beta_off``) are *traced per-draw inputs* of
+shape (B, 1) in both engines — never compile-time constants — so Fig-15
+style gain sweeps batch along B and compile exactly once.
 
 State layout: B is the sublane axis (pad to a multiple of 8 for float32),
 N the lane axis (pad to a multiple of 128); padding nodes have degree 0 and
@@ -51,8 +68,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bittide_step_pallas", "bittide_fused_pallas", "TILE", "SUBLANE",
-           "VMEM_BUDGET_BYTES"]
+__all__ = ["bittide_step_pallas", "bittide_fused_pallas",
+           "bittide_tiled_fused_pallas", "select_engine", "fused_vmem_bytes",
+           "tiled_vmem_bytes", "TILE", "SUBLANE", "VMEM_BUDGET_BYTES",
+           "RESIDENT_N_MAX", "TILE_J_MAX"]
 
 TILE = 128     # MXU/VPU-aligned tile edge (lane axis)
 SUBLANE = 8    # float32 sublane quantum (batch axis of the fused kernel)
@@ -60,6 +79,19 @@ SUBLANE = 8    # float32 sublane quantum (batch axis of the fused kernel)
 # Conservative per-core VMEM budget for the fused kernel's resident set
 # (real TPU cores have ~16 MB; leave headroom for Mosaic's own buffers).
 VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+# --- tile-size heuristic for engine dispatch (see `select_engine`) -------
+# Keep the whole (C, N, N) adjacency VMEM-resident only up to this padded
+# N.  Beyond it the tiled engine streams (C, N, TILE_J) column panels:
+# residency stops paying once the stack dominates VMEM, while streaming
+# bounds the footprint and leaves headroom for batch/gain axes.  The
+# trade-off is that streamed panels are re-fetched every control period —
+# the cutoffs are CPU-validated defaults; tuning them against measured
+# HBM bandwidth on real TPU hardware is a ROADMAP item.
+RESIDENT_N_MAX = 2 * TILE
+# Widest streamed panel (2 MXU tiles): wide enough to amortize the DMA,
+# narrow enough that the double-buffered pair stays a small VMEM fraction.
+TILE_J_MAX = 2 * TILE
 
 
 def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_u_ref,
@@ -164,11 +196,10 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
     return psi_next[0], nu_next[0]
 
 
-def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, deg_ref,
-                  lamsum_ref, psi_out_ref, nu_out_ref, rec_ref,
-                  psi_s, nu_s,
-                  *, kp: float, beta_off: float, dt_frames: float,
-                  record_every: int, num_classes: int):
+def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
+                  boff_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
+                  rec_ref, psi_s, nu_s,
+                  *, dt_frames: float, record_every: int, num_classes: int):
     t = pl.program_id(0)
 
     # First grid step: load initial state into the persistent VMEM scratch.
@@ -180,6 +211,8 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, deg_ref,
     nu_u = nu_u_ref[...]        # (B, N), resident across the whole run
     deg = deg_ref[...]          # (1, N), broadcasts over B
     lamsum = lamsum_ref[...]
+    kp = kp_ref[...]            # (B, 1) traced per-draw gains
+    beta_off = boff_ref[...]
 
     def period(_, carry):
         psi, nu = carry
@@ -213,11 +246,71 @@ def fused_vmem_bytes(b: int, n: int, c: int) -> int:
     return 4 * (c * n * n          # A stack
                 + 5 * b * n        # psi0/nu0/nu_u inputs + 2 scratch
                 + 3 * b * n        # psi/nu outputs + one record block
+                + 2 * b            # kp, beta_off gain columns
                 + 2 * n)           # deg, lamsum
 
 
+def tiled_vmem_bytes(b: int, n: int, c: int, tile_j: int) -> int:
+    """Working-set estimate for the tiled engine (panels + state).
+
+    The adjacency contributes one (C, N, tile_j) column panel ×2 for the
+    pipeline's double buffering instead of the full (C, N, N) stack.
+    """
+    return 4 * (2 * c * n * tile_j  # double-buffered A panels
+                + 5 * b * n         # psi0/nu0/nu_u inputs + psi/nu scratch
+                + b * n             # accumulator scratch
+                + 3 * b * n         # psi/nu outputs + one record block
+                + 2 * b             # kp, beta_off gain columns
+                + 2 * n)            # deg, lamsum
+
+
+def select_engine(b: int, n: int, c: int,
+                  vmem_budget: int = VMEM_BUDGET_BYTES):
+    """Tile-size dispatch heuristic: (engine, tile_j) for padded (B, N, C).
+
+    Replaces the old VMEM cliff (fused-or-per-step-fallback) with three
+    regimes:
+
+    - ``("fused", n)`` — the whole adjacency stays VMEM-resident and is
+      fetched once (n ≤ RESIDENT_N_MAX and the resident set fits).
+    - ``("tiled", tj)`` — adjacency streamed as (C, N, tj) column panels,
+      double-buffered from HBM; tj is the widest multiple of TILE that
+      divides n, is at most TILE_J_MAX, and fits the budget.
+    - ``("per-step", 0)`` — nothing fits (huge C·N); the per-period tiled
+      2-D kernel is the only option left.
+    """
+    if n <= RESIDENT_N_MAX and fused_vmem_bytes(b, n, c) <= vmem_budget:
+        return "fused", n
+    tj = min(n, TILE_J_MAX)
+    while tj >= TILE:
+        if n % tj == 0 and tiled_vmem_bytes(b, n, c, tj) <= vmem_budget:
+            return "tiled", tj
+        tj -= TILE
+    return "per-step", 0
+
+
+def _gain_col(v, b: int, name: str):
+    """Normalize a traced gain (scalar or per-draw vector) to (B, 1)."""
+    col = jnp.asarray(v, jnp.float32).reshape(-1)
+    if col.shape[0] == 1:
+        col = jnp.broadcast_to(col, (b,))
+    if col.shape[0] != b:
+        raise ValueError(f"{name} must be scalar or length-{b} per-draw, "
+                         f"got shape {jnp.shape(v)}")
+    return col.reshape(b, 1)
+
+
+def _check_shapes(b, n, num_records, record_every):
+    if n % TILE:
+        raise ValueError(f"N={n} must be a multiple of {TILE}")
+    if b % SUBLANE:
+        raise ValueError(f"B={b} must be a multiple of {SUBLANE}")
+    if num_records < 1 or record_every < 1:
+        raise ValueError("num_records and record_every must be >= 1")
+
+
 def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
-                         kp: float, beta_off: float, dt_frames: float,
+                         kp, beta_off, dt_frames: float,
                          *, num_records: int, record_every: int,
                          interpret: bool = False):
     """Advance ``num_records * record_every`` control periods in ONE kernel.
@@ -229,7 +322,9 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       deg, lamsum: (1, N) float32 step-invariant per-node folds
         (Σ_{c,j} A[c,·,j] and Σ_{c,j} λeff[c,·,j]).
       lat_frames: (C,) float32 per-class physical latency in frames.
-      kp, beta_off, dt_frames: static controller/integration constants.
+      kp, beta_off: traced controller gains — a scalar or a length-B
+        per-draw vector (the batched gain-sweep axis); never compile keys.
+      dt_frames: static integration constant.
       num_records: telemetry records to emit (grid length).
       record_every: control periods fused per record (in-kernel loop).
       interpret: run in interpret mode (CPU validation).
@@ -239,24 +334,18 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     """
     b, n = psi.shape
     c = a.shape[0]
-    if n % TILE:
-        raise ValueError(f"N={n} must be a multiple of {TILE}")
-    if b % SUBLANE:
-        raise ValueError(f"B={b} must be a multiple of {SUBLANE}")
-    if num_records < 1 or record_every < 1:
-        raise ValueError("num_records and record_every must be >= 1")
+    _check_shapes(b, n, num_records, record_every)
     vmem = fused_vmem_bytes(b, n, c)
     if vmem > VMEM_BUDGET_BYTES and not interpret:
         raise ValueError(
             f"fused kernel resident set {vmem/2**20:.1f} MiB exceeds the "
             f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB VMEM budget (B={b}, N={n}, "
-            f"C={c}); use the segment-sum simulator in repro.core.frame_model "
-            "for networks this large")
+            f"C={c}); use bittide_tiled_fused_pallas (adjacency streamed in "
+            "column panels) for networks this large")
 
     kern = functools.partial(
-        _fused_kernel, kp=float(kp), beta_off=float(beta_off),
-        dt_frames=float(dt_frames), record_every=int(record_every),
-        num_classes=int(c))
+        _fused_kernel, dt_frames=float(dt_frames),
+        record_every=int(record_every), num_classes=int(c))
 
     full2 = lambda t: (0, 0)
     psi_f, nu_f, rec = pl.pallas_call(
@@ -268,6 +357,8 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((b, n), full2),                 # psi0
             pl.BlockSpec((b, n), full2),                 # nu0
             pl.BlockSpec((b, n), full2),                 # nu_u
+            pl.BlockSpec((b, 1), full2),                 # kp per draw
+            pl.BlockSpec((b, 1), full2),                 # beta_off per draw
             pl.BlockSpec((1, n), full2),                 # deg
             pl.BlockSpec((1, n), full2),                 # lamsum
         ],
@@ -288,6 +379,141 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         interpret=interpret,
     )(lat_frames.reshape(c, 1).astype(jnp.float32), a.astype(jnp.float32),
       psi.astype(jnp.float32), nu.astype(jnp.float32),
-      nu_u.astype(jnp.float32), deg.reshape(1, n).astype(jnp.float32),
+      nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
+      _gain_col(beta_off, b, "beta_off"),
+      deg.reshape(1, n).astype(jnp.float32),
+      lamsum.reshape(1, n).astype(jnp.float32))
+    return psi_f, nu_f, rec
+
+
+def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
+                  boff_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
+                  rec_ref, psi_s, nu_s, acc_s,
+                  *, dt_frames: float, tile_j: int, num_classes: int):
+    t = pl.program_id(0)
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+    j_tiles = pl.num_programs(2)
+
+    first = jnp.logical_and(t == 0, jnp.logical_and(p == 0, j == 0))
+
+    @pl.when(first)
+    def _seed():
+        psi_s[...] = psi0_ref[...]
+        nu_s[...] = nu0_ref[...]
+
+    # Partial aggregation over this j panel: columns [j·TJ, (j+1)·TJ).
+    # a_ref is the streamed (C, N, TILE_J) panel; the state stays whole in
+    # scratch and only its matching column slice feeds the contraction.
+    cols = pl.ds(pl.multiple_of(j * tile_j, TILE), tile_j)
+    psi_j = psi_s[:, cols]                                    # (B, TJ)
+    nu_j = nu_s[:, cols]
+    partial = jnp.zeros(psi_s.shape, jnp.float32)
+    for c in range(num_classes):
+        x = psi_j - nu_j * lat_ref[c, 0]
+        # err[b, i] += Σ_{j∈panel} A[c, i, j] · x[b, j]
+        partial = partial + jax.lax.dot_general(
+            x, a_ref[c],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init_acc():
+        acc_s[...] = partial
+
+    @pl.when(j > 0)
+    def _accum():
+        acc_s[...] += partial
+
+    # Last panel of the period: fold invariants, apply controller, step.
+    @pl.when(j == j_tiles - 1)
+    def _finalize():
+        psi = psi_s[...]
+        nu_u = nu_u_ref[...]
+        err = (acc_s[...] - (psi + boff_ref[...]) * deg_ref[...]
+               + lamsum_ref[...])
+        c_rel = kp_ref[...] * err
+        nu_next = nu_u + c_rel + nu_u * c_rel
+        psi_next = psi + nu_next * dt_frames
+        psi_s[...] = psi_next
+        nu_s[...] = nu_next
+        # Telemetry flushes to HBM when the record index t advances, so
+        # overwriting every period within a record is decimation for free.
+        rec_ref[...] = nu_next[None]
+        psi_out_ref[...] = psi_next
+        nu_out_ref[...] = nu_next
+
+
+def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
+                               kp, beta_off, dt_frames: float,
+                               *, num_records: int, record_every: int,
+                               tile_j: int, interpret: bool = False):
+    """Tiled fused engine: adjacency streamed in (C, N, tile_j) panels.
+
+    Same contract as :func:`bittide_fused_pallas`, but the grid is
+    ``(num_records, record_every, N // tile_j)`` and the adjacency block
+    spec walks the j panels, so VMEM holds one double-buffered panel
+    instead of the whole (C, N, N) stack — Fig-18-scale networks run in
+    one ``pallas_call`` without the per-step fallback.  ``tile_j`` must be
+    a multiple of TILE dividing N (use :func:`select_engine` to pick it).
+    """
+    b, n = psi.shape
+    c = a.shape[0]
+    _check_shapes(b, n, num_records, record_every)
+    if tile_j < TILE or tile_j % TILE or n % tile_j:
+        raise ValueError(
+            f"tile_j={tile_j} must be a multiple of {TILE} dividing N={n}")
+    j_tiles = n // tile_j
+    vmem = tiled_vmem_bytes(b, n, c, tile_j)
+    if vmem > VMEM_BUDGET_BYTES and not interpret:
+        raise ValueError(
+            f"tiled working set {vmem/2**20:.1f} MiB exceeds the "
+            f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB VMEM budget (B={b}, N={n}, "
+            f"C={c}, tile_j={tile_j}); shrink tile_j or use the segment-sum "
+            "simulator in repro.core.frame_model")
+
+    kern = functools.partial(
+        _tiled_kernel, dt_frames=float(dt_frames), tile_j=int(tile_j),
+        num_classes=int(c))
+
+    full3 = lambda t, p, j: (0, 0)
+    psi_f, nu_f, rec = pl.pallas_call(
+        kern,
+        grid=(num_records, record_every, j_tiles),
+        in_specs=[
+            pl.BlockSpec((c, 1), full3),                   # lat (C, 1)
+            # A column panel: the index map advances with j, so the Pallas
+            # pipeline double-buffers the HBM fetch of panel j+1 behind the
+            # matmul on panel j.
+            pl.BlockSpec((c, n, tile_j), lambda t, p, j: (0, 0, j)),
+            pl.BlockSpec((b, n), full3),                   # psi0
+            pl.BlockSpec((b, n), full3),                   # nu0
+            pl.BlockSpec((b, n), full3),                   # nu_u
+            pl.BlockSpec((b, 1), full3),                   # kp per draw
+            pl.BlockSpec((b, 1), full3),                   # beta_off
+            pl.BlockSpec((1, n), full3),                   # deg
+            pl.BlockSpec((1, n), full3),                   # lamsum
+        ],
+        out_specs=[
+            pl.BlockSpec((b, n), full3),                   # psi final
+            pl.BlockSpec((b, n), full3),                   # nu final
+            pl.BlockSpec((1, b, n), lambda t, p, j: (t, 0, 0)),  # ν record
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, n), jnp.float32),               # ψ carry
+            pltpu.VMEM((b, n), jnp.float32),               # ν carry
+            pltpu.VMEM((b, n), jnp.float32),               # err accumulator
+        ],
+        interpret=interpret,
+    )(lat_frames.reshape(c, 1).astype(jnp.float32), a.astype(jnp.float32),
+      psi.astype(jnp.float32), nu.astype(jnp.float32),
+      nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
+      _gain_col(beta_off, b, "beta_off"),
+      deg.reshape(1, n).astype(jnp.float32),
       lamsum.reshape(1, n).astype(jnp.float32))
     return psi_f, nu_f, rec

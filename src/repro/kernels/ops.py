@@ -6,22 +6,31 @@ points are:
 
 ``simulate_fused``
     One synchronization run on the fused multi-period engine: a single
-    ``pallas_call`` advances ``steps`` control periods with the adjacency
-    stack resident in VMEM, state carried in VMEM scratch across the
-    record grid, and ν telemetry decimated in-kernel to every
-    ``record_every`` periods.
+    ``pallas_call`` advances ``steps`` control periods with state carried
+    in VMEM scratch across the record grid and ν telemetry decimated
+    in-kernel to every ``record_every`` periods.  The adjacency is either
+    VMEM-resident ("fused") or streamed from HBM in double-buffered column
+    panels ("tiled") — `repro.kernels.bittide_step.select_engine` picks
+    per problem size, so Fig-18-scale tori stay on the fast path instead
+    of dropping to the per-step kernel.
 
 ``simulate_ensemble_dense``
     The batched lane: B independent oscillator draws (Monte Carlo over the
     paper's ±8 ppm envelope) advance together through the same fused
     kernel — the per-period matvec becomes a (B, N) × (N, N) MXU matmul
-    and one compile serves B × steps × N node-steps.
+    and one compile serves B × steps × N node-steps.  ``kp`` / ``beta_off``
+    accept per-draw arrays (traced, never compile keys), so a Fig-15-style
+    gain sweep batches along B and compiles exactly once.
 
 ``simulate_dense``
     Back-compat wrapper (per-period telemetry, single draw); delegates to
     the fused engine.  The old one-``pallas_call``-per-period
     ``lax.scan`` runner survives only as ``simulate_dense_perstep``, the
     benchmark baseline that the fused engine is measured against.
+
+All dense runners return a :class:`DenseResult` — a 2-tuple
+``(freq_ppm, psi)`` (unpacks exactly like before) carrying ``.engine`` and
+``.tile_j`` dispatch metadata that tests and benchmarks assert on.
 
 On CPU (this container) the kernels run in interpret mode; on TPU the same
 code path compiles to Mosaic.  `interpret=None` auto-detects.
@@ -36,17 +45,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.frame_model import LinkParams, OMEGA_NOM
+from repro.core.frame_model import LinkParams, OMEGA_NOM, broadcast_gain
 from repro.core.topology import Topology
 
 from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES,
                            bittide_fused_pallas, bittide_step_pallas,
-                           fused_vmem_bytes)
+                           bittide_tiled_fused_pallas, fused_vmem_bytes,
+                           select_engine, tiled_vmem_bytes)
 from .ref import bittide_dense_multistep_ref, bittide_dense_step_ref
 
 __all__ = ["densify", "bittide_step", "simulate_dense",
            "simulate_dense_perstep", "simulate_fused",
-           "simulate_ensemble_dense"]
+           "simulate_ensemble_dense", "DenseResult"]
 
 
 # Beyond this many exact latency classes, densify falls back to quantized
@@ -58,6 +68,25 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+class DenseResult(tuple):
+    """``(freq_ppm, psi)`` pair with engine-dispatch metadata attached.
+
+    Unpacks like the historical 2-tuple; ``.engine`` names the kernel path
+    the dispatch heuristic chose (``"fused"`` | ``"tiled"`` |
+    ``"per-step"`` | ``"ref"``) and ``.tile_j`` is the adjacency j-panel
+    width in nodes (== padded N when the stack is VMEM-resident).
+    """
+
+    engine: str
+    tile_j: int
+
+    def __new__(cls, freq_ppm, psi, engine: str, tile_j: int):
+        self = tuple.__new__(cls, (freq_ppm, psi))
+        self.engine = engine
+        self.tile_j = int(tile_j)
+        return self
 
 
 def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
@@ -82,9 +111,11 @@ def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
             # Heterogeneous latencies (e.g. per-edge jittered cable lengths)
             # would make C explode and the (C, N, N) stack unaffordable;
             # merge with a quantum sized from the latency spread so the
-            # class count stays bounded whatever the distribution.
+            # class count stays bounded whatever the distribution.  rint
+            # over a spread of S quanta can land in S+1 distinct bins, so
+            # divide by MAX-1 to keep the bound at MAX exactly.
             spread = float(lat_frames.max() - lat_frames.min())
-            quantum_frames = max(0.25, spread / MAX_EXACT_CLASSES)
+            quantum_frames = max(0.25, spread / (MAX_EXACT_CLASSES - 1))
             warnings.warn(
                 f"densify: {len(classes)} exact latency classes > "
                 f"{MAX_EXACT_CLASSES}; merging with quantum_frames="
@@ -121,12 +152,19 @@ def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
                                kp, beta_off, dt_frames, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
-                                             "num_records", "record_every",
-                                             "interpret", "use_ref"))
-def _fused_engine(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
-                  num_records, record_every, interpret, use_ref):
-    """jit entry for the fused engine; one compile per (B, N, C, statics)."""
+@functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
+                                             "record_every", "engine",
+                                             "tile_j", "interpret",
+                                             "use_ref"))
+def _fused_engine(psi, nu, nu_u, kp, beta_off, a, lam_eff, lat, dt_frames,
+                  num_records, record_every, engine, tile_j, interpret,
+                  use_ref):
+    """jit entry for the fused engines; one compile per (B, N, C, statics).
+
+    ``kp`` / ``beta_off`` are traced (B,) per-draw gain vectors — gain
+    sweeps share one executable.  ``engine``/``tile_j`` come from
+    :func:`repro.kernels.bittide_step.select_engine`.
+    """
     if use_ref:
         return bittide_dense_multistep_ref(
             psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
@@ -134,6 +172,11 @@ def _fused_engine(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
     # Step-invariant per-node folds, hoisted out of the record grid.
     deg = a.sum(axis=(0, 2))
     lamsum = lam_eff.sum(axis=(0, 2))
+    if engine == "tiled":
+        return bittide_tiled_fused_pallas(
+            psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
+            num_records=num_records, record_every=record_every,
+            tile_j=tile_j, interpret=interpret)
     return bittide_fused_pallas(
         psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every,
@@ -149,13 +192,21 @@ def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]
     return jnp.asarray(nu_u), b_pad
 
 
+def _pad_gain(gain: np.ndarray, b_pad: int) -> jnp.ndarray:
+    """(B,) per-draw gains -> (B_pad,) (padding rows are independent)."""
+    out = np.zeros((b_pad,), np.float32)
+    out[:gain.shape[0]] = gain
+    return jnp.asarray(out)
+
+
 def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
-                            steps: int, kp: float, dt: float = 1e-3,
-                            beta_off: float = 0.0, record_every: int = 1,
+                            steps: int, kp, dt: float = 1e-3,
+                            beta_off=0.0, record_every: int = 1,
                             omega_nom: float = OMEGA_NOM,
                             interpret: Optional[bool] = None,
                             use_ref: bool = False,
-                            ) -> Tuple[np.ndarray, np.ndarray]:
+                            engine: str = "auto",
+                            tile_j: Optional[int] = None) -> DenseResult:
     """Batched fused synchronization: B draws in one compiled call.
 
     Args:
@@ -163,11 +214,20 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         independent draw (the paper's ±8 ppm Monte Carlo sweeps).
       steps: control periods to advance (floor-truncated to a multiple of
         ``record_every``).
+      kp, beta_off: controller gains — scalars, or length-B arrays with
+        one value per draw (the batched Fig-15 gain-sweep axis).  Gains
+        are traced through the kernels, so sweeping them never recompiles.
       record_every: in-kernel telemetry decimation.
       use_ref: run the jnp multistep oracle instead of the Pallas kernel.
+      engine: "auto" (tile-size heuristic via ``select_engine``), or force
+        "fused" (VMEM-resident adjacency), "tiled" (HBM-streamed j
+        panels), or "per-step" (scan-of-kernels fallback).
+      tile_j: j-panel width for the tiled engine (defaults to the
+        heuristic's choice; must be a multiple of TILE dividing padded N).
 
     Returns:
-      (freq_ppm (B, R, N), psi (B, N)) with R = steps // record_every.
+      DenseResult ``(freq_ppm (B, R, N), psi (B, N))`` with
+      R = steps // record_every and ``.engine`` / ``.tile_j`` metadata.
     """
     ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
     if ppm_u.shape[1] != topo.num_nodes:
@@ -177,58 +237,82 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     if num_records < 1:
         raise ValueError("steps must be >= record_every")
     b = ppm_u.shape[0]
+    kp = broadcast_gain(kp, b, "kp")
+    beta_off = broadcast_gain(beta_off, b, "beta_off")
 
     a, lam_eff, lat, n_pad = densify(topo, links, omega_nom)
+    c = a.shape[0]
     nu_u, b_pad = _pad_batch(ppm_u, topo.num_nodes, n_pad)
     psi = jnp.zeros_like(nu_u)
     interp = _auto_interpret(interpret)
 
-    if (not use_ref and not interp
-            and fused_vmem_bytes(b_pad, n_pad, a.shape[0]) > VMEM_BUDGET_BYTES):
-        # Network too large for the VMEM-resident fused kernel on real
-        # hardware: keep old callers working via the tiled per-step kernel,
+    if use_ref:
+        chosen, tj = "ref", n_pad
+    elif engine == "auto":
+        # The tile-size heuristic replaces the old VMEM cliff; it applies
+        # under interpret too so CPU validation exercises TPU dispatch.
+        chosen, tj = select_engine(b_pad, n_pad, c)
+    elif engine in ("fused", "tiled", "per-step"):
+        chosen = engine
+        tj = tile_j if tile_j is not None else (
+            select_engine(b_pad, n_pad, c)[1] if engine == "tiled" else n_pad)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    if chosen == "tiled" and tile_j is not None:
+        tj = tile_j
+
+    if chosen == "per-step":
+        # Nothing fits VMEM (huge C·N): scan of per-period 2-D kernels,
         # decimating its per-period telemetry to the requested records.
-        warnings.warn(
-            f"fused kernel resident set exceeds VMEM budget for B={b_pad}, "
-            f"N={n_pad}; falling back to the tiled per-step kernel",
-            stacklevel=2)
+        # Gains are static compile keys on this path — it exists for
+        # capability, not speed.
+        if engine == "auto":
+            warnings.warn(
+                f"no fused/tiled working set fits the VMEM budget for "
+                f"B={b_pad}, N={n_pad}, C={c}; falling back to the per-step "
+                "kernel", stacklevel=2)
         freqs, psis = [], []
-        for row in ppm_u:
+        for row, kp_row, boff_row in zip(ppm_u, kp, beta_off):
             f, p = simulate_dense_perstep(
-                topo, links, row, num_records * record_every, kp, dt=dt,
-                beta_off=beta_off, omega_nom=omega_nom, interpret=interp)
+                topo, links, row, num_records * record_every, float(kp_row),
+                dt=dt, beta_off=float(boff_row), omega_nom=omega_nom,
+                interpret=interp)
             freqs.append(f[record_every - 1::record_every])
             psis.append(p)
-        return np.stack(freqs), np.stack(psis)
+        return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0)
 
     psi_f, _, rec = _fused_engine(
-        psi, nu_u, nu_u, a, lam_eff, lat, float(kp), float(beta_off),
-        float(omega_nom * dt), int(num_records), int(record_every),
-        interp, bool(use_ref))
+        psi, nu_u, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
+        a, lam_eff, lat, float(omega_nom * dt), int(num_records),
+        int(record_every), str(chosen), int(tj), interp, bool(use_ref))
 
     freq = np.asarray(rec)[:, :b, :topo.num_nodes] * 1e6   # (R, B, N)
-    return (np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
-            np.asarray(psi_f)[:b, :topo.num_nodes])
+    return DenseResult(
+        np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
+        np.asarray(psi_f)[:b, :topo.num_nodes], chosen, tj)
 
 
 def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    kp: float, dt: float = 1e-3, beta_off: float = 0.0,
                    record_every: int = 1, omega_nom: float = OMEGA_NOM,
                    interpret: Optional[bool] = None,
-                   use_ref: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+                   use_ref: bool = False, engine: str = "auto",
+                   tile_j: Optional[int] = None) -> DenseResult:
     """Single-draw fused run; returns (freq_ppm (R, N), psi (N,))."""
-    freq, psi = simulate_ensemble_dense(
+    res = simulate_ensemble_dense(
         topo, links, np.atleast_2d(np.asarray(ppm_u, np.float32)), steps, kp,
         dt=dt, beta_off=beta_off, record_every=record_every,
-        omega_nom=omega_nom, interpret=interpret, use_ref=use_ref)
-    return freq[0], psi[0]
+        omega_nom=omega_nom, interpret=interpret, use_ref=use_ref,
+        engine=engine, tile_j=tile_j)
+    freq, psi = res
+    return DenseResult(freq[0], psi[0], res.engine, res.tile_j)
 
 
 def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    kp: float, dt: float = 1e-3, beta_off: float = 0.0,
                    omega_nom: float = OMEGA_NOM,
                    interpret: Optional[bool] = None,
-                   use_ref: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+                   use_ref: bool = False) -> DenseResult:
     """Fused-kernel synchronization run; returns (freq_ppm (T,N), psi (N,)).
 
     Back-compat API (per-period telemetry); delegates to the fused
@@ -245,8 +329,7 @@ def simulate_dense_perstep(topo: Topology, links: LinkParams, ppm_u,
                            beta_off: float = 0.0,
                            omega_nom: float = OMEGA_NOM,
                            interpret: Optional[bool] = None,
-                           use_ref: bool = False
-                           ) -> Tuple[np.ndarray, np.ndarray]:
+                           use_ref: bool = False) -> DenseResult:
     """The pre-fusion engine: one ``pallas_call`` per control period inside
     a ``lax.scan``.  Kept as the benchmark baseline — it re-streams the
     (C, N, N) adjacency and round-trips the (N,) state through HBM every
@@ -269,4 +352,5 @@ def simulate_dense_perstep(topo: Topology, links: LinkParams, ppm_u,
         return (psi, nu), nu * 1e6
 
     (psi, nu), freq = jax.lax.scan(body, (psi, nu), None, length=steps)
-    return np.asarray(freq[:, :topo.num_nodes]), np.asarray(psi[:topo.num_nodes])
+    return DenseResult(np.asarray(freq[:, :topo.num_nodes]),
+                       np.asarray(psi[:topo.num_nodes]), "per-step", 0)

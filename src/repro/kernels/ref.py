@@ -63,7 +63,10 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
     Args:
       psi, nu, nu_u: (N,) or (B, N) float32 state.
       a, lam_eff, lat_frames: dense topology (shared across the batch).
-      kp, beta_off, dt_frames: controller/integration constants.
+      kp, beta_off: traced controller gains; in the batched form each may
+        be a scalar (shared) or a length-B / (B, 1) per-draw vector — the
+        batched gain-sweep axis the fused engines implement.
+      dt_frames: integration constant.
       num_records: telemetry records to emit.
       record_every: control periods per record.
 
@@ -73,9 +76,16 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
     """
     step = bittide_dense_step_ref
     if psi.ndim == 2:
+        b = psi.shape[0]
+
+        def per_draw(g):
+            g = jnp.asarray(g, jnp.float32).reshape(-1)
+            return jnp.broadcast_to(g, (b,)) if g.shape[0] == 1 else g
+
+        kp, beta_off = per_draw(kp), per_draw(beta_off)
         step = jax.vmap(
             bittide_dense_step_ref,
-            in_axes=(0, 0, 0, None, None, None, None, None, None))
+            in_axes=(0, 0, 0, None, None, None, 0, 0, None))
 
     def one_period(_, carry):
         p, v = carry

@@ -1,16 +1,18 @@
 """Fused multi-period engine + batched ensemble: parity and invariants.
 
-The fused Pallas kernel (one ``pallas_call`` advancing many control periods
-with in-kernel telemetry decimation) is validated against two independent
-implementations: the jnp multistep oracle (same dense math, no Pallas) and
-the production segment-sum simulator in ``repro.core.frame_model`` (edge-
-list math, scan-of-periods) — at every record point.
+The fused Pallas kernels (one ``pallas_call`` advancing many control
+periods with in-kernel telemetry decimation — adjacency VMEM-resident in
+the "fused" engine, HBM-streamed in j panels in the "tiled" engine) are
+validated against two independent implementations: the jnp multistep
+oracle (same dense math, no Pallas) and the production segment-sum
+simulator in ``repro.core.frame_model`` (edge-list math, scan-of-periods)
+— at every record point, over every paper topology, for every engine.
 """
 import numpy as np
 import pytest
 
-from repro.core import (ControllerConfig, SimConfig, fully_connected,
-                        make_links, random_regular, simulate,
+from repro.core import (ControllerConfig, SimConfig, cube, fully_connected,
+                        hourglass, make_links, random_regular, simulate,
                         simulate_ensemble, torus3d)
 from repro.core.frame_model import OMEGA_NOM, _jitted_run
 from repro.kernels import (densify, simulate_dense, simulate_dense_perstep,
@@ -18,24 +20,64 @@ from repro.kernels import (densify, simulate_dense, simulate_dense_perstep,
 from repro.kernels.ops import _fused_engine
 
 
-PARITY_TOPOS = [fully_connected(8), torus3d(4)]
+# The paper's evaluated topologies (§5.3–§5.5, Fig 18's torus family) plus
+# a tile-boundary-crossing random graph whose padded N forces real
+# multi-panel accumulation on the tiled engine (n_pad=384 -> 3 j tiles).
+PARITY_TOPOS = [fully_connected(8), hourglass(4), cube(), torus3d(4),
+                random_regular(300, 3, 0)]
+PARITY_STEPS, PARITY_REC = 120, 12
+_SEGSUM_CACHE = {}
 
 
+def _segment_sum_reference(topo, links, ppm):
+    """Segment-sum trajectory at the decimated record points (cached)."""
+    if topo.name not in _SEGSUM_CACHE:
+        res = simulate(topo, links, ControllerConfig(kp=2e-9),
+                       ppm.astype(np.float32),
+                       SimConfig(dt=1e-3, steps=PARITY_STEPS,
+                                 record_every=PARITY_REC))
+        assert res.engine == "segment-sum"
+        _SEGSUM_CACHE[topo.name] = res.freq_ppm
+    return _SEGSUM_CACHE[topo.name]
+
+
+def _parity_ppm(topo):
+    return np.random.default_rng(7).uniform(-8, 8, topo.num_nodes)
+
+
+@pytest.mark.parametrize("engine", ["fused", "tiled", "per-step"])
 @pytest.mark.parametrize("topo", PARITY_TOPOS, ids=lambda t: t.name)
-def test_fused_matches_segment_sum_simulator(topo):
-    """ν trajectories match the frame-model simulator at ALL record points
-    (proportional controller, quantize off) to <= 1e-6 ppm."""
+def test_parity_matrix_vs_segment_sum(topo, engine):
+    """Cross-engine parity matrix: every kernel engine must match the
+    segment-sum simulator at ALL record points (proportional controller,
+    quantize off) to <= 1e-6 ppm on every paper topology."""
     links = make_links(topo, cable_m=2.0)
-    rng = np.random.default_rng(7)
-    ppm = rng.uniform(-8, 8, topo.num_nodes)
-    steps, rec = 300, 10
-    freq, _ = simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
-                             dt=1e-3, record_every=rec)
-    res = simulate(topo, links, ControllerConfig(kp=2e-9),
-                   ppm.astype(np.float32),
-                   SimConfig(dt=1e-3, steps=steps, record_every=rec))
-    assert freq.shape == res.freq_ppm.shape
-    np.testing.assert_allclose(freq, res.freq_ppm, rtol=0, atol=1e-6)
+    ppm = _parity_ppm(topo)
+    ref = _segment_sum_reference(topo, links, ppm)
+    if engine == "per-step":
+        res = simulate_dense_perstep(topo, links, ppm, steps=PARITY_STEPS,
+                                     kp=2e-9, dt=1e-3)
+        freq = res[0][PARITY_REC - 1::PARITY_REC]
+    else:
+        res = simulate_fused(topo, links, ppm, steps=PARITY_STEPS, kp=2e-9,
+                             dt=1e-3, record_every=PARITY_REC, engine=engine)
+        freq = res[0]
+    assert res.engine == engine
+    assert freq.shape == ref.shape
+    np.testing.assert_allclose(freq, ref, rtol=0, atol=1e-6)
+
+
+def test_parity_matrix_tiled_is_multi_panel_somewhere():
+    """The matrix must actually exercise j-panel accumulation: for at least
+    one parity topology the heuristic's panel width must be strictly
+    narrower than padded N (tile_j < n_pad => >= 2 panels per period)."""
+    from repro.kernels import TILE, select_engine
+    multi_panel = []
+    for t in PARITY_TOPOS:
+        n_pad = ((t.num_nodes + TILE - 1) // TILE) * TILE
+        engine, tj = select_engine(8, n_pad, 1)
+        multi_panel.append(engine == "tiled" and tj < n_pad)
+    assert any(multi_panel)
 
 
 def test_fused_matches_multistep_oracle():
@@ -121,19 +163,26 @@ def test_simulate_ensemble_matches_per_draw_loop():
 
 
 def test_no_recompile_across_dt_and_record_every_sweeps():
-    """dt / record_every / noise sweeps must reuse one executable."""
+    """dt / record_every / noise / gain sweeps must reuse one executable.
+
+    kp and beta_off are traced per-draw state (never compile keys), so the
+    Fig-15 regime — many controller gains over one topology — costs one
+    compile like the dt/noise sweeps already did.
+    """
     topo = fully_connected(8)
     links = make_links(topo, cable_m=2.0)
-    ctrl = ControllerConfig(kp=2e-8)
     ppm = np.random.default_rng(6).uniform(-8, 8, 8).astype(np.float32)
-    simulate(topo, links, ctrl, ppm,
+    simulate(topo, links, ControllerConfig(kp=2e-8), ppm,
              SimConfig(dt=1e-3, steps=200, record_every=20))
     size0 = _jitted_run()._cache_size()
     for dt, rec, noise in [(2e-3, 20, 0.0), (5e-4, 10, 0.0),
                            (1e-3, 40, 0.1)]:
-        simulate(topo, links, ctrl, ppm,
+        simulate(topo, links, ControllerConfig(kp=2e-8), ppm,
                  SimConfig(dt=dt, steps=rec * 10, record_every=rec,
                            telemetry_noise_ppm=noise))
+    for kp, boff in [(2e-9, 0.0), (5e-9, 0.0), (2e-8, 1.5), (4e-8, -2.0)]:
+        simulate(topo, links, ControllerConfig(kp=kp, beta_off=boff), ppm,
+                 SimConfig(dt=1e-3, steps=200, record_every=20))
     assert _jitted_run()._cache_size() == size0
 
 

@@ -1,0 +1,106 @@
+"""Property-based topology + densify + tiled-aggregation invariants.
+
+Runs under real hypothesis when installed, else the deterministic
+``hypcompat`` fallback replays each property on seeded draws.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.core import (Topology, cube, fully_connected, hourglass,
+                        make_links, mesh2d, random_regular, torus3d)
+from repro.core.frame_model import OMEGA_NOM
+from repro.kernels import TILE, densify, simulate_fused
+from repro.kernels.ops import MAX_EXACT_CLASSES
+
+BUILDERS = {
+    "fully_connected": lambda n, s: fully_connected(4 + n % 12),
+    "hourglass": lambda n, s: hourglass(2 + n % 6),
+    "cube": lambda n, s: cube(),
+    # k >= 3: a k=2 torus degenerates to doubled links (a multigraph),
+    # which the reverse-edge involution below deliberately excludes.
+    "torus3d": lambda n, s: torus3d(3 + n % 3),
+    "mesh2d": lambda n, s: mesh2d(2 + n % 5, 2 + s % 5, wrap=bool(s % 2)),
+    "random_regular": lambda n, s: random_regular(4 + n, 2 + s % 4, s),
+}
+
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(sorted(BUILDERS)), n=st.integers(0, 40),
+       seed=st.integers(0, 2 ** 16))
+def test_property_topologies_bidirectional(name, n, seed):
+    """Every builder emits physically bidirectional links: the reverse-edge
+    map is a total involution exchanging src and dst."""
+    topo = BUILDERS[name](n, seed)
+    rev = topo.reverse_edge_index()  # raises if any edge lacks a reverse
+    assert np.array_equal(topo.src[rev], topo.dst)
+    assert np.array_equal(topo.dst[rev], topo.src)
+    assert np.array_equal(rev[rev], np.arange(topo.num_edges))
+    assert topo.is_connected()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), spread_m=st.floats(0.1, 5000.0),
+       degree=st.integers(2, 5))
+def test_property_densify_class_count_bounded(seed, spread_m, degree):
+    """Whatever the (random) cable-length distribution, densify keeps the
+    latency-class count within MAX_EXACT_CLASSES and preserves both the
+    total edge multiplicity and the summed initial occupancy."""
+    rng = np.random.default_rng(seed)
+    topo = random_regular(12 + seed % 20, degree, seed)
+    cable = rng.uniform(1.0, 1.0 + spread_m, topo.num_edges)
+    beta0 = rng.normal(0, 3, topo.num_edges)
+    links = make_links(topo, cable_m=cable, beta0=beta0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # quantum-merge warning is expected
+        a, lam, lat, n_pad = densify(topo, links)
+    assert a.shape[0] <= MAX_EXACT_CLASSES
+    assert lat.shape[0] == a.shape[0]
+    assert n_pad % TILE == 0
+    assert int(np.asarray(a).sum()) == topo.num_edges
+    np.testing.assert_allclose(float(np.asarray(lam).sum()), beta0.sum(),
+                               rtol=1e-5, atol=1e-5)
+    # classes are sorted and distinct — the kernel iterates them statically
+    lat_np = np.asarray(lat)
+    assert np.all(np.diff(lat_np) > 0) or lat_np.shape[0] == 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), classes=st.integers(1, 3),
+       j_tiles=st.integers(2, 6), b=st.integers(1, 8))
+def test_property_tiled_aggregation_matches_untiled(seed, classes, j_tiles, b):
+    """The tiled engine's math: accumulating err over j panels equals the
+    one-shot contraction on random dense adjacencies (the exact reduction
+    the Pallas kernel performs, in numpy)."""
+    rng = np.random.default_rng(seed)
+    n = 16 * j_tiles
+    a = (rng.random((classes, n, n)) < 0.2).astype(np.float32)
+    x = rng.normal(0, 10, (classes, b, n)).astype(np.float32)
+    full = np.zeros((b, n), np.float32)
+    for c in range(classes):
+        full += x[c] @ a[c].T
+    tiled = np.zeros((b, n), np.float32)
+    tj = n // j_tiles
+    for j in range(j_tiles):
+        cols = slice(j * tj, (j + 1) * tj)
+        for c in range(classes):
+            tiled += x[c][:, cols] @ a[c][:, cols].T
+    np.testing.assert_allclose(tiled, full, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_tiled_kernel_matches_resident_kernel(seed):
+    """End-to-end kernel-level equivalence on a random multi-tile topology:
+    the j-panel streamed engine reproduces the VMEM-resident engine."""
+    topo = random_regular(140 + seed % 40, 3, seed)  # pads to 256 -> 2 tiles
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(seed).uniform(-8, 8, topo.num_nodes)
+    kw = dict(steps=40, kp=2e-9, dt=1e-3, record_every=10)
+    res_f = simulate_fused(topo, links, ppm, engine="fused", **kw)
+    res_t = simulate_fused(topo, links, ppm, engine="tiled", tile_j=128, **kw)
+    assert res_f.engine == "fused" and res_t.engine == "tiled"
+    np.testing.assert_allclose(res_t[0], res_f[0], rtol=0, atol=1e-6)
+    np.testing.assert_allclose(res_t[1], res_f[1], rtol=1e-5, atol=1e-3)
