@@ -244,6 +244,55 @@ def bench_gain_sweep_compile():
             f"pass_one_compile={'PASS' if dense_compiles == 0 and seg_compiles == 0 else 'FAIL'}")
 
 
+def bench_scenario_replay():
+    """Scenario-engine lane: a 3-event cable-swap scenario (4 segments)
+    replayed through the fused engine as fixed-size chunks vs ONE
+    monolithic fused call on identical work (same periods, same records).
+
+    ratio_vs_monolithic is the segmented-replay overhead (extra kernel
+    launches + per-segment densify + state round-trips) — the price of
+    dynamic events on top of the fused time-loop.  The hard gate is
+    pass_one_compile: replaying the whole multi-segment scenario against
+    a warm cache must add ZERO compile entries, because every segment
+    parameter (latencies, λeff folds, edge weights, controller masks) is
+    traced data, never a shape.
+    """
+    from repro.kernels.ops import _fused_engine
+    from repro.scenarios import (LatencyStep, Scenario, edges_between,
+                                 run_scenario)
+
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, 8).astype(np.float32)
+    ctrl = ControllerConfig(kp=2e-9)
+    steps, record_every = 256, 8
+    cfg = SimConfig(dt=1e-3, steps=steps, record_every=record_every)
+    ed = edges_between(topo, 0, 2)
+    sc = Scenario(events=(
+        LatencyStep(t=0.064, edges=ed, cable_m=1000.0),
+        LatencyStep(t=0.128, edges=ed, cable_m=2.0),
+        LatencyStep(t=0.192, edges=ed, cable_m=500.0)), name="replay")
+
+    def run_mono():
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                              record_every=record_every)
+
+    def run_scen():
+        return run_scenario(topo, links, ctrl, ppm, sc, cfg, engine="fused")
+
+    res = run_scen()                       # warm compile
+    size0 = _fused_engine._cache_size()
+    us_scen = _bench(run_scen, iters=3)
+    replay_compiles = _fused_engine._cache_size() - size0
+    us_mono = _bench(run_mono, iters=3)
+    return ("kernel_scenario_replay", us_scen,
+            f"segments={res.compiled.num_segments};"
+            f"launches={res.num_launches};chunk={res.chunk_records};"
+            f"ratio_vs_monolithic={us_scen / us_mono:.2f};"
+            f"replay_compiles={replay_compiles};"
+            f"pass_one_compile={'PASS' if replay_compiles == 0 else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -290,11 +339,12 @@ def bench_sim_engine_throughput():
 
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
        bench_fused_vs_per_step, bench_tiled_vs_fused,
-       bench_gain_sweep_compile, bench_ensemble_throughput,
-       bench_ensemble_xla_engine, bench_sim_engine_throughput]
+       bench_gain_sweep_compile, bench_scenario_replay,
+       bench_ensemble_throughput, bench_ensemble_xla_engine,
+       bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
 # benches for the fused/tiled engines, skipping the 10k-node torus.
 SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
-         bench_gain_sweep_compile, bench_ensemble_throughput,
-         bench_ensemble_xla_engine]
+         bench_gain_sweep_compile, bench_scenario_replay,
+         bench_ensemble_throughput, bench_ensemble_xla_engine]

@@ -13,13 +13,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 
-# The cross-engine parity matrix + dispatch/gain-sweep gates must run even
-# when the caller filtered the main pytest invocation down to a subset; a
-# no-argument run already covered them above, so don't pay for them twice.
+# The cross-engine parity matrix + dispatch/gain-sweep/scenario gates must
+# run even when the caller filtered the main pytest invocation down to a
+# subset; a no-argument run already covered them above, so don't pay for
+# them twice.
 if [ $# -gt 0 ]; then
     python -m pytest -q tests/test_kernels_fused.py \
-        tests/test_engine_dispatch.py tests/test_gain_sweep.py
+        tests/test_engine_dispatch.py tests/test_gain_sweep.py \
+        tests/test_scenarios.py tests/test_ensemble_links.py
 fi
+
+# Scenario smoke lane: replay the §5.6 fiber-swap demo end-to-end (the
+# scenario compiler + runner + Table-2 latency-shift path).
+python examples/cable_swap.py --smoke --no-plot > /dev/null
+echo "ci: scenario smoke (cable_swap --smoke) green"
 
 python -m benchmarks.run --smoke --json BENCH_kernels.json
 python scripts/compare_bench.py BENCH_kernels.json \

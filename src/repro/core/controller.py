@@ -34,10 +34,12 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ControllerConfig", "hardware_gain", "controller_init", "controller_step"]
+__all__ = ["ControllerConfig", "hardware_gain", "controller_init",
+           "controller_step", "holdover_freeze"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,3 +111,18 @@ def controller_step(cfg: ControllerConfig, state, agg_err, kp=None):
     pulses = jnp.clip(want_pulses, -cfg.pulses_per_update, cfg.pulses_per_update)
     c_est = c_est + pulses * cfg.fs
     return {**state, "c_est": c_est}, c_est
+
+
+def holdover_freeze(state_new, state_old, enabled):
+    """Freeze controller state for nodes in clock holdover.
+
+    The scenario subsystem (``repro.scenarios.NodeHoldover``) models a
+    node losing its control loop: its oscillator keeps the last applied
+    correction (ν frozen by the simulation engines) and its controller
+    state — the PI integrator, the discrete actuator's ``c_est`` — must
+    not keep evolving while the loop is open, or ``NodeReset`` would
+    rejoin with garbage.  ``enabled`` is a boolean (N,) mask; disabled
+    nodes keep ``state_old``.
+    """
+    return jax.tree_util.tree_map(
+        lambda new, old: jnp.where(enabled, new, old), state_new, state_old)

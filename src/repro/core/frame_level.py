@@ -8,7 +8,11 @@ outgoing wire.  It is the ground truth used to validate:
 
   * logical-latency constancy (λ per frame is the same for every frame),
   * elastic-buffer boundedness under clock control,
-  * over/underflow when control is disabled (the paper's motivation).
+  * over/underflow when control is disabled (the paper's motivation),
+  * dynamic events: a mid-run cable swap (``repro.scenarios.LatencyStep``)
+    re-fills the wire at the new length — in-flight/in-buffer frames keep
+    their λ, and λ jumps by exactly the inserted in-flight frame count at
+    the splice (the paper's §5.6 fiber-spool experiment, Table 2).
 
 Pure numpy, event-accurate, intended for small N (tests and examples).
 """
@@ -16,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -28,13 +32,19 @@ __all__ = ["FrameLevelResult", "simulate_frames"]
 
 @dataclasses.dataclass
 class FrameLevelResult:
-    lam: np.ndarray          # (E,) measured logical latency per edge (from frames)
-    lam_constant: bool       # every frame on an edge saw the same λ
+    lam: np.ndarray          # (E,) latest measured logical latency per edge
+    lam_constant: bool       # λ constant per edge within each event epoch
     occupancy_min: np.ndarray  # (E,)
     occupancy_max: np.ndarray  # (E,)
     underflow: bool
     overflow: bool
     ticks: np.ndarray        # (N,) total localticks executed
+    # Dynamic-event bookkeeping (empty when events is None):
+    # per-edge ordered list of distinct λ values observed (one per epoch),
+    # and the net in-flight frames inserted by LatencySteps per edge.
+    lam_epochs: list = dataclasses.field(default_factory=list)
+    inserted: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
 
 
 def simulate_frames(
@@ -48,6 +58,7 @@ def simulate_frames(
     control_period_s: float = 1e-4,
     omega_nom: float = OMEGA_NOM,
     sim_rate_scale: float = 1e-5,
+    events: Optional[Sequence] = None,
 ) -> FrameLevelResult:
     """Run a frame-accurate simulation.
 
@@ -60,10 +71,20 @@ def simulate_frames(
       controller: maps (N,) summed occupancy error -> (N,) relative frequency
         corrections.  None = uncontrolled (paper §3.1: buffers then drift to
         over/underflow).
+      events: optional list of scenario events (or a Scenario), applied at
+        their times (in the same scaled clock as ``duration_s``).  The
+        frame level supports ``LatencyStep`` — the wire is re-filled at
+        the new length with sequence numbers counting back contiguously
+        from the sender's current localtick, so occupancy is continuous,
+        frames already in flight keep their λ, and λ jumps by exactly the
+        inserted in-flight frame count at the splice — and ``FreqStep``
+        (oscillator rate change).  Other event types are abstract-model
+        constructs; passing them raises.
     """
     n, e = topo.num_nodes, topo.num_edges
     rate_nom = omega_nom * sim_rate_scale
-    rates = rate_nom * (1.0 + np.asarray(ppm_u, np.float64) * 1e-6)
+    ppm = np.asarray(ppm_u, np.float64).copy()
+    rates = rate_nom * (1.0 + ppm * 1e-6)
     lat_s = np.asarray(links.latency_s, np.float64) / sim_rate_scale
 
     # Per-edge FIFOs hold (send_seq) of frames; wires are heaps of
@@ -81,16 +102,73 @@ def simulate_frames(
     sent = np.zeros(n, np.int64)     # localtick counter θ_i == frames sent
     popped = np.zeros(e, np.int64)   # frames popped per edge
     lam_seen = [None] * e
+    lam_epochs = [[] for _ in range(e)]
     lam_const = True
     occ_min = np.full(e, init_occ, np.int64)
     occ_max = np.full(e, init_occ, np.int64)
     underflow = overflow = False
+    inserted = np.zeros(e, np.int64)
+    # edge -> pending first-seqs of post-event wire regimes (a second swap
+    # can land while the first regime's frames are still in flight, so
+    # this is a queue, ordered by construction: seqs only grow).
+    splice_seq: dict = {}
+
+    pending = []
+    _LatencyStep = _FreqStep = None
+    if events is not None:
+        # Lazy import: events live in repro.scenarios (which imports core).
+        from repro.scenarios.events import FreqStep, LatencyStep, Scenario
+        _LatencyStep, _FreqStep = LatencyStep, FreqStep
+        evs = list(events.events) if isinstance(events, Scenario) \
+            else list(events)
+        for ev in sorted(evs, key=lambda x: x.t):
+            if not isinstance(ev, (LatencyStep, FreqStep)):
+                raise ValueError(
+                    f"frame-level oracle supports LatencyStep and FreqStep "
+                    f"events, got {type(ev).__name__}")
+            pending.append(ev)
 
     out_edges = [np.nonzero(topo.src == i)[0] for i in range(n)]
     in_edges = [np.nonzero(topo.dst == i)[0] for i in range(n)]
 
+    def deliver(ei, t):
+        """Move due frames from wire ``ei`` into its FIFO tail."""
+        w = wires[ei]
+        while w and w[0][0] <= t:
+            _, seq = heapq.heappop(w)
+            fifos[ei].append(seq)
+
+    def apply_latency_step(ev, t):
+        """Cable swap: re-fill the wire at the new length.
+
+        The new wire carries sequence numbers counting back contiguously
+        from the sender's current localtick — exactly the boot
+        construction (§4.1) at the new latency.  Occupancy is continuous
+        (the FIFO is untouched), frames already delivered keep their λ,
+        and the splice inserts ``inflight_new − inflight_old`` frames:
+        the λ jump the paper measures as the Table-2 RTT shift.
+        """
+        from .frame_model import PIPE_FRAMES, SIGNAL_VELOCITY
+        new_lat = ev.new_latency_s(omega_nom, SIGNAL_VELOCITY,
+                                   PIPE_FRAMES) / sim_rate_scale
+        for k, ei in enumerate(ev.edges):
+            deliver(ei, t)          # don't lose frames that are already due
+            lat_s[ei] = float(new_lat[k])
+            fl_new = int(np.floor(lat_s[ei] * rate_nom))
+            s_hi = int(sent[topo.src[ei]])
+            ins = fl_new - len(wires[ei])
+            inserted[ei] += ins
+            w = [(t + lat_s[ei] - kk / rate_nom, s_hi - kk)
+                 for kk in range(fl_new, 0, -1)]
+            heapq.heapify(w)
+            wires[ei] = w
+            if ins != 0:
+                # λ-neutral swaps (sub-frame latency change) splice the
+                # sequence contiguously: no epoch boundary to expect, and
+                # registering one would mask a later real violation.
+                splice_seq.setdefault(ei, []).append(s_hi - fl_new)
+
     corr = np.zeros(n, np.float64)
-    next_tick = np.zeros(n, np.float64)
     next_control = control_period_s
     t_end = duration_s
     # Event loop over node ticks (heap of (time, node)).
@@ -101,6 +179,13 @@ def simulate_frames(
         t, i = heapq.heappop(heap)
         if t > t_end:
             break
+        while pending and t >= pending[0].t:
+            ev = pending.pop(0)
+            if isinstance(ev, _FreqStep):
+                ppm[list(ev.nodes)] += ev.delta_ppm
+                rates = rate_nom * (1.0 + ppm * 1e-6)
+            else:
+                apply_latency_step(ev, t)
         if controller is not None and t >= next_control:
             occ = np.array([len(f) for f in fifos], np.float64) - depth / 2
             err = np.zeros(n, np.float64)
@@ -110,10 +195,7 @@ def simulate_frames(
 
         # Deliver due frames from wires into FIFO tails.
         for ei in in_edges[i]:
-            w = wires[ei]
-            while w and w[0][0] <= t:
-                _, seq = heapq.heappop(w)
-                fifos[ei].append(seq)
+            deliver(ei, t)
 
         # One localtick at node i: pop head of each in-FIFO...
         for ei in in_edges[i]:
@@ -122,8 +204,22 @@ def simulate_frames(
                 lam = sent[i] - seq  # arrival localtick − send localtick
                 if lam_seen[ei] is None:
                     lam_seen[ei] = lam
+                    lam_epochs[ei].append(lam)
                 elif lam != lam_seen[ei] and seq >= 0:
-                    lam_const = False
+                    sp = splice_seq.get(ei)
+                    if sp and seq >= sp[0]:
+                        # A post-event regime reaching the buffer head: a
+                        # new λ epoch, not a constancy violation.  Drop
+                        # every pending splice this pop has reached (a
+                        # rapid re-swap can overtake an unconsumed one).
+                        while sp and seq >= sp[0]:
+                            sp.pop(0)
+                        if not sp:
+                            del splice_seq[ei]
+                        lam_seen[ei] = lam
+                        lam_epochs[ei].append(lam)
+                    else:
+                        lam_const = False
                 popped[ei] += 1
             else:
                 underflow = True
@@ -145,4 +241,4 @@ def simulate_frames(
     return FrameLevelResult(
         lam=lam, lam_constant=lam_const, occupancy_min=occ_min,
         occupancy_max=occ_max, underflow=underflow, overflow=overflow,
-        ticks=sent)
+        ticks=sent, lam_epochs=lam_epochs, inserted=inserted)

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .controller import ControllerConfig, controller_init, controller_step
+from .controller import (ControllerConfig, controller_init, controller_step,
+                         holdover_freeze)
 from .topology import Topology
 
 __all__ = ["LinkParams", "SimConfig", "SimResult", "EnsembleResult",
@@ -60,6 +61,12 @@ class LinkParams:
     latency_s: one-way physical latency (cable + transceiver pipeline).
     beta0: initial elastic-buffer occupancy in frames (normalized; the DDC
       phase uses 0 = half-full).
+
+    Either field may carry a per-draw leading axis — shape (B, E) — for
+    Monte Carlo over cable-length distributions; the batched simulation
+    lanes (``simulate_ensemble`` / ``simulate_ensemble_dense``) consume
+    one row per oscillator draw.  Single-run entry points require the
+    plain (E,) form (use :meth:`draw`).
     """
 
     latency_s: np.ndarray
@@ -67,7 +74,23 @@ class LinkParams:
 
     @property
     def num_edges(self) -> int:
-        return int(np.asarray(self.latency_s).shape[0])
+        return int(np.asarray(self.latency_s).shape[-1])
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        """Leading batch size if any field is per-draw, else None."""
+        for arr in (self.latency_s, self.beta0):
+            arr = np.asarray(arr)
+            if arr.ndim == 2:
+                return int(arr.shape[0])
+        return None
+
+    def draw(self, b: int) -> "LinkParams":
+        """The (E,)-shaped link set of draw ``b``."""
+        pick = lambda arr: (np.asarray(arr)[b] if np.asarray(arr).ndim == 2
+                            else np.asarray(arr))
+        return LinkParams(latency_s=pick(self.latency_s),
+                          beta0=pick(self.beta0))
 
 
 def make_links(
@@ -78,10 +101,28 @@ def make_links(
     pipe_frames: float = PIPE_FRAMES,
     velocity: float = SIGNAL_VELOCITY,
 ) -> LinkParams:
-    """Build LinkParams from cable lengths in meters (per directed edge)."""
-    cable = np.broadcast_to(np.asarray(cable_m, np.float64), (topo.num_edges,))
+    """Build LinkParams from cable lengths in meters (per directed edge).
+
+    ``cable_m`` / ``beta0`` accept scalars, (E,) per-edge arrays, or
+    2-D per-draw arrays broadcastable to (B, E) — e.g. a (B, 1) column of
+    per-draw scale factors or a full (B, E) cable-length sample — which
+    yields batched LinkParams for the ensemble lanes.
+    """
+    cable = np.asarray(cable_m, np.float64)
+    b0 = np.asarray(beta0, np.float64)
+    if cable.ndim == 2 or b0.ndim == 2:
+        b = cable.shape[0] if cable.ndim == 2 else b0.shape[0]
+        if (cable.ndim == 2 and b0.ndim == 2
+                and cable.shape[0] != b0.shape[0]):
+            raise ValueError(
+                f"per-draw cable_m and beta0 disagree on B: "
+                f"{cable.shape[0]} vs {b0.shape[0]}")
+        shape = (b, topo.num_edges)
+    else:
+        shape = (topo.num_edges,)
+    cable = np.broadcast_to(cable, shape)
     lat = cable / velocity + pipe_frames / omega_nom
-    b0 = np.broadcast_to(np.asarray(beta0, np.float64), (topo.num_edges,))
+    b0 = np.broadcast_to(b0, shape)
     return LinkParams(latency_s=lat.astype(np.float64), beta0=b0.astype(np.float64))
 
 
@@ -183,12 +224,15 @@ class EnsembleResult:
             freq_ppm=self.freq_ppm[b], beta=self.beta[b], times=self.times,
             psi=self.psi[b], nu=self.nu[b],
             c_state={k: v[b] for k, v in self.c_state.items()},
-            topo=self.topo, links=self.links, cfg=self.cfg,
-            engine=self.engine)
+            topo=self.topo,
+            links=(self.links.draw(b) if self.links.num_draws is not None
+                   else self.links),
+            cfg=self.cfg, engine=self.engine)
 
 
 def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
-              kp, beta_off, noise_ppm, noise_key, ctrl: ControllerConfig,
+              kp, beta_off, noise_ppm, noise_key, psi0, nu0, c0, edge_w,
+              ctrl_mask, ctrl: ControllerConfig,
               num_nodes: int, outer: int, quantize_beta: bool,
               record_beta: bool):
     """Scan `outer` telemetry records; fori_loop `inner` control periods each.
@@ -199,12 +243,21 @@ def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
     one compiled executable; only topology size, ``outer`` and the
     controller/record flags key the compile cache (``ctrl`` arrives with
     its gains zeroed via ``ControllerConfig.static_key``).
+
+    ``psi0``/``nu0``/``c0`` are the (traced) initial state — the scenario
+    runner threads them across piecewise-constant segments.  ``edge_w``
+    (E,) weights each edge's error contribution (0 = dropped link) and
+    ``ctrl_mask`` (N,) gates the controller per node: a masked-out node
+    freezes both its controller state and its ν at their previous values
+    (clock holdover).  All traced, so event scenarios never recompile.
     """
 
     def occupancies(psi, nu):
         # ν is piecewise-constant over the period, so the delayed-phase
         # term uses the sender's current ν.
         return psi[src] - nu[src] * lat_frames + lam_eff - psi[dst]
+
+    enabled = ctrl_mask > 0.5
 
     def control_period(carry):
         psi, nu, c_state = carry
@@ -213,10 +266,14 @@ def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
             beta = jnp.round(beta)
         # Per-node aggregation: scatter-add (the supported successor of the
         # deprecated jax.ops.segment_sum; identical XLA scatter lowering).
-        err = jnp.zeros((num_nodes,), beta.dtype).at[dst].add(beta - beta_off)
-        c_state, c_corr = controller_step(ctrl, c_state, err, kp)
+        err = jnp.zeros((num_nodes,), beta.dtype).at[dst].add(
+            (beta - beta_off) * edge_w)
+        c_state_new, c_corr = controller_step(ctrl, c_state, err, kp)
+        c_state = holdover_freeze(c_state_new, c_state, enabled)
         # (1+ν_u)(1+c) − 1 without forming 1 + O(1e-6) (f32 cancellation)
-        nu_next = nu_u + c_corr + nu_u * c_corr
+        nu_ctrl = nu_u + c_corr + nu_u * c_corr
+        # Holdover: a masked-out node's ν holds its previous value.
+        nu_next = jnp.where(enabled, nu_ctrl, nu)
         psi_next = psi + nu_next * dt_frames
         return (psi_next, nu_next, c_state)
 
@@ -229,9 +286,6 @@ def _run_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
         rec = (nu * 1e6, beta if record_beta else jnp.zeros((0,), jnp.float32))
         return carry, rec
 
-    psi0 = jnp.zeros((num_nodes,), jnp.float32)
-    c0 = controller_init(ctrl, num_nodes)
-    nu0 = nu_u  # before any correction, clocks run at their unadjusted rate
     carry, (freq, beta) = jax.lax.scan(outer_step, (psi0, nu0, c0), None, length=outer)
     # noise_ppm == 0 adds exact zeros, so the noiseless path stays bitwise
     # identical without a recompile-keying static flag.
@@ -257,20 +311,29 @@ def _jitted_run():
 
 
 def _run_ensemble_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
-                       kp, beta_off, noise_ppm, noise_keys, ctrl, num_nodes,
+                       kp, beta_off, noise_ppm, noise_keys, psi0, nu0, c0,
+                       edge_w, ctrl_mask, ctrl, num_nodes,
                        outer, quantize_beta, record_beta):
     """vmap of `_run_core` over a leading batch of oscillator draws.
 
     ``kp`` and ``beta_off`` are (B,) per-draw gains — the batched
     controller-gain axis (Fig-15-style kp sweeps in one compile).
+    ``lat_frames`` / ``lam_eff`` are (B, E) per-draw link parameters
+    (cable-length distributions; identical rows when shared), and
+    ``psi0``/``nu0``/``c0`` per-draw initial state for segment chaining.
+    ``edge_w`` and ``ctrl_mask`` are shared across the batch (scenario
+    events hit every draw at the same time).
     """
 
-    def one(nu_u_row, key, kp_row, boff_row):
-        return _run_core(src, dst, lat_frames, lam_eff, nu_u_row, dt_frames,
-                         inner, kp_row, boff_row, noise_ppm, key, ctrl,
+    def one(lat_row, lam_row, nu_u_row, key, kp_row, boff_row, psi0_row,
+            nu0_row, c0_row):
+        return _run_core(src, dst, lat_row, lam_row, nu_u_row, dt_frames,
+                         inner, kp_row, boff_row, noise_ppm, key, psi0_row,
+                         nu0_row, c0_row, edge_w, ctrl_mask, ctrl,
                          num_nodes, outer, quantize_beta, record_beta)
 
-    return jax.vmap(one)(nu_u, noise_keys, kp, beta_off)
+    return jax.vmap(one)(lat_frames, lam_eff, nu_u, noise_keys, kp, beta_off,
+                         psi0, nu0, c0)
 
 
 @functools.lru_cache(maxsize=None)
@@ -279,12 +342,56 @@ def _jitted_run_ensemble():
                    donate_argnums=_donate_nu_u())(_run_ensemble_core)
 
 
+def _resolve_init(init, nu_default, num_nodes: int, ctrl: ControllerConfig):
+    """Initial (psi0, nu0, c0) — cold start or chained from a prior run.
+
+    ``init`` may be None (cold start: ψ = 0, ν = ν_u, fresh controller
+    state), a ``(psi, nu, c_state)`` tuple, or any result object exposing
+    ``.psi`` / ``.nu`` / ``.c_state`` (SimResult, EnsembleResult) — the
+    scenario runner's segment-chaining contract.  Chained state is passed
+    through exactly (no re-normalization), so a split run is bit-identical
+    to an unsplit one.
+    """
+    if init is None:
+        shape = np.shape(nu_default)
+        # nu0 must be a distinct buffer: nu_u is donated on TPU/GPU, and
+        # donating an argument that aliases another is undefined.
+        return (jnp.zeros(shape, jnp.float32),
+                jnp.array(nu_default, copy=True),
+                controller_init(ctrl, num_nodes) if len(shape) == 1 else
+                jax.tree_util.tree_map(
+                    lambda z: jnp.broadcast_to(z, shape),
+                    controller_init(ctrl, num_nodes)))
+    if isinstance(init, (tuple, list)):
+        psi, nu, c_state = init
+    else:
+        psi, nu, c_state = init.psi, init.nu, init.c_state
+    return (jnp.asarray(psi, jnp.float32), jnp.asarray(nu, jnp.float32),
+            {k: jnp.asarray(v, jnp.float32) for k, v in c_state.items()})
+
+
+def _edge_node_weights(edge_w, ctrl_mask, num_edges: int, num_nodes: int):
+    """Normalize the (traced) link-drop weights and controller mask."""
+    w = (jnp.ones((num_edges,), jnp.float32) if edge_w is None
+         else jnp.asarray(edge_w, jnp.float32))
+    m = (jnp.ones((num_nodes,), jnp.float32) if ctrl_mask is None
+         else jnp.asarray(ctrl_mask, jnp.float32))
+    if w.shape != (num_edges,):
+        raise ValueError(f"edge_w must be ({num_edges},), got {w.shape}")
+    if m.shape != (num_nodes,):
+        raise ValueError(f"ctrl_mask must be ({num_nodes},), got {m.shape}")
+    return w, m
+
+
 def simulate(
     topo: Topology,
     links: LinkParams,
     ctrl: ControllerConfig,
     ppm_u: np.ndarray,
     cfg: SimConfig = SimConfig(),
+    init=None,
+    edge_w=None,
+    ctrl_mask=None,
 ) -> SimResult:
     """Run the abstract frame model.
 
@@ -295,6 +402,11 @@ def simulate(
       ppm_u: (N,) unadjusted oscillator offsets in ppm (paper: ±8 ppm initial
         accuracy, ±98 ppm worst-case envelope).
       cfg: simulation configuration.
+      init: optional chained state — ``(psi, nu, c_state)`` or a prior
+        SimResult; the scenario runner threads this across segments.
+      edge_w: optional (E,) error-contribution weights (0 = dropped link).
+      ctrl_mask: optional (N,) controller-enable mask (0 = clock holdover:
+        the node's ν and controller state freeze).
     """
     ppm_u = np.asarray(ppm_u, np.float32)
     if ppm_u.shape != (topo.num_nodes,):
@@ -302,14 +414,23 @@ def simulate(
     if np.asarray(ctrl.kp).ndim or np.asarray(ctrl.beta_off).ndim:
         raise ValueError("simulate() takes scalar gains; per-draw kp/beta_off "
                          "arrays are the batched axis of simulate_ensemble()")
+    if links.num_draws is not None:
+        raise ValueError("simulate() takes a single (E,) link set; per-draw "
+                         "(B, E) links are the batched axis of "
+                         "simulate_ensemble()")
     inner, outer = _split_steps(cfg)
     args = _sim_arrays(topo, links, cfg)
+    nu_u = jnp.asarray(ppm_u * 1e-6, jnp.float32)
+    psi0, nu0, c0 = _resolve_init(init, nu_u, topo.num_nodes, ctrl)
+    w, m = _edge_node_weights(edge_w, ctrl_mask, topo.num_edges,
+                              topo.num_nodes)
 
     (psi, nu, c_state), freq, beta = _jitted_run()(
-        *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
+        *args, nu_u,
         jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
         jnp.float32(ctrl.kp), jnp.float32(ctrl.beta_off),
         jnp.float32(cfg.telemetry_noise_ppm), jax.random.PRNGKey(cfg.seed),
+        psi0, nu0, c0, w, m,
         ctrl=ctrl.static_key(), num_nodes=topo.num_nodes, outer=outer,
         quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
 
@@ -335,6 +456,27 @@ def _sim_arrays(topo: Topology, links: LinkParams, cfg: SimConfig):
             jnp.asarray(links.beta0, jnp.float32))  # β(0) with ψ(0)=0
 
 
+def _sim_arrays_batched(topo: Topology, links: LinkParams, cfg: SimConfig,
+                        b: int):
+    """(src, dst, lat (B, E), lam_eff (B, E)) with per-draw links.
+
+    Shared (E,) link parameters are tiled to identical rows, so one vmap
+    structure serves both the shared and the per-draw-links regimes.
+    """
+    e = topo.num_edges
+    lat = np.asarray(links.latency_s, np.float64)
+    b0 = np.asarray(links.beta0, np.float64)
+    for name, arr in (("latency_s", lat), ("beta0", b0)):
+        if arr.ndim == 2 and arr.shape != (b, e):
+            raise ValueError(f"per-draw links.{name} must be (B, E) = "
+                             f"({b}, {e}), got {arr.shape}")
+    lat = np.broadcast_to(lat, (b, e))
+    b0 = np.broadcast_to(b0, (b, e))
+    return (jnp.asarray(topo.src), jnp.asarray(topo.dst),
+            jnp.asarray(lat * cfg.omega_nom, jnp.float32),
+            jnp.asarray(b0, jnp.float32))
+
+
 def broadcast_gain(value, b: int, name: str = "kp") -> np.ndarray:
     """Normalize a controller gain to a (B,) float32 per-draw vector.
 
@@ -357,6 +499,9 @@ def simulate_ensemble(
     ctrl: ControllerConfig,
     ppm_u: np.ndarray,
     cfg: SimConfig = SimConfig(),
+    init=None,
+    edge_w=None,
+    ctrl_mask=None,
 ) -> "EnsembleResult":
     """Run B independent oscillator draws in ONE compiled call.
 
@@ -370,31 +515,49 @@ def simulate_ensemble(
     Fig-15-style kp sweep is ONE compiled batched kernel: tile the same
     oscillator draw across B rows and vary only the gain.
 
+    ``links`` may carry per-draw (B, E) ``latency_s`` / ``beta0`` — a
+    cable-length distribution with one full link sample per draw (this
+    lane has no class-structure restriction; every edge of every draw may
+    differ).  Link parameters are traced per-draw state like the gains,
+    so resampling them never recompiles.
+
     Args:
       ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per draw.
+      init: optional chained state — ``(psi, nu, c_state)`` with (B, N)
+        leaves or a prior EnsembleResult (segment chaining).
+      edge_w: optional (E,) error weights shared across draws (0 = dropped
+        link); ctrl_mask: optional (N,) controller-enable mask (holdover).
 
     Returns:
       EnsembleResult with leading batch axes; draw b reproduces
-      ``simulate(topo, links, ctrl, ppm_u[b], cfg)`` (with draw-b gains) up
-      to vmap'd-reduction float noise (telemetry noise uses per-draw
-      derived keys).
+      ``simulate(topo, links.draw(b), ctrl, ppm_u[b], cfg)`` (with draw-b
+      gains) up to vmap'd-reduction float noise (telemetry noise uses
+      per-draw derived keys).
     """
     ppm_u = np.asarray(ppm_u, np.float32)
     if ppm_u.ndim != 2 or ppm_u.shape[1] != topo.num_nodes:
         raise ValueError(
             f"ppm_u must be (B, {topo.num_nodes}), got {ppm_u.shape}")
     b = ppm_u.shape[0]
+    if links.num_draws is not None and links.num_draws != b:
+        raise ValueError(f"links carry {links.num_draws} draws but ppm_u "
+                         f"has {b}")
     inner, outer = _split_steps(cfg)
-    args = _sim_arrays(topo, links, cfg)
+    args = _sim_arrays_batched(topo, links, cfg, b)
     keys = jax.random.split(jax.random.PRNGKey(cfg.seed), b)
     kp = broadcast_gain(ctrl.kp, b, "kp")
     beta_off = broadcast_gain(ctrl.beta_off, b, "beta_off")
+    nu_u = jnp.asarray(ppm_u * 1e-6, jnp.float32)
+    psi0, nu0, c0 = _resolve_init(init, nu_u, topo.num_nodes, ctrl)
+    w, m = _edge_node_weights(edge_w, ctrl_mask, topo.num_edges,
+                              topo.num_nodes)
 
     (psi, nu, c_state), freq, beta = _jitted_run_ensemble()(
-        *args, jnp.asarray(ppm_u * 1e-6, jnp.float32),
+        *args, nu_u,
         jnp.float32(cfg.omega_nom * cfg.dt), jnp.int32(inner),
         jnp.asarray(kp), jnp.asarray(beta_off),
         jnp.float32(cfg.telemetry_noise_ppm), keys,
+        psi0, nu0, c0, w, m,
         ctrl=ctrl.static_key(), num_nodes=topo.num_nodes, outer=outer,
         quantize_beta=cfg.quantize_beta, record_beta=cfg.record_beta)
 

@@ -85,3 +85,21 @@ class BittideNetwork:
         lsn = LogicalSynchronyNetwork(topo=self.topo, lam=lam)
         return SyncOutcome(sim=sim, lsn=lsn, converged=converged,
                            convergence_time_s=tconv, freq_spread_ppm=spread)
+
+    def run_scenario(self, scenario, ctrl: Optional[ControllerConfig] = None,
+                     cfg: Optional[SimConfig] = None,
+                     engine: str = "segment-sum", **kw):
+        """Run a dynamic-event scenario (cable swaps, drift ramps, holdover,
+        link outages) against this network — the paper's §5.6 live
+        fiber-insertion experiment generalized to any event sequence.
+
+        Delegates to :func:`repro.scenarios.run_scenario`; returns its
+        ScenarioResult (``.lam`` holds the per-segment logical-latency
+        tables whose differences are the Table-2 RTT shifts).
+        """
+        # Deferred import: repro.scenarios composes on top of repro.core.
+        from repro.scenarios import run_scenario as _run_scenario
+        ctrl = ctrl or ControllerConfig(kind="proportional", kp=2e-8)
+        cfg = cfg or SimConfig(dt=1e-4, steps=20_000, record_every=20)
+        return _run_scenario(self.topo, self.links, ctrl, self.ppm_u,
+                             scenario, cfg, engine=engine, **kw)

@@ -4,17 +4,22 @@ bittide_step  pl.pallas_call kernels: per-step baseline + fused multi-period
               batched engine (VMEM-resident adjacency, scratch-carried state,
               in-kernel telemetry decimation) + tiled fused engine (adjacency
               streamed from HBM in double-buffered column panels for
-              Fig-18-scale networks) + the select_engine dispatch heuristic
-ops           jit wrappers + topology densification + fused/ensemble runners
-              (traced per-draw controller gains; DenseResult path metadata)
+              Fig-18-scale networks) + the select_engine dispatch heuristic.
+              Controller gains, per-draw class latencies, per-draw λeff
+              folds and the per-node controller-enable mask are all traced
+              inputs — scenario segments and Monte-Carlo link draws reuse
+              one compiled kernel.
+ops           jit wrappers + topology densification (fixed-class, weighted)
+              + fused/ensemble runners (init-state chaining, per-draw link
+              parameters; DenseResult path metadata + exact .nu)
 ref           pure-jnp oracles the kernels are validated against
 """
 from .bittide_step import (RESIDENT_N_MAX, SUBLANE, TILE, TILE_J_MAX,
                            bittide_fused_pallas, bittide_step_pallas,
                            bittide_tiled_fused_pallas, fused_vmem_bytes,
                            select_engine, tiled_vmem_bytes)
-from .ops import (DenseResult, bittide_step, densify, simulate_dense,
-                  simulate_dense_perstep, simulate_ensemble_dense,
-                  simulate_fused)
+from .ops import (DenseResult, bittide_step, densify, latency_classes,
+                  simulate_dense, simulate_dense_perstep,
+                  simulate_ensemble_dense, simulate_fused)
 from .ref import (bittide_dense_multistep_ref, bittide_dense_step_ref,
                   occupancy_ref)

@@ -55,6 +55,16 @@ Controller gains (``kp``, ``beta_off``) are *traced per-draw inputs* of
 shape (B, 1) in both engines — never compile-time constants — so Fig-15
 style gain sweeps batch along B and compile exactly once.
 
+The scenario subsystem (``repro.scenarios``) extends that principle to the
+physical link parameters and the controller topology itself: the per-class
+latencies are a traced (B, C) input (per-draw cable-length distributions),
+the per-node λeff fold ``lamsum`` is a traced (B, N) input (per-draw /
+per-segment logical-latency constants), and a per-node controller-enable
+mask ``ctrl_mask`` (1, N) gates the frequency update — a masked node's ν
+is *held* at its previous value (clock holdover) instead of recomputed.
+None of these key a compile, so a multi-event scenario replays ONE
+compiled kernel across all of its piecewise-constant segments.
+
 State layout: B is the sublane axis (pad to a multiple of 8 for float32),
 N the lane axis (pad to a multiple of 128); padding nodes have degree 0 and
 stay inert, padding batch rows are dead weight.
@@ -94,8 +104,8 @@ RESIDENT_N_MAX = 2 * TILE
 TILE_J_MAX = 2 * TILE
 
 
-def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_u_ref,
-            deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
+def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_i_ref,
+            nu_u_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
             *, kp: float, beta_off: float, dt_frames: float,
             num_classes: int, j_tiles: int):
     j = pl.program_id(1)
@@ -130,13 +140,16 @@ def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_u_ref,
         # 1 + O(1e-6), which would quantize to float32 eps(1.0) = 1.19e-7.
         c_rel = kp * err
         nu_next = nu_u_ref[...] + c_rel + nu_u_ref[...] * c_rel
+        # Holdover: a masked-out node's ν is frozen at its previous value
+        # (the oscillator keeps its last correction), not recomputed.
+        nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu_i_ref[...])
         psi_out_ref[...] = psi_i_ref[...] + nu_next * dt_frames
         nu_out_ref[...] = nu_next
 
 
 def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
                         kp: float, beta_off: float, dt_frames: float,
-                        *, interpret: bool = False):
+                        *, ctrl_mask=None, interpret: bool = False):
     """One fused bittide control period (per-step baseline kernel).
 
     Args:
@@ -146,6 +159,8 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
       lam_eff: (C, N, N) float32 per-edge effective logical latencies.
       lat_frames: (C,) float32 per-class physical latency in frames.
       kp, beta_off, dt_frames: static controller/integration constants.
+      ctrl_mask: optional (N,) float32 controller-enable mask; nodes with
+        mask 0 hold their previous ν (clock holdover).  None = all enabled.
       interpret: run the kernel body in interpret mode (CPU validation).
 
     Returns:
@@ -160,6 +175,8 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
     # Step-invariant per-node folds.
     deg = a.sum(axis=(0, 2))
     lamsum = lam_eff.sum(axis=(0, 2))
+    if ctrl_mask is None:
+        ctrl_mask = jnp.ones((n,), jnp.float32)
 
     def row(v):  # 2-D (1, N) layout for TPU-friendly vector tiles
         return v.reshape(1, n).astype(jnp.float32)
@@ -177,7 +194,9 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
             pl.BlockSpec((1, TILE), lambda i, j: (0, j)),        # psi_j
             pl.BlockSpec((1, TILE), lambda i, j: (0, j)),        # nu_j
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # psi_i
+            pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # nu_i
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # nu_u
+            pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # ctrl mask
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # deg
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # lamsum
         ],
@@ -191,14 +210,15 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
         ],
         interpret=interpret,
     )(lat_frames.reshape(c, 1).astype(jnp.float32),
-      a.astype(jnp.float32), row(psi), row(nu), row(psi), row(nu_u),
+      a.astype(jnp.float32), row(psi), row(nu), row(psi), row(nu),
+      row(nu_u), row(jnp.asarray(ctrl_mask, jnp.float32)),
       row(deg), row(lamsum))
     return psi_next[0], nu_next[0]
 
 
 def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
-                  boff_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
-                  rec_ref, psi_s, nu_s,
+                  boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
+                  nu_out_ref, rec_ref, psi_s, nu_s,
                   *, dt_frames: float, record_every: int, num_classes: int):
     t = pl.program_id(0)
 
@@ -210,15 +230,17 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
 
     nu_u = nu_u_ref[...]        # (B, N), resident across the whole run
     deg = deg_ref[...]          # (1, N), broadcasts over B
-    lamsum = lamsum_ref[...]
+    lamsum = lamsum_ref[...]    # (B, N) per-draw λeff fold
     kp = kp_ref[...]            # (B, 1) traced per-draw gains
     beta_off = boff_ref[...]
+    lat = lat_ref[...]          # (B, C) traced per-draw class latencies
+    enabled = mask_ref[...] > 0.5   # (1, N) controller-enable mask
 
     def period(_, carry):
         psi, nu = carry
         acc = jnp.zeros_like(psi)
         for c in range(num_classes):
-            x = psi - nu * lat_ref[c, 0]                          # (B, N)
+            x = psi - nu * lat[:, c:c + 1]                        # (B, N)
             # err[b, i] += Σ_j A[c, i, j] · x[b, j]  — an MXU matmul.
             acc = acc + jax.lax.dot_general(
                 x, a_ref[c],
@@ -227,6 +249,8 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         err = acc - (psi + beta_off) * deg + lamsum
         c_rel = kp * err
         nu_next = nu_u + c_rel + nu_u * c_rel
+        # Holdover: masked-out nodes freeze ν at its previous value.
+        nu_next = jnp.where(enabled, nu_next, nu)
         psi_next = psi + nu_next * dt_frames
         return psi_next, nu_next
 
@@ -246,8 +270,10 @@ def fused_vmem_bytes(b: int, n: int, c: int) -> int:
     return 4 * (c * n * n          # A stack
                 + 5 * b * n        # psi0/nu0/nu_u inputs + 2 scratch
                 + 3 * b * n        # psi/nu outputs + one record block
+                + b * n            # per-draw lamsum rows
                 + 2 * b            # kp, beta_off gain columns
-                + 2 * n)           # deg, lamsum
+                + b * c            # per-draw class latencies
+                + 2 * n)           # deg, ctrl mask
 
 
 def tiled_vmem_bytes(b: int, n: int, c: int, tile_j: int) -> int:
@@ -260,8 +286,10 @@ def tiled_vmem_bytes(b: int, n: int, c: int, tile_j: int) -> int:
                 + 5 * b * n         # psi0/nu0/nu_u inputs + psi/nu scratch
                 + b * n             # accumulator scratch
                 + 3 * b * n         # psi/nu outputs + one record block
+                + b * n             # per-draw lamsum rows
                 + 2 * b             # kp, beta_off gain columns
-                + 2 * n)            # deg, lamsum
+                + b * c             # per-draw class latencies
+                + 2 * n)            # deg, ctrl mask
 
 
 def select_engine(b: int, n: int, c: int,
@@ -300,6 +328,41 @@ def _gain_col(v, b: int, name: str):
     return col.reshape(b, 1)
 
 
+def _lat_rows(lat_frames, b: int, c: int):
+    """Normalize per-class latencies — (C,) shared or (B, C) per-draw —
+    to the (B, C) traced input the fused kernels consume."""
+    lat = jnp.asarray(lat_frames, jnp.float32)
+    if lat.ndim == 1:
+        lat = jnp.broadcast_to(lat.reshape(1, -1), (b, lat.shape[0]))
+    if lat.shape != (b, c):
+        raise ValueError(f"lat_frames must be ({c},) or ({b}, {c}), "
+                         f"got {jnp.shape(lat_frames)}")
+    return lat
+
+
+def _lamsum_rows(lamsum, b: int, n: int):
+    """Normalize the per-node λeff fold — (N,)/(1, N) shared or (B, N)
+    per-draw — to the (B, N) traced input the fused kernels consume."""
+    ls = jnp.asarray(lamsum, jnp.float32)
+    if ls.ndim == 1 or ls.shape[0] == 1:
+        ls = jnp.broadcast_to(ls.reshape(1, n), (b, n))
+    if ls.shape != (b, n):
+        raise ValueError(f"lamsum must be ({n},), (1, {n}) or ({b}, {n}), "
+                         f"got {jnp.shape(lamsum)}")
+    return ls
+
+
+def _mask_row(ctrl_mask, n: int):
+    """Normalize the controller-enable mask to a (1, N) float32 row."""
+    if ctrl_mask is None:
+        return jnp.ones((1, n), jnp.float32)
+    mask = jnp.asarray(ctrl_mask, jnp.float32).reshape(1, -1)
+    if mask.shape != (1, n):
+        raise ValueError(f"ctrl_mask must be ({n},), got "
+                         f"{jnp.shape(ctrl_mask)}")
+    return mask
+
+
 def _check_shapes(b, n, num_records, record_every):
     if n % TILE:
         raise ValueError(f"N={n} must be a multiple of {TILE}")
@@ -312,21 +375,25 @@ def _check_shapes(b, n, num_records, record_every):
 def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                          kp, beta_off, dt_frames: float,
                          *, num_records: int, record_every: int,
-                         interpret: bool = False):
+                         ctrl_mask=None, interpret: bool = False):
     """Advance ``num_records * record_every`` control periods in ONE kernel.
 
     Args:
       psi, nu, nu_u: (B, N) float32 state for B independent oscillator
         draws (B a multiple of SUBLANE, N a multiple of TILE).
       a: (C, N, N) float32 adjacency masks per latency class.
-      deg, lamsum: (1, N) float32 step-invariant per-node folds
-        (Σ_{c,j} A[c,·,j] and Σ_{c,j} λeff[c,·,j]).
-      lat_frames: (C,) float32 per-class physical latency in frames.
+      deg: (1, N) float32 step-invariant per-node degree Σ_{c,j} A[c,·,j].
+      lamsum: per-node λeff fold Σ_{c,j} λeff[c,·,j] — (N,)/(1, N) shared
+        or (B, N) per-draw (scenario segments, per-draw link params).
+      lat_frames: per-class physical latency in frames — (C,) shared or
+        (B, C) per-draw (cable-length distributions).
       kp, beta_off: traced controller gains — a scalar or a length-B
         per-draw vector (the batched gain-sweep axis); never compile keys.
       dt_frames: static integration constant.
       num_records: telemetry records to emit (grid length).
       record_every: control periods fused per record (in-kernel loop).
+      ctrl_mask: optional (N,) controller-enable mask — nodes with mask 0
+        hold their previous ν (clock holdover).  Traced; None = all on.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
@@ -352,15 +419,16 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         kern,
         grid=(num_records,),
         in_specs=[
-            pl.BlockSpec((c, 1), full2),                 # lat (C, 1)
+            pl.BlockSpec((b, c), full2),                 # lat per draw
             pl.BlockSpec((c, n, n), lambda t: (0, 0, 0)),  # A, resident
             pl.BlockSpec((b, n), full2),                 # psi0
             pl.BlockSpec((b, n), full2),                 # nu0
             pl.BlockSpec((b, n), full2),                 # nu_u
             pl.BlockSpec((b, 1), full2),                 # kp per draw
             pl.BlockSpec((b, 1), full2),                 # beta_off per draw
+            pl.BlockSpec((1, n), full2),                 # ctrl mask
             pl.BlockSpec((1, n), full2),                 # deg
-            pl.BlockSpec((1, n), full2),                 # lamsum
+            pl.BlockSpec((b, n), full2),                 # lamsum per draw
         ],
         out_specs=[
             pl.BlockSpec((b, n), full2),                 # psi final
@@ -377,18 +445,17 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pltpu.VMEM((b, n), jnp.float32),             # ν carry
         ],
         interpret=interpret,
-    )(lat_frames.reshape(c, 1).astype(jnp.float32), a.astype(jnp.float32),
+    )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
       psi.astype(jnp.float32), nu.astype(jnp.float32),
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"),
-      deg.reshape(1, n).astype(jnp.float32),
-      lamsum.reshape(1, n).astype(jnp.float32))
+      _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
+      deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
     return psi_f, nu_f, rec
 
 
 def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
-                  boff_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
-                  rec_ref, psi_s, nu_s, acc_s,
+                  boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
+                  nu_out_ref, rec_ref, psi_s, nu_s, acc_s,
                   *, dt_frames: float, tile_j: int, num_classes: int):
     t = pl.program_id(0)
     p = pl.program_id(1)
@@ -408,9 +475,10 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     cols = pl.ds(pl.multiple_of(j * tile_j, TILE), tile_j)
     psi_j = psi_s[:, cols]                                    # (B, TJ)
     nu_j = nu_s[:, cols]
+    lat = lat_ref[...]                                        # (B, C)
     partial = jnp.zeros(psi_s.shape, jnp.float32)
     for c in range(num_classes):
-        x = psi_j - nu_j * lat_ref[c, 0]
+        x = psi_j - nu_j * lat[:, c:c + 1]
         # err[b, i] += Σ_{j∈panel} A[c, i, j] · x[b, j]
         partial = partial + jax.lax.dot_general(
             x, a_ref[c],
@@ -429,11 +497,14 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     @pl.when(j == j_tiles - 1)
     def _finalize():
         psi = psi_s[...]
+        nu = nu_s[...]
         nu_u = nu_u_ref[...]
         err = (acc_s[...] - (psi + boff_ref[...]) * deg_ref[...]
                + lamsum_ref[...])
         c_rel = kp_ref[...] * err
         nu_next = nu_u + c_rel + nu_u * c_rel
+        # Holdover: masked-out nodes freeze ν at its previous value.
+        nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu)
         psi_next = psi + nu_next * dt_frames
         psi_s[...] = psi_next
         nu_s[...] = nu_next
@@ -447,7 +518,8 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
 def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                                kp, beta_off, dt_frames: float,
                                *, num_records: int, record_every: int,
-                               tile_j: int, interpret: bool = False):
+                               tile_j: int, ctrl_mask=None,
+                               interpret: bool = False):
     """Tiled fused engine: adjacency streamed in (C, N, tile_j) panels.
 
     Same contract as :func:`bittide_fused_pallas`, but the grid is
@@ -481,7 +553,7 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         kern,
         grid=(num_records, record_every, j_tiles),
         in_specs=[
-            pl.BlockSpec((c, 1), full3),                   # lat (C, 1)
+            pl.BlockSpec((b, c), full3),                   # lat per draw
             # A column panel: the index map advances with j, so the Pallas
             # pipeline double-buffers the HBM fetch of panel j+1 behind the
             # matmul on panel j.
@@ -491,8 +563,9 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((b, n), full3),                   # nu_u
             pl.BlockSpec((b, 1), full3),                   # kp per draw
             pl.BlockSpec((b, 1), full3),                   # beta_off
+            pl.BlockSpec((1, n), full3),                   # ctrl mask
             pl.BlockSpec((1, n), full3),                   # deg
-            pl.BlockSpec((1, n), full3),                   # lamsum
+            pl.BlockSpec((b, n), full3),                   # lamsum per draw
         ],
         out_specs=[
             pl.BlockSpec((b, n), full3),                   # psi final
@@ -510,10 +583,9 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pltpu.VMEM((b, n), jnp.float32),               # err accumulator
         ],
         interpret=interpret,
-    )(lat_frames.reshape(c, 1).astype(jnp.float32), a.astype(jnp.float32),
+    )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
       psi.astype(jnp.float32), nu.astype(jnp.float32),
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"),
-      deg.reshape(1, n).astype(jnp.float32),
-      lamsum.reshape(1, n).astype(jnp.float32))
+      _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
+      deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
     return psi_f, nu_f, rec

@@ -29,8 +29,18 @@ points are:
     benchmark baseline that the fused engine is measured against.
 
 All dense runners return a :class:`DenseResult` — a 2-tuple
-``(freq_ppm, psi)`` (unpacks exactly like before) carrying ``.engine`` and
-``.tile_j`` dispatch metadata that tests and benchmarks assert on.
+``(freq_ppm, psi)`` (unpacks exactly like before) carrying ``.engine`` /
+``.tile_j`` dispatch metadata and ``.nu``, the exact final frequencies
+for segment chaining.
+
+Scenario plumbing (``repro.scenarios``): ``init=`` seeds the state from
+a prior result, ``ctrl_mask=`` gates the controller per node (holdover),
+``edge_w=`` drops links from the error aggregation, and ``lat_classes=``
+pins the dense latency-class axis so piecewise-constant segments share
+one compiled kernel.  ``links`` may carry per-draw (B, E) parameters —
+the dense lane requires a shared class structure (one latency per class
+per draw); fully heterogeneous per-draw links run on the segment-sum
+lane in ``repro.core.frame_model``.
 
 On CPU (this container) the kernels run in interpret mode; on TPU the same
 code path compiles to Mosaic.  `interpret=None` auto-detects.
@@ -54,7 +64,7 @@ from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES,
                            select_engine, tiled_vmem_bytes)
 from .ref import bittide_dense_multistep_ref, bittide_dense_step_ref
 
-__all__ = ["densify", "bittide_step", "simulate_dense",
+__all__ = ["densify", "latency_classes", "bittide_step", "simulate_dense",
            "simulate_dense_perstep", "simulate_fused",
            "simulate_ensemble_dense", "DenseResult"]
 
@@ -77,20 +87,82 @@ class DenseResult(tuple):
     the dispatch heuristic chose (``"fused"`` | ``"tiled"`` |
     ``"per-step"`` | ``"ref"``) and ``.tile_j`` is the adjacency j-panel
     width in nodes (== padded N when the stack is VMEM-resident).
+
+    ``.nu`` carries the exact final relative frequencies (same layout as
+    ``psi``) so a result can seed the next run via ``init=`` — the
+    scenario runner's segment-chaining contract.  (``freq_ppm[..., -1, :]``
+    is ν·1e6 rounded through float32 and does NOT round-trip bitwise.)
     """
 
     engine: str
     tile_j: int
+    nu: Optional[np.ndarray]
 
-    def __new__(cls, freq_ppm, psi, engine: str, tile_j: int):
+    def __new__(cls, freq_ppm, psi, engine: str, tile_j: int, nu=None):
         self = tuple.__new__(cls, (freq_ppm, psi))
         self.engine = engine
         self.tile_j = int(tile_j)
+        self.nu = nu
         return self
 
 
+def latency_classes(lat_frames: np.ndarray,
+                    quantum_frames: Optional[float] = None,
+                    lat_classes: Optional[np.ndarray] = None,
+                    warn: bool = True):
+    """Group per-edge latencies (frames) into dense kernel classes.
+
+    Returns (classes (C,) float32, inv (E,) int64 edge→class map).
+
+    With ``lat_classes`` given, edges are assigned to the nearest of the
+    provided class values, which must match to <= 1e-6 frames — this is
+    how the scenario compiler keeps the class *axis* (and therefore the
+    compiled kernel shapes) identical across piecewise-constant segments
+    whose latency *values* differ.
+    """
+    lat_frames = np.asarray(lat_frames, np.float64)
+    if lat_classes is not None:
+        classes = np.asarray(lat_classes, np.float64).reshape(-1)
+        inv = np.abs(lat_frames[:, None] - classes[None, :]).argmin(axis=1)
+        # Relative tolerance: class vectors round-trip through float32
+        # (the kernels' latency dtype), which costs ~1e-7 relative.
+        err = np.abs(lat_frames - classes[inv])
+        tol = 1e-6 + 1e-6 * np.abs(classes[inv])
+        if np.any(err > tol):
+            worst = int(err.argmax())
+            raise ValueError(
+                f"edge latency {lat_frames[worst]:.6f} frames does "
+                f"not match any provided latency class (off by "
+                f"{err[worst]:.3g}); classes={classes}")
+        return classes.astype(np.float32), inv.astype(np.int64)
+    if quantum_frames is None:
+        classes, inv = np.unique(lat_frames, return_inverse=True)
+        if len(classes) <= MAX_EXACT_CLASSES:
+            return classes.astype(np.float32), inv.astype(np.int64)
+        # Heterogeneous latencies (e.g. per-edge jittered cable lengths)
+        # would make C explode and the (C, N, N) stack unaffordable;
+        # merge with a quantum sized from the latency spread so the
+        # class count stays bounded whatever the distribution.  rint
+        # over a spread of S quanta can land in S+1 distinct bins, so
+        # divide by MAX-1 to keep the bound at MAX exactly.
+        spread = float(lat_frames.max() - lat_frames.min())
+        quantum_frames = max(0.25, spread / (MAX_EXACT_CLASSES - 1))
+        if warn:
+            warnings.warn(
+                f"densify: {len(classes)} exact latency classes > "
+                f"{MAX_EXACT_CLASSES}; merging with quantum_frames="
+                f"{quantum_frames:.3g} (pass quantum_frames explicitly to "
+                "control this)", stacklevel=3)
+    q = np.rint(lat_frames / quantum_frames).astype(np.int64)
+    classes, inv = np.unique(q, return_inverse=True)
+    return ((classes * quantum_frames).astype(np.float32),
+            inv.astype(np.int64))
+
+
 def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
-            quantum_frames: Optional[float] = None, tile: int = TILE):
+            quantum_frames: Optional[float] = None, tile: int = TILE,
+            lat_classes: Optional[np.ndarray] = None,
+            edge_w: Optional[np.ndarray] = None):
     """Edge list -> (A, lam_eff, lat_classes, n_padded).
 
     Edges are grouped into latency classes; the paper's setups have
@@ -101,32 +173,21 @@ def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
     near-equal latencies when a heterogeneous harness would otherwise
     produce too many classes.
 
+    ``lat_classes`` pins the class axis to a precomputed latency vector
+    (the scenario compiler's global class set, so every segment compiles
+    to the same (C, N, N) shapes); ``edge_w`` scales each edge's
+    adjacency/λeff contribution — weight 0 removes a dropped link from
+    the aggregation entirely.
+
     The per-class scatter is a vectorized ``np.add.at`` (duplicate edges
     accumulate, so multigraphs are supported).
     """
     lat_frames = np.asarray(links.latency_s, np.float64) * omega_nom
-    if quantum_frames is None:
-        classes, inv = np.unique(lat_frames, return_inverse=True)
-        if len(classes) > MAX_EXACT_CLASSES:
-            # Heterogeneous latencies (e.g. per-edge jittered cable lengths)
-            # would make C explode and the (C, N, N) stack unaffordable;
-            # merge with a quantum sized from the latency spread so the
-            # class count stays bounded whatever the distribution.  rint
-            # over a spread of S quanta can land in S+1 distinct bins, so
-            # divide by MAX-1 to keep the bound at MAX exactly.
-            spread = float(lat_frames.max() - lat_frames.min())
-            quantum_frames = max(0.25, spread / (MAX_EXACT_CLASSES - 1))
-            warnings.warn(
-                f"densify: {len(classes)} exact latency classes > "
-                f"{MAX_EXACT_CLASSES}; merging with quantum_frames="
-                f"{quantum_frames:.3g} (pass quantum_frames explicitly to "
-                "control this)", stacklevel=2)
-        else:
-            lat_classes = classes.astype(np.float32)
-    if quantum_frames is not None:
-        q = np.rint(lat_frames / quantum_frames).astype(np.int64)
-        classes, inv = np.unique(q, return_inverse=True)
-        lat_classes = (classes * quantum_frames).astype(np.float32)
+    if lat_frames.ndim != 1:
+        raise ValueError(
+            "densify takes a single link set; per-draw (B, E) links are "
+            "handled by simulate_ensemble_dense")
+    classes, inv = latency_classes(lat_frames, quantum_frames, lat_classes)
     c = len(classes)
     n = topo.num_nodes
     n_pad = ((n + tile - 1) // tile) * tile
@@ -134,53 +195,97 @@ def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
     lam = np.zeros((c, n_pad, n_pad), np.float32)
     dst = np.asarray(topo.dst, np.int64)
     src = np.asarray(topo.src, np.int64)
-    np.add.at(a, (inv, dst, src), 1.0)
-    np.add.at(lam, (inv, dst, src), np.asarray(links.beta0, np.float64))
-    return (jnp.asarray(a), jnp.asarray(lam), jnp.asarray(lat_classes), n_pad)
+    w = (np.ones(topo.num_edges, np.float64) if edge_w is None
+         else np.asarray(edge_w, np.float64))
+    np.add.at(a, (inv, dst, src), w)
+    np.add.at(lam, (inv, dst, src), np.asarray(links.beta0, np.float64) * w)
+    return (jnp.asarray(a), jnp.asarray(lam), jnp.asarray(classes), n_pad)
 
 
 @functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
                                              "interpret", "use_ref"))
 def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
-                 interpret: bool = True, use_ref: bool = False):
+                 interpret: bool = True, use_ref: bool = False,
+                 ctrl_mask=None):
     """One control period (per-step baseline path)."""
     if use_ref:
         psi2, nu2, _ = bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat,
-                                              kp, beta_off, dt_frames)
+                                              kp, beta_off, dt_frames,
+                                              ctrl_mask)
         return psi2, nu2
     return bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat,
-                               kp, beta_off, dt_frames, interpret=interpret)
+                               kp, beta_off, dt_frames, ctrl_mask=ctrl_mask,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
                                              "record_every", "engine",
                                              "tile_j", "interpret",
                                              "use_ref"))
-def _fused_engine(psi, nu, nu_u, kp, beta_off, a, lam_eff, lat, dt_frames,
-                  num_records, record_every, engine, tile_j, interpret,
-                  use_ref):
+def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
+                  lamsum, lat, dt_frames, num_records, record_every, engine,
+                  tile_j, interpret, use_ref):
     """jit entry for the fused engines; one compile per (B, N, C, statics).
 
     ``kp`` / ``beta_off`` are traced (B,) per-draw gain vectors — gain
-    sweeps share one executable.  ``engine``/``tile_j`` come from
-    :func:`repro.kernels.bittide_step.select_engine`.
+    sweeps share one executable.  ``ctrl_mask`` (N,), ``lamsum`` (B, N)
+    and ``lat`` (B, C) are likewise traced — the scenario runner swaps
+    them per segment against ONE compiled kernel.  ``engine``/``tile_j``
+    come from :func:`repro.kernels.bittide_step.select_engine`.
     """
     if use_ref:
         return bittide_dense_multistep_ref(
             psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
-            num_records, record_every)
-    # Step-invariant per-node folds, hoisted out of the record grid.
+            num_records, record_every, ctrl_mask)
+    # Step-invariant per-node degree fold, hoisted out of the record grid.
     deg = a.sum(axis=(0, 2))
-    lamsum = lam_eff.sum(axis=(0, 2))
     if engine == "tiled":
         return bittide_tiled_fused_pallas(
             psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
             num_records=num_records, record_every=record_every,
-            tile_j=tile_j, interpret=interpret)
+            tile_j=tile_j, ctrl_mask=ctrl_mask, interpret=interpret)
     return bittide_fused_pallas(
         psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every,
-        interpret=interpret)
+        ctrl_mask=ctrl_mask, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
+                                             "num_records", "record_every",
+                                             "interpret", "use_ref"))
+def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
+                    dt_frames, num_records, record_every, interpret,
+                    use_ref):
+    """Capability-fallback engine with the fused engines' record contract.
+
+    A scan of per-period 2-D kernels (one ``pallas_call`` per control
+    period) that decimates ν telemetry to every ``record_every`` periods
+    and accepts arbitrary initial state — so the scenario runner can chain
+    it across segments exactly like the fused engines.  Gains are static
+    compile keys on this path (it exists for capability, not speed), but
+    the link arrays and the controller mask are traced, so a multi-segment
+    scenario still compiles it exactly once.
+    """
+
+    def period(carry, _):
+        psi, nu = carry
+        if use_ref:
+            psi, nu, _ = bittide_dense_step_ref(
+                psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
+                ctrl_mask)
+        else:
+            psi, nu = bittide_step_pallas(
+                psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
+                ctrl_mask=ctrl_mask, interpret=interpret)
+        return (psi, nu), None
+
+    def record(carry, _):
+        carry, _ = jax.lax.scan(period, carry, None, length=record_every)
+        return carry, carry[1]
+
+    (psi, nu), rec = jax.lax.scan(record, (psi, nu), None,
+                                  length=num_records)
+    return psi, nu, rec
 
 
 def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]:
@@ -199,6 +304,80 @@ def _pad_gain(gain: np.ndarray, b_pad: int) -> jnp.ndarray:
     return jnp.asarray(out)
 
 
+def _pad_state(state: np.ndarray, b_pad: int, n_pad: int) -> jnp.ndarray:
+    """(B, N) chained state -> (B_pad, N_pad) with inert zero padding."""
+    b, n = np.asarray(state).shape
+    out = np.zeros((b_pad, n_pad), np.float32)
+    out[:b, :n] = np.asarray(state, np.float32)
+    return jnp.asarray(out)
+
+
+def _link_rows(links: LinkParams, b: int, num_edges: int):
+    """Normalize LinkParams to per-draw (B, E) latency/beta0 rows.
+
+    Returns (batched, lat_s (B, E) float64, beta0 (B, E) float64,
+    beta0_batched) — ``batched`` is True when either field carried a
+    per-draw leading axis (the Monte-Carlo cable-length-distribution
+    regime).
+    """
+    lat = np.asarray(links.latency_s, np.float64)
+    b0 = np.asarray(links.beta0, np.float64)
+    batched = lat.ndim == 2 or b0.ndim == 2
+    for name, arr in (("latency_s", lat), ("beta0", b0)):
+        if arr.ndim == 2 and arr.shape != (b, num_edges):
+            raise ValueError(
+                f"per-draw links.{name} must be (B, E) = ({b}, "
+                f"{num_edges}), got {arr.shape}")
+        if arr.ndim == 1 and arr.shape != (num_edges,):
+            raise ValueError(
+                f"links.{name} must be ({num_edges},) or ({b}, "
+                f"{num_edges}), got {arr.shape}")
+    beta0_batched = b0.ndim == 2
+    lat = np.broadcast_to(lat, (b, num_edges)) if lat.ndim == 1 else lat
+    b0 = np.broadcast_to(b0, (b, num_edges)) if b0.ndim == 1 else b0
+    return batched, lat, b0, beta0_batched
+
+
+def _per_draw_class_values(lat_frames: np.ndarray, classes: np.ndarray,
+                           inv: np.ndarray) -> np.ndarray:
+    """(B, E) per-draw edge latencies -> (B, C) per-draw class values.
+
+    The dense engines batch link parameters along the class axis, so all
+    edges of one class must share one latency *within each draw* (the
+    class structure — which edge belongs to which class — is shared
+    across draws).  Fully heterogeneous per-draw links belong on the
+    segment-sum lane (``repro.core.simulate_ensemble``).
+    """
+    c = len(classes)
+    rep = np.array([int(np.argmax(inv == ci)) for ci in range(c)])
+    latv = lat_frames[:, rep]                                 # (B, C)
+    dev = np.abs(lat_frames - latv[:, inv])
+    err = (dev / (1.0 + np.abs(latv[:, inv]))).max(initial=0.0)
+    if err > 1e-6:
+        raise ValueError(
+            "per-draw link latencies must share the class structure (one "
+            "latency per class per draw; edges of a class may not differ "
+            f"within a draw — max deviation {err:.3g} frames).  Use "
+            "repro.core.simulate_ensemble (segment-sum lane) for fully "
+            "heterogeneous per-draw links.")
+    return latv.astype(np.float32)
+
+
+def _lamsum_host(topo: Topology, beta0: np.ndarray, edge_w, b_rows: int,
+                 n_pad: int) -> np.ndarray:
+    """Per-node λeff fold Σ_{e→i} w_e·β0_e as (b_rows, n_pad) rows."""
+    w = (np.ones(topo.num_edges, np.float64) if edge_w is None
+         else np.asarray(edge_w, np.float64))
+    contrib = np.broadcast_to(beta0 * w, (b_rows, topo.num_edges))
+    out = np.zeros((b_rows, n_pad), np.float64)
+    rows = np.broadcast_to(np.arange(b_rows)[:, None],
+                           (b_rows, topo.num_edges))
+    dst = np.broadcast_to(np.asarray(topo.dst, np.int64)[None, :],
+                          (b_rows, topo.num_edges))
+    np.add.at(out, (rows, dst), contrib)
+    return out.astype(np.float32)
+
+
 def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             steps: int, kp, dt: float = 1e-3,
                             beta_off=0.0, record_every: int = 1,
@@ -206,10 +385,19 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             interpret: Optional[bool] = None,
                             use_ref: bool = False,
                             engine: str = "auto",
-                            tile_j: Optional[int] = None) -> DenseResult:
+                            tile_j: Optional[int] = None,
+                            init=None, ctrl_mask=None,
+                            lat_classes: Optional[np.ndarray] = None,
+                            edge_w: Optional[np.ndarray] = None) -> DenseResult:
     """Batched fused synchronization: B draws in one compiled call.
 
     Args:
+      links: per-edge physical parameters.  ``latency_s`` / ``beta0`` may
+        carry a per-draw leading axis — (B, E) — to run a cable-length
+        distribution (one link sample per draw).  The dense lane requires
+        per-draw latencies to share the latency-class structure (one value
+        per class per draw); fully heterogeneous per-draw links belong on
+        the segment-sum lane.
       ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per
         independent draw (the paper's ±8 ppm Monte Carlo sweeps).
       steps: control periods to advance (floor-truncated to a multiple of
@@ -224,10 +412,23 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         panels), or "per-step" (scan-of-kernels fallback).
       tile_j: j-panel width for the tiled engine (defaults to the
         heuristic's choice; must be a multiple of TILE dividing padded N).
+      init: optional ``(psi, nu)`` pair of (B, N) arrays (or a prior
+        ``DenseResult`` with ``.nu``) seeding the state — the scenario
+        runner's segment-chaining hook.  Default: cold start (ψ = 0,
+        ν = ν_u).
+      ctrl_mask: optional (N,) controller-enable mask; masked-out nodes
+        hold their previous ν (clock holdover).  Traced — toggling it
+        never recompiles.
+      lat_classes: optional precomputed latency-class vector (frames)
+        pinning the dense class axis (scenario segments share one global
+        class set so every segment hits one compiled kernel).
+      edge_w: optional (E,) edge weights; weight 0 removes a (dropped)
+        link from the error aggregation.
 
     Returns:
       DenseResult ``(freq_ppm (B, R, N), psi (B, N))`` with
-      R = steps // record_every and ``.engine`` / ``.tile_j`` metadata.
+      R = steps // record_every, ``.engine`` / ``.tile_j`` metadata and
+      ``.nu`` — the exact final frequencies for chaining.
     """
     ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
     if ppm_u.shape[1] != topo.num_nodes:
@@ -237,13 +438,61 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     if num_records < 1:
         raise ValueError("steps must be >= record_every")
     b = ppm_u.shape[0]
+    n = topo.num_nodes
     kp = broadcast_gain(kp, b, "kp")
     beta_off = broadcast_gain(beta_off, b, "beta_off")
 
-    a, lam_eff, lat, n_pad = densify(topo, links, omega_nom)
+    batched, lat_be, beta0_be, beta0_batched = _link_rows(
+        links, b, topo.num_edges)
+    if beta0_batched and use_ref:
+        raise ValueError("use_ref does not support per-draw beta0 (the "
+                         "oracle's lam_eff tensor is shared across draws)")
+    if batched:
+        # Class structure from draw 0 (possibly quantum-merged); snap the
+        # densified grouping to it so the class AXIS is draw-invariant,
+        # then read each draw's class VALUES off its own latency rows.
+        lat_frames_be = lat_be * omega_nom
+        classes_np, inv = latency_classes(lat_frames_be[0],
+                                          lat_classes=lat_classes)
+        classes_np = np.asarray(classes_np, np.float64)
+        latv = _per_draw_class_values(lat_frames_be, classes_np, inv)
+        links0 = LinkParams(latency_s=classes_np[inv] / omega_nom,
+                            beta0=beta0_be[0])
+    else:
+        links0 = LinkParams(latency_s=lat_be[0], beta0=beta0_be[0])
+    a, lam_eff, classes, n_pad = densify(
+        topo, links0, omega_nom,
+        lat_classes=classes_np if batched else lat_classes, edge_w=edge_w)
     c = a.shape[0]
-    nu_u, b_pad = _pad_batch(ppm_u, topo.num_nodes, n_pad)
-    psi = jnp.zeros_like(nu_u)
+    classes_np = np.asarray(classes, np.float64)
+    if not batched:
+        latv = np.broadcast_to(classes_np.astype(np.float32)[None, :],
+                               (b, c))
+    lamsum_rows = _lamsum_host(topo, beta0_be if beta0_batched
+                               else beta0_be[0][None], edge_w,
+                               b if beta0_batched else 1, n_pad)
+
+    nu_u, b_pad = _pad_batch(ppm_u, n, n_pad)
+    if init is None:
+        psi0, nu0 = jnp.zeros_like(nu_u), nu_u
+    else:
+        init_psi = init[1] if isinstance(init, DenseResult) else init[0]
+        init_nu = init.nu if isinstance(init, DenseResult) else init[1]
+        if init_nu is None:
+            raise ValueError("init DenseResult lacks .nu (produced by a "
+                             "pre-chaining build?)")
+        init_psi = np.atleast_2d(init_psi)
+        init_nu = np.atleast_2d(init_nu)
+        for name, arr in (("psi", init_psi), ("nu", init_nu)):
+            if arr.shape != (b, n):
+                raise ValueError(
+                    f"init {name} must be (B, N) = ({b}, {n}), got "
+                    f"{arr.shape}")
+        psi0 = _pad_state(init_psi, b_pad, n_pad)
+        nu0 = _pad_state(init_nu, b_pad, n_pad)
+    mask_pad = np.ones((n_pad,), np.float32)
+    if ctrl_mask is not None:
+        mask_pad[:n] = np.asarray(ctrl_mask, np.float32)
     interp = _auto_interpret(interpret)
 
     if use_ref:
@@ -271,25 +520,44 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                 f"no fused/tiled working set fits the VMEM budget for "
                 f"B={b_pad}, N={n_pad}, C={c}; falling back to the per-step "
                 "kernel", stacklevel=2)
-        freqs, psis = [], []
-        for row, kp_row, boff_row in zip(ppm_u, kp, beta_off):
-            f, p = simulate_dense_perstep(
-                topo, links, row, num_records * record_every, float(kp_row),
-                dt=dt, beta_off=float(boff_row), omega_nom=omega_nom,
-                interpret=interp)
-            freqs.append(f[record_every - 1::record_every])
-            psis.append(p)
-        return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0)
+        freqs, psis, nus = [], [], []
+        mask_j = jnp.asarray(mask_pad)
+        for bi in range(b):
+            if beta0_batched:
+                _, lam_bi, _, _ = densify(
+                    topo, LinkParams(latency_s=lat_be[bi],
+                                     beta0=beta0_be[bi]),
+                    omega_nom, lat_classes=classes_np, edge_w=edge_w)
+            else:
+                lam_bi = lam_eff
+            psi_f, nu_f, rec = _perstep_engine(
+                psi0[bi], nu0[bi], nu_u[bi], mask_j, a, lam_bi,
+                jnp.asarray(latv[bi]), float(kp[bi]), float(beta_off[bi]),
+                float(omega_nom * dt), int(num_records), int(record_every),
+                interp, bool(use_ref))
+            freqs.append(np.asarray(rec)[:, :n] * 1e6)
+            psis.append(np.asarray(psi_f)[:n])
+            nus.append(np.asarray(nu_f)[:n])
+        return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0,
+                           nu=np.stack(nus))
 
-    psi_f, _, rec = _fused_engine(
-        psi, nu_u, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
-        a, lam_eff, lat, float(omega_nom * dt), int(num_records),
+    lat_pad = np.zeros((b_pad, c), np.float32)
+    lat_pad[:b] = latv
+    lat_pad[b:] = classes_np.astype(np.float32)[None, :]
+    lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
+    lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
+
+    psi_f, nu_f, rec = _fused_engine(
+        psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
+        jnp.asarray(mask_pad), a, lam_eff, jnp.asarray(lamsum_pad),
+        jnp.asarray(lat_pad), float(omega_nom * dt), int(num_records),
         int(record_every), str(chosen), int(tj), interp, bool(use_ref))
 
-    freq = np.asarray(rec)[:, :b, :topo.num_nodes] * 1e6   # (R, B, N)
+    freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
-        np.asarray(psi_f)[:b, :topo.num_nodes], chosen, tj)
+        np.asarray(psi_f)[:b, :n], chosen, tj,
+        nu=np.asarray(nu_f)[:b, :n])
 
 
 def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
@@ -297,15 +565,26 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    record_every: int = 1, omega_nom: float = OMEGA_NOM,
                    interpret: Optional[bool] = None,
                    use_ref: bool = False, engine: str = "auto",
-                   tile_j: Optional[int] = None) -> DenseResult:
-    """Single-draw fused run; returns (freq_ppm (R, N), psi (N,))."""
+                   tile_j: Optional[int] = None, init=None,
+                   ctrl_mask=None, lat_classes=None,
+                   edge_w=None) -> DenseResult:
+    """Single-draw fused run; returns (freq_ppm (R, N), psi (N,)).
+
+    ``init`` takes (psi (N,), nu (N,)) for segment chaining; the scenario
+    kwargs (``ctrl_mask``, ``lat_classes``, ``edge_w``) pass through to
+    :func:`simulate_ensemble_dense`.
+    """
+    if init is not None and not isinstance(init, DenseResult):
+        init = (np.atleast_2d(init[0]), np.atleast_2d(init[1]))
     res = simulate_ensemble_dense(
         topo, links, np.atleast_2d(np.asarray(ppm_u, np.float32)), steps, kp,
         dt=dt, beta_off=beta_off, record_every=record_every,
         omega_nom=omega_nom, interpret=interpret, use_ref=use_ref,
-        engine=engine, tile_j=tile_j)
+        engine=engine, tile_j=tile_j, init=init, ctrl_mask=ctrl_mask,
+        lat_classes=lat_classes, edge_w=edge_w)
     freq, psi = res
-    return DenseResult(freq[0], psi[0], res.engine, res.tile_j)
+    return DenseResult(freq[0], psi[0], res.engine, res.tile_j,
+                       nu=None if res.nu is None else res.nu[0])
 
 
 def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,

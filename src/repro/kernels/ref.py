@@ -44,31 +44,42 @@ def occupancy_ref(psi, nu, a, lam_eff, lat_frames):
 
 
 def bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
-                           kp, beta_off, dt_frames):
-    """One fused control period. Returns (psi', nu', err)."""
+                           kp, beta_off, dt_frames, ctrl_mask=None):
+    """One fused control period. Returns (psi', nu', err).
+
+    ``ctrl_mask`` mirrors the kernels' holdover semantics: nodes with mask
+    0 freeze ν at its previous value instead of applying the controller.
+    """
     beta = occupancy_ref(psi, nu, a, lam_eff, lat_frames)
     err = (beta - a * beta_off).sum(axis=(0, 2))
     # cancellation-free form of (1+ν_u)(1+c) − 1 (see kernel docstring)
     c_rel = kp * err
     nu_next = nu_u + c_rel + nu_u * c_rel
+    if ctrl_mask is not None:
+        nu_next = jnp.where(ctrl_mask > 0.5, nu_next, nu)
     psi_next = psi + nu_next * dt_frames
     return psi_next, nu_next, err
 
 
 def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
                                 kp, beta_off, dt_frames,
-                                num_records: int, record_every: int):
+                                num_records: int, record_every: int,
+                                ctrl_mask=None):
     """Multi-period, optionally batched oracle for the fused engine.
 
     Args:
       psi, nu, nu_u: (N,) or (B, N) float32 state.
-      a, lam_eff, lat_frames: dense topology (shared across the batch).
+      a, lam_eff: dense topology (shared across the batch).
+      lat_frames: (C,) shared or (B, C) per-draw class latencies (the
+        fused engines' per-draw link-parameter axis).
       kp, beta_off: traced controller gains; in the batched form each may
         be a scalar (shared) or a length-B / (B, 1) per-draw vector — the
         batched gain-sweep axis the fused engines implement.
       dt_frames: integration constant.
       num_records: telemetry records to emit.
       record_every: control periods per record.
+      ctrl_mask: optional (N,) controller-enable mask (holdover), shared
+        across the batch.
 
     Returns:
       (psi_final, nu_final, nu_rec) with nu_rec of shape
@@ -83,14 +94,15 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
             return jnp.broadcast_to(g, (b,)) if g.shape[0] == 1 else g
 
         kp, beta_off = per_draw(kp), per_draw(beta_off)
+        lat_axis = 0 if jnp.ndim(lat_frames) == 2 else None
         step = jax.vmap(
             bittide_dense_step_ref,
-            in_axes=(0, 0, 0, None, None, None, 0, 0, None))
+            in_axes=(0, 0, 0, None, None, lat_axis, 0, 0, None, None))
 
     def one_period(_, carry):
         p, v = carry
         p2, v2, _ = step(p, v, nu_u, a, lam_eff, lat_frames,
-                         kp, beta_off, dt_frames)
+                         kp, beta_off, dt_frames, ctrl_mask)
         return p2, v2
 
     def one_record(carry, _):

@@ -1,0 +1,30 @@
+"""repro.scenarios — dynamic-event scenarios on the bittide engines.
+
+A :class:`Scenario` is a declarative list of timed physical events —
+cable swaps (:class:`LatencyStep`), oscillator steps and thermal ramps
+(:class:`FreqStep` / :class:`DriftRamp`), clock holdover and rejoin
+(:class:`NodeHoldover` / :class:`NodeReset`), link outages
+(:class:`LinkDrop` / :class:`LinkRestore`).  ``compile_scenario`` lowers
+the events into record-aligned piecewise-constant parameter segments,
+and ``run_scenario`` chains any simulation engine (segment-sum or the
+fused/tiled/per-step Pallas lanes) across the segments, threading
+ψ/ν/controller state and the per-edge λeff constants — compiling each
+engine exactly once for the whole scenario.
+
+This is the layer that reproduces the paper's fiber-insertion experiment
+(§5.6, Table 2) in simulation, plus the perturbation studies the
+hardware could not run at scale; the event semantics connect to the
+parameter-step analysis of arXiv:2109.14111 and the occupancy-transient
+bounds of arXiv:2410.05432.
+"""
+from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop, LinkRestore,
+                     Mark, NodeHoldover, NodeReset, Scenario, edges_between)
+from .compiler import CompiledScenario, Segment, compile_scenario
+from .runner import ScenarioResult, run_scenario
+
+__all__ = [
+    "Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
+    "NodeReset", "LinkDrop", "LinkRestore", "Scenario", "edges_between",
+    "CompiledScenario", "Segment", "compile_scenario",
+    "ScenarioResult", "run_scenario",
+]

@@ -1,0 +1,237 @@
+"""Lower a Scenario into piecewise-constant parameter segments.
+
+The simulation engines advance the frame model under *constant* physical
+parameters (that is what lets one ``pallas_call`` fuse thousands of
+control periods).  A dynamic scenario is therefore compiled into a list
+of :class:`Segment`s — maximal runs of telemetry records over which every
+parameter is constant — plus boundary actions (buffer re-establishment)
+that the runner resolves against the live clock state.
+
+Three compilation rules keep the whole scenario on ONE compiled kernel
+per engine:
+
+* **Record alignment.**  Event times snap to the telemetry record period
+  ``cfg.dt · cfg.record_every`` (with a note if the snap moves an event
+  by more than 1e-9 s).  Segments therefore tile the run exactly.
+* **Uniform chunking.**  The kernels' grid length (``num_records``) is a
+  compile key, so the runner replays fixed-size chunks: ``chunk_records``
+  is the GCD of all segment lengths — every segment is a whole number of
+  identically-shaped kernel launches, and the first launch's compilation
+  serves all of them.
+* **Global latency classes.**  The dense engines group edges into
+  latency classes and the class *axis* keys the kernel shapes, so the
+  compiler unions the latency values of every segment into one class
+  vector (``lat_classes``).  A cable swap then only changes *which*
+  class an edge occupies — traced data, not a shape.  If the union
+  exceeds ``MAX_EXACT_CLASSES`` the values are quantum-merged globally
+  and every segment's latencies are snapped to the merged grid (noted),
+  keeping all engines consistent.
+
+Ramps are discretized at record granularity: a :class:`DriftRamp`
+becomes one single-record segment per record it spans, each stepping
+ν_u by ``rate · record_period`` — piecewise-constant in the exact sense
+the engines integrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.frame_model import (LinkParams, PIPE_FRAMES,
+                                    SIGNAL_VELOCITY, SimConfig)
+from repro.core.topology import Topology
+from repro.kernels.ops import MAX_EXACT_CLASSES, latency_classes
+
+from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop, LinkRestore,
+                     Mark, NodeHoldover, NodeReset, Scenario)
+
+__all__ = ["Segment", "CompiledScenario", "compile_scenario"]
+
+
+@dataclasses.dataclass
+class Segment:
+    """A maximal run of records with constant physical parameters.
+
+    ``latency_s`` keeps the base links' shape ((E,) or per-draw (B, E) —
+    a LatencyStep writes the same new value into every draw's column).
+    ``reestablish`` lists edges whose elastic buffer re-initializes to
+    its β0 setpoint at this segment's start — resolved by the runner
+    against the live ψ/ν state.  ``events`` are the events applied at
+    the start (for reporting/plot annotation).
+    """
+
+    start_record: int
+    records: int
+    latency_s: np.ndarray
+    dppm: np.ndarray                 # (N,) additive unadjusted-freq offset
+    edge_w: np.ndarray               # (E,) float32 error weights
+    ctrl_mask: np.ndarray            # (N,) float32 controller enables
+    reestablish: Tuple[int, ...] = ()
+    events: Tuple[object, ...] = ()
+
+    @property
+    def t0_records(self) -> Tuple[int, int]:
+        return self.start_record, self.start_record + self.records
+
+
+@dataclasses.dataclass
+class CompiledScenario:
+    scenario: Scenario
+    topo: Topology
+    cfg: SimConfig
+    segments: List[Segment]
+    chunk_records: int
+    lat_classes: Optional[np.ndarray]   # (C,) frames; None for (B, E) links
+    notes: List[str]
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def total_records(self) -> int:
+        return sum(s.records for s in self.segments)
+
+
+def _snap_record(t: float, rec_period: float, total: int,
+                 notes: List[str], what: str) -> int:
+    r = int(round(t / rec_period))
+    r = min(max(r, 0), total)
+    if abs(r * rec_period - t) > 1e-9:
+        notes.append(f"{what} at t={t:g}s snapped to record boundary "
+                     f"t={r * rec_period:g}s")
+    return r
+
+
+def compile_scenario(scenario: Scenario, topo: Topology, links: LinkParams,
+                     cfg: SimConfig) -> CompiledScenario:
+    """Lower ``scenario`` to record-aligned piecewise-constant segments."""
+    notes: List[str] = []
+    rec_period = cfg.dt * cfg.record_every
+    total = cfg.steps // cfg.record_every
+    if total < 1:
+        raise ValueError("cfg.steps must be >= cfg.record_every")
+    if scenario.horizon > total * rec_period + 1e-12:
+        notes.append(
+            f"scenario horizon {scenario.horizon:g}s exceeds the simulated "
+            f"{total * rec_period:g}s; late events are dropped")
+
+    n, e = topo.num_nodes, topo.num_edges
+    # Rolling parameter state, mutated as boundaries are applied in order.
+    lat = np.array(np.asarray(links.latency_s, np.float64), copy=True)
+    dppm = np.zeros(n, np.float64)
+    edge_w = np.ones(e, np.float32)
+    mask = np.ones(n, np.float32)
+
+    # record index -> ordered list of events to apply at that boundary.
+    boundary_events: dict = {}
+
+    def at(r: int, ev) -> None:
+        boundary_events.setdefault(r, []).append(ev)
+
+    for ev in scenario.events:
+        if isinstance(ev, DriftRamp):
+            r0 = _snap_record(ev.t, rec_period, total, notes, "DriftRamp")
+            r1 = _snap_record(ev.t_end, rec_period, total, notes,
+                              "DriftRamp end")
+            step = ev.rate_ppm_per_s * rec_period
+            for r in range(r0, r1):
+                # One constant ν_u step per record, applied at the record
+                # start: a staircase that leads the true ramp by up to one
+                # record period but lands on the exact total drift.
+                at(r, FreqStep(t=r * rec_period, nodes=ev.nodes,
+                               delta_ppm=step))
+            continue
+        r = _snap_record(ev.t, rec_period, total, notes,
+                         type(ev).__name__)
+        if r >= total:
+            notes.append(f"{type(ev).__name__} at t={ev.t:g}s lands at or "
+                         "after the end of the run; dropped")
+            continue
+        at(r, ev)
+
+    def edge_cols(arr: np.ndarray, idx, values) -> None:
+        """Assign new per-edge values into (E,) or per-draw (B, E) lat."""
+        if arr.ndim == 2:
+            arr[:, list(idx)] = np.asarray(values, np.float64)[None, :]
+        else:
+            arr[list(idx)] = values
+
+    segments: List[Segment] = []
+    boundaries = sorted(set(boundary_events) | {0, total})
+    for bi, r in enumerate(boundaries[:-1]):
+        evs = boundary_events.get(r, [])
+        reest: List[int] = []
+        for ev in evs:
+            if isinstance(ev, Mark):
+                pass
+            elif isinstance(ev, LatencyStep):
+                new = ev.new_latency_s(cfg.omega_nom, SIGNAL_VELOCITY,
+                                       PIPE_FRAMES)
+                edge_cols(lat, ev.edges, new)
+                if ev.reestablish:
+                    reest.extend(ev.edges)
+            elif isinstance(ev, FreqStep):
+                dppm[list(ev.nodes)] += ev.delta_ppm
+            elif isinstance(ev, NodeHoldover):
+                mask[list(ev.nodes)] = 0.0
+            elif isinstance(ev, NodeReset):
+                mask[list(ev.nodes)] = 1.0
+            elif isinstance(ev, LinkDrop):
+                edge_w[list(ev.edges)] = 0.0
+            elif isinstance(ev, LinkRestore):
+                edge_w[list(ev.edges)] = 1.0
+                if ev.reestablish:
+                    reest.extend(ev.edges)
+            else:
+                raise TypeError(f"unknown event type {type(ev).__name__}")
+        r_next = boundaries[bi + 1]
+        segments.append(Segment(
+            start_record=r, records=r_next - r,
+            latency_s=lat.copy(), dppm=dppm.copy(),
+            edge_w=edge_w.copy(), ctrl_mask=mask.copy(),
+            reestablish=tuple(dict.fromkeys(reest)),
+            events=tuple(evs)))
+
+    chunk = 0
+    for s in segments:
+        chunk = math.gcd(chunk, s.records)
+
+    lat_classes = _global_classes(segments, cfg.omega_nom, notes)
+    return CompiledScenario(scenario=scenario, topo=topo, cfg=cfg,
+                            segments=segments, chunk_records=chunk,
+                            lat_classes=lat_classes, notes=notes)
+
+
+def _global_classes(segments: List[Segment], omega_nom: float,
+                    notes: List[str]) -> Optional[np.ndarray]:
+    """Union of every segment's latency values, as one global class set.
+
+    Returns the (C,) class vector in frames the dense engines compile
+    against (None for per-draw (B, E) base links — dense scenario runs
+    require shared links; the segment-sum lane has no class axis at all).
+    If the union exceeds MAX_EXACT_CLASSES, values are quantum-merged and
+    every segment's ``latency_s`` is snapped to the merged grid so all
+    engines integrate identical latencies.
+    """
+    if any(s.latency_s.ndim == 2 for s in segments):
+        return None
+    frames = np.unique(np.concatenate(
+        [np.asarray(s.latency_s, np.float64) * omega_nom for s in segments]))
+    # One shared merge policy: the spread-adaptive quantum grouping lives
+    # in repro.kernels.ops.latency_classes (no-op below MAX_EXACT_CLASSES).
+    merged = np.asarray(latency_classes(frames, warn=False)[0], np.float64)
+    if len(merged) == len(frames):
+        return frames
+    notes.append(
+        f"{len(frames)} distinct latencies across segments > "
+        f"{MAX_EXACT_CLASSES} classes; quantum-merged to {len(merged)} "
+        "(all engines integrate the merged grid)")
+    for s in segments:
+        f = np.asarray(s.latency_s, np.float64) * omega_nom
+        snapped = merged[np.abs(f[:, None] - merged[None, :]).argmin(axis=1)]
+        s.latency_s = snapped / omega_nom
+    return merged

@@ -1,0 +1,220 @@
+"""Declarative dynamic events for bittide simulations.
+
+The paper's headline robustness claim is that bittide "robustly handles
+varying physical latencies" — the hardware team physically swaps a 2 m
+cable for a 2 km fiber spool *mid-experiment* (§5.6, Table 2) and watches
+the logical latency re-settle.  Every event type here names a physical
+perturbation of that kind:
+
+``LatencyStep``
+    A cable swap on a set of directed edges.  Default semantics preserve
+    the per-edge constant λeff (= λ − ω·l, fixed by the initial
+    occupancy): the buffer occupancy is continuous through the swap up to
+    the O(ν·Δl) sensitivity term, and the *logical* latency λ shifts by
+    exactly ω_nom·Δl — the in-flight frames added by the longer fiber,
+    the paper's ≈1231-frame RTT shift.  ``reestablish=True`` additionally
+    models the link bring-up protocol re-initializing the elastic buffer
+    to its β0 setpoint (λeff is recomputed from the live clock state at
+    the event).
+``FreqStep``
+    A step in the unadjusted oscillator frequency of a set of nodes
+    (e.g. a thermal shock); the control loop re-converges around it.
+``DriftRamp``
+    A linear drift in unadjusted frequency between two times — slow
+    temperature drift across part of the machine.  The compiler lowers
+    the ramp into per-record constant steps.
+``NodeHoldover`` / ``NodeReset``
+    A node's control loop opens: its oscillator *holds* the last applied
+    correction (ν frozen) and its controller state freezes, while the
+    rest of the network keeps adapting around it.  ``NodeReset`` closes
+    the loop again.
+``LinkDrop`` / ``LinkRestore``
+    A link goes down: its occupancy reading stops contributing to the
+    receiver's error sum (weight 0).  Restore re-adds it, by default
+    re-establishing the buffer at its β0 setpoint (``reestablish=True``),
+    like the hardware's link bring-up.
+``Mark``
+    A no-op segment boundary — forces the runner to split at a record
+    (used by the chaining regression tests and for annotating plots).
+
+Events carry *times in seconds*; the compiler snaps them to telemetry
+record boundaries (``cfg.dt * cfg.record_every``), the granularity at
+which the piecewise-constant lowering operates.
+
+This module is dependency-free (plain dataclasses + numpy) so the
+frame-level oracle can consume events without import cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
+           "NodeReset", "LinkDrop", "LinkRestore", "Scenario",
+           "edges_between"]
+
+
+def _ids(xs) -> Tuple[int, ...]:
+    """Normalize a node/edge selection to a tuple of ints."""
+    if isinstance(xs, (int, np.integer)):
+        return (int(xs),)
+    return tuple(int(x) for x in xs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mark:
+    """Force a segment boundary at time ``t`` (no parameter change)."""
+    t: float
+    label: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStep:
+    """Swap the cable on a set of directed edges at time ``t``.
+
+    Exactly one of ``cable_m`` (meters; converted with the paper's fiber
+    group velocity + transceiver pipeline) or ``latency_s`` (seconds) must
+    be given; a scalar applies to every listed edge, an array gives one
+    value per listed edge.  Remember bittide links are bidirectional —
+    a physical swap steps *both* directed edges (``edges_between``).
+    """
+    t: float
+    edges: Tuple[int, ...]
+    cable_m: Optional[object] = None
+    latency_s: Optional[object] = None
+    reestablish: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "edges", _ids(self.edges))
+        if (self.cable_m is None) == (self.latency_s is None):
+            raise ValueError(
+                "LatencyStep takes exactly one of cable_m or latency_s")
+
+    def new_latency_s(self, omega_nom: float, velocity: float,
+                      pipe_frames: float) -> np.ndarray:
+        """(len(edges),) one-way latency after the swap."""
+        if self.latency_s is not None:
+            lat = np.asarray(self.latency_s, np.float64)
+        else:
+            cable = np.asarray(self.cable_m, np.float64)
+            lat = cable / velocity + pipe_frames / omega_nom
+        return np.broadcast_to(lat, (len(self.edges),)).astype(np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqStep:
+    """Step the unadjusted frequency of ``nodes`` by ``delta_ppm``."""
+    t: float
+    nodes: Tuple[int, ...]
+    delta_ppm: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", _ids(self.nodes))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftRamp:
+    """Ramp the unadjusted frequency of ``nodes`` linearly.
+
+    From ``t`` to ``t_end`` the nodes' ν_u drifts at ``rate_ppm_per_s``;
+    the compiler discretizes the ramp to one constant step per telemetry
+    record (total drift = rate · (t_end − t)).
+    """
+    t: float
+    t_end: float
+    nodes: Tuple[int, ...]
+    rate_ppm_per_s: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", _ids(self.nodes))
+        if self.t_end <= self.t:
+            raise ValueError("DriftRamp needs t_end > t")
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeHoldover:
+    """Open the control loop of ``nodes`` (ν and controller state freeze)."""
+    t: float
+    nodes: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", _ids(self.nodes))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeReset:
+    """Close the control loop of ``nodes`` again (rejoin after holdover)."""
+    t: float
+    nodes: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes", _ids(self.nodes))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDrop:
+    """Take directed ``edges`` down: weight 0 in the error aggregation."""
+    t: float
+    edges: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "edges", _ids(self.edges))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRestore:
+    """Bring directed ``edges`` back up.
+
+    ``reestablish=True`` (default) re-initializes each restored elastic
+    buffer at its β0 setpoint, like the hardware's link bring-up; False
+    resumes with the occupancy the (virtual) DDC drifted to meanwhile.
+    """
+    t: float
+    edges: Tuple[int, ...]
+    reestablish: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "edges", _ids(self.edges))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """An ordered set of timed events over one simulation run.
+
+    Events are applied in time order; simultaneous events compose in the
+    listed order.  ``name`` labels telemetry and benchmark rows.
+    """
+    events: Tuple[object, ...]
+    name: str = "scenario"
+
+    def __post_init__(self):
+        evs = tuple(sorted(self.events, key=lambda e: e.t))
+        object.__setattr__(self, "events", evs)
+        for e in evs:
+            if e.t < 0:
+                raise ValueError(f"event time {e.t} < 0")
+
+    @property
+    def horizon(self) -> float:
+        """Latest event time (ramps count their end)."""
+        t = 0.0
+        for e in self.events:
+            t = max(t, getattr(e, "t_end", e.t))
+        return t
+
+
+def edges_between(topo, a: int, b: int) -> Tuple[int, ...]:
+    """Indices of ALL directed edges between nodes a and b (both ways).
+
+    A physical cable swap affects both directions of the link — pass the
+    result to :class:`LatencyStep` / :class:`LinkDrop`.
+    """
+    src = np.asarray(topo.src)
+    dst = np.asarray(topo.dst)
+    hit = ((src == a) & (dst == b)) | ((src == b) & (dst == a))
+    idx = tuple(int(e) for e in np.nonzero(hit)[0])
+    if not idx:
+        raise ValueError(f"no edges between nodes {a} and {b}")
+    return idx

@@ -1,0 +1,384 @@
+"""Execute a compiled scenario by chaining the simulation engines.
+
+The runner walks the compiled segments in order and, inside each segment,
+replays fixed-size chunks of ``chunk_records`` telemetry records through
+ONE simulation engine, threading the full simulator state — ψ, ν, the
+controller state, and the per-edge λeff constants — across every
+boundary.  Because every traced quantity (link latencies, λeff folds,
+edge weights, controller masks, gains, ν_u) changed *data* rather than
+*shape*, the whole scenario compiles each engine exactly once; the
+no-recompile guard in ``tests/test_scenarios.py`` pins this.
+
+Engines:
+
+``segment-sum``   the production edge-list simulator
+                  (:func:`repro.core.frame_model.simulate` /
+                  ``simulate_ensemble``) — records β telemetry, supports
+                  every controller kind, quantization, telemetry noise,
+                  and fully heterogeneous per-draw (B, E) links.
+``fused``/``tiled``/``per-step``/``auto``
+                  the dense Pallas lanes, driven directly at the jitted
+                  engine layer (segment prep — densify, λeff folds,
+                  padding — runs once per segment; chunks replay on
+                  device-resident state) — ν telemetry only, proportional
+                  controller, shared base links (per-draw λeff from
+                  re-establishment is supported; per-draw base latencies
+                  belong on segment-sum).
+
+λeff semantics (see ``repro.scenarios.events``): a plain LatencyStep
+keeps λeff constant — occupancy is continuous through the swap and the
+logical latency λ = λeff + ω·l shifts by exactly the in-flight frame
+count, the paper's Table-2 observation.  ``reestablish`` recomputes λeff
+from the live state so the buffer restarts at its β0 setpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.controller import ControllerConfig
+from repro.core.frame_model import (EB_INIT, LinkParams, SimConfig,
+                                    _convergence_time, broadcast_gain,
+                                    simulate, simulate_ensemble)
+from repro.core.topology import Topology
+from repro.kernels.bittide_step import select_engine
+from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
+                               _pad_batch, _pad_gain, _perstep_engine,
+                               densify)
+
+from .compiler import CompiledScenario, compile_scenario
+from .events import Scenario
+
+__all__ = ["ScenarioResult", "run_scenario"]
+
+_DENSE_ENGINES = ("auto", "fused", "tiled", "per-step")
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Concatenated telemetry + final state of a scenario run.
+
+    ``freq_ppm`` is (T, N) for a single run or (B, T, N) for an ensemble;
+    ``beta`` is (T, E) on the segment-sum engine (empty on the dense
+    lanes, which decimate ν only).  ``lam`` is the (S, E) logical-latency
+    table per segment — ``rint(EB_INIT + λeff + ω·l)`` with draw-0 values
+    when λeff is per-draw — whose successive differences are the Table-2
+    latency shifts.
+    """
+
+    freq_ppm: np.ndarray
+    beta: np.ndarray
+    times: np.ndarray
+    psi: np.ndarray
+    nu: np.ndarray
+    c_state: dict
+    lam: np.ndarray
+    lam_eff: np.ndarray
+    segment_records: np.ndarray
+    segment_times: np.ndarray
+    topo: Topology
+    links: LinkParams
+    ctrl: ControllerConfig
+    cfg: SimConfig
+    compiled: CompiledScenario
+    engine: str
+    tile_j: int
+    chunk_records: int
+    num_launches: int
+
+    @property
+    def scenario(self) -> Scenario:
+        return self.compiled.scenario
+
+    def convergence_time(self, band_ppm: float = 1.0,
+                         after_s: float = 0.0) -> float:
+        """First recorded time >= after_s from which the frequency band
+        stays within band_ppm — re-settling time when measured after an
+        event.  Single-run results only (index draws for ensembles)."""
+        if self.freq_ppm.ndim != 2:
+            raise ValueError("convergence_time on an ensemble result: "
+                             "slice a draw first (freq_ppm[b])")
+        sel = self.times >= after_s
+        spread = (self.freq_ppm[sel].max(axis=1)
+                  - self.freq_ppm[sel].min(axis=1))
+        return _convergence_time(spread, self.times[sel], band_ppm)
+
+    def rtt(self, seg: int = -1) -> np.ndarray:
+        """(E,) round-trip logical latency table of one segment."""
+        lam = self.lam[seg]
+        return lam + lam[self.topo.reverse_edge_index()]
+
+    def lam_shift(self, seg_a: int = 0, seg_b: int = -1) -> np.ndarray:
+        """(E,) per-edge logical-latency shift between two segments."""
+        return self.lam[seg_b] - self.lam[seg_a]
+
+
+def _lam_table(lam_eff, lat_s, omega_nom: float) -> np.ndarray:
+    """(E,) logical latencies λ = rint(EB_INIT + λeff + ω·l), draw 0."""
+    le = np.asarray(lam_eff, np.float64)
+    ls = np.asarray(lat_s, np.float64)
+    if le.ndim == 2:
+        le = le[0]
+    if ls.ndim == 2:
+        ls = ls[0]
+    return np.rint(EB_INIT + le + ls * omega_nom).astype(np.int64)
+
+
+def _apply_reestablish(lam_eff, edges, beta0_base, psi, nu, lat_frames,
+                       topo: Topology):
+    """Recompute λeff of ``edges`` so β(t+) equals the β0 setpoint.
+
+    Solves ψ_src − ν_src·ω·l + λeff − ψ_dst = β0 against the live state;
+    promotes λeff to per-draw (B, E) when the state is batched (each
+    draw's clocks re-establish at different phases).
+    """
+    psi = np.asarray(psi, np.float64)
+    nu = np.asarray(nu, np.float64)
+    lam_eff = np.asarray(lam_eff, np.float64)
+    if psi.ndim == 2 and lam_eff.ndim == 1:
+        lam_eff = np.tile(lam_eff, (psi.shape[0], 1))
+    idx = list(edges)
+    src = np.asarray(topo.src)[idx]
+    dst = np.asarray(topo.dst)[idx]
+    target = np.asarray(beta0_base, np.float64)[..., idx]
+    lf = np.asarray(lat_frames, np.float64)[..., idx]
+    lam_eff[..., idx] = (target - psi[..., src] + nu[..., src] * lf
+                         + psi[..., dst])
+    return lam_eff
+
+
+def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
+                        ctrl: ControllerConfig, ppm2d: np.ndarray,
+                        cfg: SimConfig, engine: str):
+    """Host-side prep for one dense-engine segment (done once per segment).
+
+    Densifies the segment's links over the scenario's global class set,
+    folds λeff into the traced (B_pad, N_pad) lamsum rows (per-draw when
+    re-establishment made λeff per-draw), and pads gains/mask/ν_u.  The
+    chunk loop then replays the jitted engine on device-resident state
+    with no further host rebuilds.
+
+    Returns (a, lam_list, lamsum, lat, mask, nu_u, kp, beta_off, chosen,
+    tile_j, b_pad, n_pad); ``lam_list`` holds per-draw (C, N, N) λeff
+    tensors for the per-step engine (a single shared entry otherwise).
+    """
+    b, n = ppm2d.shape
+    beta0 = np.asarray(links_seg.beta0, np.float64)
+    beta0_rows = beta0 if beta0.ndim == 2 else beta0[None]
+    links0 = LinkParams(latency_s=seg.latency_s, beta0=beta0_rows[0])
+    a, lam0, classes, n_pad = densify(
+        topo, links0, cfg.omega_nom, lat_classes=comp.lat_classes,
+        edge_w=seg.edge_w)
+    c = a.shape[0]
+    nu_u, b_pad = _pad_batch(ppm2d, n, n_pad)
+
+    if engine == "auto":
+        chosen, tj = select_engine(b_pad, n_pad, c)
+    elif engine == "per-step":
+        chosen, tj = "per-step", 0
+    elif engine == "tiled":
+        chosen, tj = "tiled", select_engine(b_pad, n_pad, c)[1]
+    else:
+        chosen, tj = "fused", n_pad
+
+    if chosen == "per-step" and beta0.ndim == 2:
+        lam_list = [densify(topo,
+                            LinkParams(latency_s=seg.latency_s,
+                                       beta0=beta0[bi]),
+                            cfg.omega_nom, lat_classes=comp.lat_classes,
+                            edge_w=seg.edge_w)[1] for bi in range(b)]
+    else:
+        lam_list = [lam0] * max(b, 1)
+
+    lamsum_rows = _lamsum_host(topo, beta0_rows, seg.edge_w,
+                               beta0_rows.shape[0], n_pad)
+    lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
+    lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
+    lat_pad = np.broadcast_to(
+        np.asarray(classes, np.float32)[None, :], (b_pad, c))
+    mask_pad = np.ones((n_pad,), np.float32)
+    mask_pad[:n] = seg.ctrl_mask
+    kp_j = _pad_gain(broadcast_gain(ctrl.kp, b), b_pad)
+    boff_j = _pad_gain(broadcast_gain(ctrl.beta_off, b, "beta_off"), b_pad)
+    return (a, lam_list, jnp.asarray(lamsum_pad),
+            jnp.asarray(np.ascontiguousarray(lat_pad)),
+            jnp.asarray(mask_pad), nu_u, kp_j, boff_j, chosen, tj,
+            b_pad, n_pad)
+
+
+def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
+                 ppm_u: np.ndarray, scenario: Scenario,
+                 cfg: SimConfig = SimConfig(),
+                 engine: str = "segment-sum",
+                 chunk_records: Optional[int] = None,
+                 compiled: Optional[CompiledScenario] = None,
+                 interpret: Optional[bool] = None) -> ScenarioResult:
+    """Run a dynamic-event scenario, chaining one engine across segments.
+
+    Args:
+      topo, links, ctrl, cfg: as for :func:`repro.core.simulate`;
+        ``links`` provides the t=0 physical parameters (per-draw (B, E)
+        links are supported on the segment-sum engine).
+      ppm_u: (N,) single run or (B, N) ensemble of oscillator draws —
+        scenario events hit every draw at the same times.
+      scenario: the event list (compiled here unless ``compiled`` given).
+      engine: "segment-sum" (default) or a dense Pallas lane
+        ("auto" | "fused" | "tiled" | "per-step").
+      chunk_records: kernel-launch granularity override; must divide
+        every segment's record count.  Default: the compiler's GCD.
+      compiled: reuse a previous :func:`compile_scenario` result.
+
+    Returns:
+      ScenarioResult with concatenated telemetry, threaded final state,
+      and the per-segment logical-latency table.
+    """
+    ppm_u = np.asarray(ppm_u, np.float32)
+    single = ppm_u.ndim == 1
+    comp = compiled or compile_scenario(scenario, topo, links, cfg)
+    chunk = chunk_records or comp.chunk_records
+    for s in comp.segments:
+        if chunk < 1 or s.records % chunk:
+            raise ValueError(
+                f"chunk_records={chunk} does not divide segment of "
+                f"{s.records} records (compiler GCD: {comp.chunk_records})")
+
+    dense = engine in _DENSE_ENGINES
+    if not dense and engine != "segment-sum":
+        raise ValueError(f"unknown engine {engine!r}")
+    if dense:
+        if comp.lat_classes is None:
+            raise ValueError(
+                "dense scenario engines need shared base links; per-draw "
+                "(B, E) latencies run on the segment-sum engine")
+        if ctrl.kind != "proportional":
+            raise ValueError(
+                f"dense engines implement the proportional controller; "
+                f"{ctrl.kind!r} runs on the segment-sum engine")
+        if cfg.quantize_beta or cfg.telemetry_noise_ppm:
+            raise ValueError(
+                "quantize_beta / telemetry noise are segment-sum features")
+
+    rec_period = cfg.dt * cfg.record_every
+    beta0_base = np.asarray(links.beta0, np.float64)
+    lam_eff = np.array(beta0_base, copy=True)
+    n = topo.num_nodes
+    b = 1 if single else ppm_u.shape[0]
+    state = None                 # segment-sum: result object with .psi/.nu
+    psi_pad = nu_pad = None      # dense lanes: padded (B_pad, N_pad) state
+    freq_chunks, beta_chunks = [], []
+    lam_rows, launches = [], 0
+    eng_label, tile_j = engine, 0
+
+    for seg in comp.segments:
+        lat_frames = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
+        if seg.reestablish:
+            if state is None and psi_pad is None:
+                psi_now = np.zeros_like(ppm_u, np.float64)
+                nu_now = ppm_u.astype(np.float64) * 1e-6
+            elif dense:
+                psi_now = np.asarray(psi_pad)[:b, :n]
+                nu_now = np.asarray(nu_pad)[:b, :n]
+                if single:
+                    psi_now, nu_now = psi_now[0], nu_now[0]
+            else:
+                psi_now, nu_now = state.psi, state.nu
+            lam_eff = _apply_reestablish(
+                lam_eff, seg.reestablish, beta0_base, psi_now, nu_now,
+                lat_frames, topo)
+        ppm_seg = (ppm_u + seg.dppm.astype(np.float32)
+                   if single else ppm_u + seg.dppm.astype(np.float32)[None])
+        links_seg = LinkParams(latency_s=seg.latency_s,
+                               beta0=np.array(lam_eff, copy=True))
+        lam_rows.append(_lam_table(lam_eff, seg.latency_s, cfg.omega_nom))
+
+        if dense:
+            # Segment prep — densify, λeff folds, padding — happens ONCE
+            # per segment; the chunk loop below replays the jitted engine
+            # on device-resident padded state with zero host rebuilds.
+            (a, lam_list, lamsum_j, lat_j, mask_j, nu_u_j, kp_j, boff_j,
+             chosen, tj, b_pad, n_pad) = _prep_dense_segment(
+                topo, links_seg, seg, comp, ctrl, np.atleast_2d(ppm_seg),
+                cfg, engine)
+            eng_label, tile_j = chosen, tj
+            if psi_pad is None:
+                psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
+            dt_frames = float(cfg.omega_nom * cfg.dt)
+            interp = _auto_interpret(interpret)
+            kp_np = np.asarray(kp_j)
+            boff_np = np.asarray(boff_j)
+            for _ in range(seg.records // chunk):
+                if chosen == "per-step":
+                    rows = [_perstep_engine(
+                        psi_pad[bi], nu_pad[bi], nu_u_j[bi], mask_j, a,
+                        lam_list[bi], lat_j[bi], float(kp_np[bi]),
+                        float(boff_np[bi]), dt_frames, int(chunk),
+                        int(cfg.record_every), interp, False)
+                        for bi in range(b)]
+                    psi_pad = psi_pad.at[:b].set(
+                        jnp.stack([r[0] for r in rows]))
+                    nu_pad = nu_pad.at[:b].set(
+                        jnp.stack([r[1] for r in rows]))
+                    rec = jnp.stack([r[2] for r in rows], axis=1)
+                else:
+                    psi_pad, nu_pad, rec = _fused_engine(
+                        psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j, a,
+                        lam_list[0], lamsum_j, lat_j, dt_frames,
+                        int(chunk), int(cfg.record_every), chosen, int(tj),
+                        interp, False)
+                freq_chunks.append(
+                    np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                launches += 1
+            continue
+
+        for _ in range(seg.records // chunk):
+            # Per-launch derived seed: telemetry-noise keys must differ
+            # across chunks (exact zeros when noise is off, so splitting
+            # stays bit-identical).
+            cfg_chunk = dataclasses.replace(
+                cfg, steps=chunk * cfg.record_every,
+                seed=cfg.seed + 104729 * launches)
+            if single:
+                res = simulate(topo, links_seg, ctrl, ppm_seg, cfg_chunk,
+                               init=state, edge_w=seg.edge_w,
+                               ctrl_mask=seg.ctrl_mask)
+            else:
+                res = simulate_ensemble(topo, links_seg, ctrl, ppm_seg,
+                                        cfg_chunk, init=state,
+                                        edge_w=seg.edge_w,
+                                        ctrl_mask=seg.ctrl_mask)
+            state = res
+            freq_chunks.append(res.freq_ppm)
+            beta_chunks.append(res.beta)
+            launches += 1
+
+    axis = 1 if (dense or not single) else 0
+    freq = np.concatenate(freq_chunks, axis=axis)
+    if dense:
+        if single:
+            freq = freq[0]
+        psi_f = np.asarray(psi_pad)[:b, :n]
+        nu_f = np.asarray(nu_pad)[:b, :n]
+        if single:
+            psi_f, nu_f = psi_f[0], nu_f[0]
+        beta = np.zeros(freq.shape[:-1] + (0,), np.float32)
+        c_state = {}
+    else:
+        beta = (np.concatenate(beta_chunks, axis=axis) if cfg.record_beta
+                else np.zeros(freq.shape[:-1] + (0,), np.float32))
+        psi_f, nu_f, c_state = state.psi, state.nu, state.c_state
+
+    total = comp.total_records
+    times = (np.arange(1, total + 1)) * rec_period
+    return ScenarioResult(
+        freq_ppm=freq, beta=beta, times=times, psi=psi_f, nu=nu_f,
+        c_state=c_state, lam=np.stack(lam_rows), lam_eff=lam_eff,
+        segment_records=np.array([s.start_record for s in comp.segments]),
+        segment_times=np.array([s.start_record * rec_period
+                                for s in comp.segments]),
+        topo=topo, links=links, ctrl=ctrl, cfg=cfg, compiled=comp,
+        engine=eng_label, tile_j=tile_j, chunk_records=chunk,
+        num_launches=launches)

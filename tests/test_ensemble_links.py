@@ -1,0 +1,142 @@
+"""Per-draw link parameters: the (B, E) Monte-Carlo cable axis.
+
+Closes the ROADMAP item "per-draw link parameters (cable-length
+distributions) are still shared": both ensemble lanes accept batched
+LinkParams — the segment-sum lane with fully heterogeneous per-edge
+values, the dense Pallas lane with per-draw latency-class values (traced
+(B, C) kernel input) — and every draw must reproduce its single-run
+trajectory.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, SimConfig, fully_connected,
+                        make_links, simulate, simulate_ensemble)
+from repro.kernels import simulate_ensemble_dense, simulate_fused
+
+TOPO = fully_connected(8)
+B = 8
+CFG = SimConfig(dt=1e-3, steps=200, record_every=20)
+CTRL = ControllerConfig(kp=2e-8)
+PPM_B = np.random.default_rng(21).uniform(-8, 8, (B, 8)).astype(np.float32)
+
+
+def test_make_links_batched_shapes_and_draw():
+    cable = np.random.default_rng(0).uniform(1.5, 2.5, (B, TOPO.num_edges))
+    links = make_links(TOPO, cable_m=cable)
+    assert links.num_draws == B and links.num_edges == TOPO.num_edges
+    assert links.latency_s.shape == (B, TOPO.num_edges)
+    single = links.draw(3)
+    assert single.num_draws is None
+    np.testing.assert_array_equal(single.latency_s, links.latency_s[3])
+    # (B, 1) per-draw scale broadcasting
+    scaled = make_links(TOPO, cable_m=np.full((B, 1), 2.0))
+    assert scaled.latency_s.shape == (B, TOPO.num_edges)
+    # per-draw beta0 with shared cable
+    b0 = make_links(TOPO, beta0=np.random.default_rng(1).normal(
+        0, 2, (B, TOPO.num_edges)))
+    assert b0.num_draws == B and b0.latency_s.shape == (B, TOPO.num_edges)
+
+
+def test_segment_sum_per_draw_links_match_single_runs():
+    """Fully heterogeneous (B, E) latencies AND beta0: each ensemble row
+    is bit-identical to its single-draw run."""
+    rng = np.random.default_rng(2)
+    links = make_links(TOPO,
+                       cable_m=rng.uniform(1.5, 2.5, (B, TOPO.num_edges)),
+                       beta0=rng.normal(0, 2, (B, TOPO.num_edges)))
+    ens = simulate_ensemble(TOPO, links, CTRL, PPM_B, CFG)
+    for b in (0, 3, 7):
+        single = simulate(TOPO, links.draw(b), CTRL, PPM_B[b], CFG)
+        np.testing.assert_array_equal(ens.freq_ppm[b], single.freq_ppm)
+        np.testing.assert_array_equal(ens.beta[b], single.beta)
+        # EnsembleResult.draw carries the per-draw links for chaining
+        np.testing.assert_array_equal(ens.draw(b).links.latency_s,
+                                      links.latency_s[b])
+
+
+def test_single_run_rejects_batched_links():
+    links = make_links(TOPO, cable_m=np.full((B, 1), 2.0))
+    with pytest.raises(ValueError, match="single .E,. link set"):
+        simulate(TOPO, links, CTRL, PPM_B[0], CFG)
+
+
+def test_ensemble_rejects_wrong_batch():
+    links = make_links(TOPO, cable_m=np.full((3, 1), 2.0))
+    with pytest.raises(ValueError, match="3 draws"):
+        simulate_ensemble(TOPO, links, CTRL, PPM_B, CFG)
+
+
+def _two_class_batched_links(scale):
+    """FC8 with a per-draw scale: short cables + one long link, the
+    class structure (which edge is long) shared across draws."""
+    cable = np.full((B, TOPO.num_edges), 2.0) * scale[:, None]
+    for e in range(TOPO.num_edges):
+        if {int(TOPO.src[e]), int(TOPO.dst[e])} == {0, 2}:
+            cable[:, e] = 1000.0 * scale
+    return make_links(TOPO, cable_m=cable)
+
+
+def test_dense_per_draw_class_latencies_match_single_runs():
+    scale = np.linspace(1.0, 1.3, B)
+    links = _two_class_batched_links(scale)
+    res = simulate_ensemble_dense(TOPO, links, PPM_B, steps=100, kp=2e-9,
+                                  record_every=10)
+    assert res.engine == "fused" and res.nu.shape == (B, 8)
+    for b in (0, 7):
+        single = simulate_fused(TOPO, links.draw(b), PPM_B[b], steps=100,
+                                kp=2e-9, record_every=10)
+        np.testing.assert_allclose(res[0][b], single[0], rtol=0, atol=1e-6)
+
+
+def test_dense_per_draw_links_parity_vs_segment_sum():
+    """The traced (B, C) latency axis agrees with the per-edge segment-sum
+    lane across the whole batch."""
+    scale = np.linspace(1.0, 1.3, B)
+    links = _two_class_batched_links(scale)
+    cfg = SimConfig(dt=1e-3, steps=100, record_every=10)
+    res = simulate_ensemble_dense(TOPO, links, PPM_B, steps=100, kp=2e-9,
+                                  record_every=10)
+    ens = simulate_ensemble(TOPO, links, ControllerConfig(kp=2e-9), PPM_B,
+                            cfg)
+    np.testing.assert_allclose(res[0], ens.freq_ppm, rtol=0, atol=1e-6)
+
+
+def test_dense_per_draw_beta0_lamsum_axis():
+    """Per-draw beta0 rides the traced (B, N) lamsum input."""
+    rng = np.random.default_rng(5)
+    links = make_links(TOPO, beta0=rng.normal(0, 2, (B, TOPO.num_edges)))
+    cfg = SimConfig(dt=1e-3, steps=100, record_every=10)
+    res = simulate_ensemble_dense(TOPO, links, PPM_B, steps=100, kp=2e-9,
+                                  record_every=10)
+    ens = simulate_ensemble(TOPO, links, ControllerConfig(kp=2e-9), PPM_B,
+                            cfg)
+    np.testing.assert_allclose(res[0], ens.freq_ppm, rtol=0, atol=1e-6)
+    with pytest.raises(ValueError, match="per-draw beta0"):
+        simulate_ensemble_dense(TOPO, links, PPM_B, steps=100, kp=2e-9,
+                                record_every=10, use_ref=True)
+
+
+def test_dense_rejects_heterogeneous_within_class():
+    """iid per-edge jitter breaks the shared class structure: the dense
+    lane must refuse and point at the segment-sum lane."""
+    rng = np.random.default_rng(6)
+    links = make_links(TOPO,
+                       cable_m=rng.uniform(1.5, 2.5, (B, TOPO.num_edges)))
+    with pytest.warns(UserWarning, match="latency classes"), \
+            pytest.raises(ValueError, match="segment-sum"):
+        simulate_ensemble_dense(TOPO, links, PPM_B, steps=40, kp=2e-9,
+                                record_every=10)
+
+
+def test_dense_per_draw_links_no_recompile():
+    """Resampling the cable distribution reuses one executable — link
+    parameters are traced per-draw state, like the gains."""
+    from repro.kernels.ops import _fused_engine
+    links = _two_class_batched_links(np.linspace(1.0, 1.3, B))
+    kw = dict(steps=40, kp=2e-9, record_every=10)
+    simulate_ensemble_dense(TOPO, links, PPM_B, **kw)
+    size0 = _fused_engine._cache_size()
+    links2 = _two_class_batched_links(np.linspace(1.05, 1.21, B))
+    simulate_ensemble_dense(TOPO, links2, PPM_B, **kw)
+    assert _fused_engine._cache_size() == size0

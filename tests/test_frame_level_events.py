@@ -1,0 +1,190 @@
+"""Frame-level oracle under dynamic events (the §5.6 fiber-spool swap).
+
+The acceptance invariants for a mid-run LatencyStep, checked against the
+ground-truth datapath simulation (sequence-numbered frames through wires
+and FIFOs):
+
+  * frames in flight / in buffer at the event keep their λ (no
+    retroactive change, λ constant within each epoch);
+  * λ jumps at the splice by EXACTLY the inserted in-flight frame count;
+  * the post-step λ equals ``logical_latency()`` recomputed with the new
+    cable length (exactly for aligned clocks; ±1 frame of clock-phase
+    ambiguity under control — the same ambiguity that spreads Table 1's
+    RTTs over 67..70).
+"""
+import numpy as np
+import pytest
+
+from repro.core import frame_level as fl
+from repro.core import fully_connected, make_links, ring
+from repro.core.latency import logical_latency
+from repro.scenarios import FreqStep, LatencyStep, NodeHoldover, Scenario, edges_between
+
+# 999 m keeps the fractional in-flight frame count below 0.5, so the
+# oracle's floor() and logical_latency's rint() agree exactly.
+LONG_M = 999.0
+
+
+def _links_after(topo, edges, cable_new, cable_base=2.0):
+    cable = np.full(topo.num_edges, cable_base)
+    cable[list(edges)] = cable_new
+    return make_links(topo, cable_m=cable)
+
+
+def test_latency_step_exact_invariants_aligned_clocks():
+    """Zero-ppm network: every invariant holds exactly."""
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    ed = edges_between(topo, 0, 1)
+    ev = LatencyStep(t=1.0, edges=ed, cable_m=LONG_M)
+    r = fl.simulate_frames(topo, links, np.zeros(3), 2.5, events=[ev])
+    assert r.lam_constant and not r.underflow and not r.overflow
+    lam_new = logical_latency(topo, _links_after(topo, ed, LONG_M))
+    for e in range(topo.num_edges):
+        if e in ed:
+            # two λ epochs: before and after the splice...
+            assert len(r.lam_epochs[e]) == 2
+            jump = r.lam_epochs[e][1] - r.lam_epochs[e][0]
+            # ...the jump is exactly the inserted in-flight frames...
+            assert jump == r.inserted[e] > 500
+            # ...and the post-step λ is a fresh boot at the new length.
+            assert r.lam[e] == lam_new[e]
+        else:
+            assert len(r.lam_epochs[e]) == 1 and r.inserted[e] == 0
+            assert r.lam[e] == lam_new[e]
+
+
+def test_latency_step_shrink_removes_inflight_frames():
+    """Swapping the long fiber back out: λ drops by the removed frames."""
+    topo = ring(3)
+    links = _links_after(topo, edges_between(topo, 0, 1), LONG_M)
+    ed = edges_between(topo, 0, 1)
+    ev = LatencyStep(t=1.0, edges=ed, cable_m=2.0)
+    r = fl.simulate_frames(topo, links, np.zeros(3), 2.5, events=[ev])
+    assert r.lam_constant
+    lam_new = logical_latency(topo, make_links(topo, cable_m=2.0))
+    for e in ed:
+        assert r.inserted[e] < -500
+        assert r.lam_epochs[e][1] - r.lam_epochs[e][0] == r.inserted[e]
+        assert r.lam[e] == lam_new[e]
+
+
+def test_latency_step_under_control_with_real_oscillators():
+    """±8 ppm oscillators + proportional control: λ still constant within
+    epochs, jump still exact, post-step λ within the ±1 phase ambiguity."""
+    topo = ring(4)
+    links = make_links(topo, cable_m=2.0)
+    ed = edges_between(topo, 1, 2)
+    ppm = np.array([3.0, -2.0, 1.0, -1.5])
+    ev = LatencyStep(t=1.5, edges=ed, cable_m=LONG_M)
+    r = fl.simulate_frames(topo, links, ppm, 3.0,
+                           controller=lambda err: 2e-7 * err,
+                           control_period_s=1e-3, events=[ev])
+    assert r.lam_constant and not r.underflow and not r.overflow
+    lam_new = logical_latency(topo, _links_after(topo, ed, LONG_M))
+    for e in ed:
+        assert len(r.lam_epochs[e]) == 2
+        assert r.lam_epochs[e][1] - r.lam_epochs[e][0] == r.inserted[e]
+        assert abs(int(r.lam[e]) - int(lam_new[e])) <= 1
+
+
+def test_in_flight_frames_keep_lambda_through_the_event():
+    """Between the event and the splice reaching the buffer head, pops
+    continue at the OLD λ — in-flight frames are not retimed."""
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    ed = (0,)   # one direction only: the reverse keeps its λ entirely
+    ev = LatencyStep(t=1.0, edges=ed, cable_m=LONG_M)
+    r = fl.simulate_frames(topo, links, np.zeros(3), 2.5, events=[ev])
+    lam_old = logical_latency(topo, links)
+    # first epoch on the stepped edge is the pre-swap λ
+    assert r.lam_epochs[0][0] == lam_old[0]
+    # the un-stepped reverse direction never changes epoch
+    rev = int(topo.reverse_edge_index()[0])
+    assert r.lam_epochs[rev] == [lam_old[rev]]
+
+
+def test_rtt_shift_matches_paper_table2():
+    """FC8 + a 2 km spool (1 km per direction): RTT shifts by ≈1231."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=1.5)
+    ed = edges_between(topo, 0, 2)
+    ev = LatencyStep(t=1.0, edges=ed, cable_m=1000.0)
+    r = fl.simulate_frames(topo, links, np.zeros(8), 2.0, events=[ev])
+    assert r.lam_constant
+    rtt_shift = sum(r.lam_epochs[e][1] - r.lam_epochs[e][0] for e in ed)
+    assert abs(rtt_shift - 1231) <= 1
+    assert rtt_shift == r.inserted[list(ed)].sum()
+
+
+def test_double_swap_spaced_gives_three_epochs():
+    """Swap long, let it settle, swap back: λ returns to its original
+    value through three epochs, net zero inserted frames."""
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    ed = edges_between(topo, 0, 1)
+    evs = [LatencyStep(t=1.0, edges=ed, cable_m=LONG_M),
+           LatencyStep(t=2.0, edges=ed, cable_m=2.0)]
+    r = fl.simulate_frames(topo, links, np.zeros(3), 3.0, events=evs)
+    assert r.lam_constant
+    lam0 = logical_latency(topo, links)
+    for e in ed:
+        assert len(r.lam_epochs[e]) == 3
+        assert r.lam_epochs[e][0] == r.lam_epochs[e][2] == lam0[e]
+        assert r.inserted[e] == 0
+        assert r.lam[e] == lam0[e]
+
+
+def test_rapid_reswap_does_not_break_constancy():
+    """A second swap landing before the first regime reaches the buffer
+    head (within the ~18-tick buffer depth) must not be misread as a
+    λ-constancy violation: the overtaken splice is skipped cleanly."""
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    ed = edges_between(topo, 0, 1)
+    # 10 scaled ticks apart at the 1250 Hz scaled tick rate
+    evs = [LatencyStep(t=1.0, edges=ed, cable_m=LONG_M),
+           LatencyStep(t=1.008, edges=ed, cable_m=2.0)]
+    r = fl.simulate_frames(topo, links, np.zeros(3), 2.5, events=evs)
+    assert r.lam_constant and not r.underflow and not r.overflow
+    lam0 = logical_latency(topo, links)
+    for e in ed:
+        # the few delivered long-regime frames form a clean middle epoch
+        # (no false constancy violation from the overtaken splice), and
+        # λ lands back at its original value with zero net insertion
+        assert r.lam_epochs[e][0] == r.lam_epochs[e][-1] == lam0[e]
+        assert len(r.lam_epochs[e]) <= 3
+        assert r.inserted[e] == 0
+
+
+def test_freq_step_event_changes_rates():
+    """A FreqStep at the frame level: the stepped node ticks measurably
+    faster from the event on, while λ stays constant as long as no
+    buffer over/underflows (logical synchrony is phase-insensitive)."""
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    # 2000 ppm for 2 scaled seconds ≈ 5 extra localticks at the scaled
+    # 1250 Hz tick rate — big enough to count, small enough that the
+    # 32-deep buffers absorb the uncontrolled drift.
+    ev = FreqStep(t=1.0, nodes=(0,), delta_ppm=2000.0)
+    r = fl.simulate_frames(topo, links, np.zeros(3), 3.0, events=[ev])
+    assert r.lam_constant and not r.underflow and not r.overflow
+    base = fl.simulate_frames(topo, links, np.zeros(3), 3.0)
+    assert r.ticks[0] >= base.ticks[0] + 4
+    assert r.ticks[1] == base.ticks[1]
+
+
+def test_frame_level_rejects_abstract_only_events():
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    with pytest.raises(ValueError, match="LatencyStep and FreqStep"):
+        fl.simulate_frames(topo, links, np.zeros(3), 0.5,
+                           events=[NodeHoldover(t=0.1, nodes=(0,))])
+
+
+def test_scenario_object_accepted():
+    topo = ring(3)
+    links = make_links(topo, cable_m=2.0)
+    sc = Scenario(events=(LatencyStep(t=1.0, edges=(0,), cable_m=LONG_M),))
+    r = fl.simulate_frames(topo, links, np.zeros(3), 2.0, events=sc)
+    assert len(r.lam_epochs[0]) == 2

@@ -1,0 +1,339 @@
+"""Scenario engine: compilation, chaining, parity, physics, no-recompile.
+
+The scenario subsystem lowers timed events into record-aligned
+piecewise-constant segments and replays ONE compiled engine across them.
+These tests pin:
+
+  * lossless state round-trip: a split (multi-segment) no-event run is
+    bit-identical to the unsplit run on every lane, including the
+    controller integrator / discrete-actuator state and β quantization
+    phase (the chaining regression of the scenario PR);
+  * the acceptance parity matrix: a fully-connected-8 LatencyStep
+    scenario matches the segment-sum reference at every record point to
+    <1e-6 ppm on all three Pallas engines, with at most one compile per
+    engine across all segments;
+  * event physics: Table-2 logical-latency shifts, FreqStep consensus
+    moves, drift ramps, holdover freezes, link drop/restore.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, SimConfig, fully_connected,
+                        hourglass, make_links, simulate, simulate_ensemble)
+from repro.core.frame_model import _jitted_run, _jitted_run_ensemble
+from repro.kernels import simulate_fused
+from repro.kernels.ops import _fused_engine, _perstep_engine
+from repro.scenarios import (DriftRamp, FreqStep, LatencyStep, LinkDrop,
+                             LinkRestore, Mark, NodeHoldover, NodeReset,
+                             Scenario, compile_scenario, edges_between,
+                             run_scenario)
+
+TOPO = fully_connected(8)
+LINKS = make_links(TOPO, cable_m=2.0)
+PPM = np.random.default_rng(7).uniform(-8, 8, 8).astype(np.float32)
+SWAP = edges_between(TOPO, 0, 2)
+
+
+def _cfg(**kw):
+    base = dict(dt=1e-3, steps=240, record_every=12)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------- chaining
+
+@pytest.mark.parametrize("ctrl", [
+    ControllerConfig(kind="proportional", kp=2e-8),
+    ControllerConfig(kind="pi", kp=2e-8, ki=1e-9),
+    ControllerConfig(kind="discrete", kp=2e-8, fs=1e-8),
+], ids=lambda c: c.kind)
+def test_no_event_two_segment_run_bit_identical(ctrl):
+    """A Mark-only split run must reproduce the unsplit run bit-for-bit —
+    psi/nu, the controller state (PI integrator, discrete c_est) and the
+    quantization phase all round-trip losslessly through the boundary."""
+    cfg = _cfg(quantize_beta=True)
+    plain = simulate(TOPO, LINKS, ctrl, PPM, cfg)
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, Scenario(events=(Mark(t=0.12),)),
+                       cfg)
+    assert res.num_launches == 2
+    np.testing.assert_array_equal(res.freq_ppm, plain.freq_ppm)
+    np.testing.assert_array_equal(res.beta, plain.beta)
+    np.testing.assert_array_equal(res.psi, plain.psi)
+    np.testing.assert_array_equal(res.nu, plain.nu)
+    for k in plain.c_state:
+        np.testing.assert_array_equal(res.c_state[k], plain.c_state[k])
+
+
+def test_no_event_split_dense_bit_identical():
+    """DenseResult chaining: simulate_fused(init=...) halves == full run."""
+    full = simulate_fused(TOPO, LINKS, PPM, steps=240, kp=2e-9,
+                          record_every=12)
+    h1 = simulate_fused(TOPO, LINKS, PPM, steps=120, kp=2e-9, record_every=12)
+    h2 = simulate_fused(TOPO, LINKS, PPM, steps=120, kp=2e-9, record_every=12,
+                        init=(h1[1], h1.nu))
+    np.testing.assert_array_equal(np.concatenate([h1[0], h2[0]]), full[0])
+    np.testing.assert_array_equal(h2[1], full[1])
+    np.testing.assert_array_equal(h2.nu, full.nu)
+
+
+def test_chunked_scenario_run_matches_monolithic():
+    """chunk_records=1 (maximal splitting) still reproduces the unsplit
+    trajectory exactly — the replay overhead is wall-clock only."""
+    ctrl = ControllerConfig(kp=2e-8)
+    cfg = _cfg()
+    plain = simulate(TOPO, LINKS, ctrl, PPM, cfg)
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, Scenario(events=()), cfg,
+                       chunk_records=1)
+    assert res.num_launches == cfg.steps // cfg.record_every
+    np.testing.assert_array_equal(res.freq_ppm, plain.freq_ppm)
+
+
+# ------------------------------------------------------ acceptance parity
+
+def _swap_scenario():
+    return Scenario(events=(LatencyStep(t=0.12, edges=SWAP, cable_m=1000.0),),
+                    name="fc8-swap")
+
+
+def test_latency_step_parity_matrix_all_engines():
+    """Acceptance: the FC8 cable-swap scenario on fused/tiled/per-step
+    matches the segment-sum reference at EVERY record point to <1e-6 ppm,
+    and each engine compiles at most once across all segments."""
+    ctrl = ControllerConfig(kp=2e-9)
+    cfg = _cfg()
+    ref = run_scenario(TOPO, LINKS, ctrl, PPM, _swap_scenario(), cfg)
+    assert ref.engine == "segment-sum"
+    for eng, cache in [("fused", _fused_engine),
+                       ("tiled", _fused_engine),
+                       ("per-step", _perstep_engine)]:
+        res = run_scenario(TOPO, LINKS, ctrl, PPM, _swap_scenario(), cfg,
+                           engine=eng)
+        assert res.engine == eng
+        assert res.freq_ppm.shape == ref.freq_ppm.shape
+        np.testing.assert_allclose(res.freq_ppm, ref.freq_ppm, rtol=0,
+                                   atol=1e-6)
+        # No recompile across segments: re-running the whole multi-segment
+        # scenario against the warm cache adds ZERO entries.
+        size0 = cache._cache_size()
+        run_scenario(TOPO, LINKS, ctrl, PPM, _swap_scenario(), cfg,
+                     engine=eng)
+        assert cache._cache_size() == size0
+
+
+def test_ten_event_scenario_single_compile_per_engine():
+    """A 10-event scenario (every event type) still compiles each lane at
+    most once: all segment parameters are traced data, never shapes."""
+    ctrl = ControllerConfig(kp=2e-9)
+    cfg = _cfg()
+    bridge = edges_between(TOPO, 1, 4)
+    sc = Scenario(events=(
+        Mark(t=0.012),
+        LatencyStep(t=0.024, edges=SWAP, cable_m=1000.0),
+        FreqStep(t=0.048, nodes=(3,), delta_ppm=2.0),
+        NodeHoldover(t=0.072, nodes=(5,)),
+        LinkDrop(t=0.096, edges=bridge),
+        NodeReset(t=0.12, nodes=(5,)),
+        LinkRestore(t=0.144, edges=bridge, reestablish=False),
+        LatencyStep(t=0.168, edges=SWAP, cable_m=2.0),
+        FreqStep(t=0.192, nodes=(3,), delta_ppm=-2.0),
+        Mark(t=0.216),
+    ), name="ten-events")
+    ref = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg)  # warm segment-sum
+    size_seg = _jitted_run()._cache_size()
+    ref2 = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg)
+    assert _jitted_run()._cache_size() == size_seg
+    np.testing.assert_array_equal(ref.freq_ppm, ref2.freq_ppm)
+    assert ref.compiled.num_segments == 11  # 10 boundaries + t=0 segment
+
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg, engine="fused")
+    size_dense = _fused_engine._cache_size()
+    run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg, engine="fused")
+    assert _fused_engine._cache_size() == size_dense
+    np.testing.assert_allclose(res.freq_ppm, ref.freq_ppm, rtol=0, atol=1e-6)
+
+
+def test_scenario_ensemble_rows_match_single_runs():
+    """Batched scenario == per-draw scenario runs, bit-for-bit on the
+    segment-sum lane and to kernel parity on the fused lane."""
+    ctrl = ControllerConfig(kp=2e-9)
+    cfg = _cfg()
+    ppm_b = np.random.default_rng(11).uniform(-8, 8, (8, 8)).astype(np.float32)
+    ens = run_scenario(TOPO, LINKS, ctrl, ppm_b, _swap_scenario(), cfg)
+    dense = run_scenario(TOPO, LINKS, ctrl, ppm_b, _swap_scenario(), cfg,
+                         engine="fused")
+    assert ens.freq_ppm.shape == dense.freq_ppm.shape == (8, 20, 8)
+    for b in (0, 5):
+        single = run_scenario(TOPO, LINKS, ctrl, ppm_b[b], _swap_scenario(),
+                              cfg)
+        np.testing.assert_array_equal(ens.freq_ppm[b], single.freq_ppm)
+        np.testing.assert_allclose(dense.freq_ppm[b], single.freq_ppm,
+                                   rtol=0, atol=1e-6)
+
+
+# ------------------------------------------------------------ event physics
+
+def test_latency_step_shifts_logical_latency_table():
+    """Table 2: the swap shifts λ by rint(ω·Δl) per direction — the
+    in-flight frames the 2 km spool adds — and the RTT by ≈1231."""
+    ctrl = ControllerConfig(kp=2e-8)
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, _swap_scenario(), _cfg())
+    shift = res.lam_shift()
+    expected = int(np.rint((1000.0 - 2.0) / 2.03e8 * 125e6))  # 615
+    for e in SWAP:
+        assert shift[e] == expected
+    rtt_shift = res.rtt(-1) - res.rtt(0)
+    assert abs(int(rtt_shift[SWAP[0]]) - 1231) <= 1
+    # untouched edges keep their latency table
+    others = [e for e in range(TOPO.num_edges) if e not in SWAP]
+    assert np.all(shift[others] == 0)
+
+
+def test_freq_step_moves_consensus():
+    """Stepping one node's oscillator moves the consensus frequency by
+    delta/N (the controller preserves the mean of ν_u)."""
+    ctrl = ControllerConfig(kp=4e-8)
+    cfg = SimConfig(dt=1e-3, steps=4000, record_every=40)
+    delta = 8.0
+    sc = Scenario(events=(FreqStep(t=1.0, nodes=(0,), delta_ppm=delta),))
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg)
+    pre = res.freq_ppm[res.times <= 1.0][-1].mean()
+    post = res.freq_ppm[-1].mean()
+    assert abs((post - pre) - delta / 8) < 0.2
+    # and the band re-settles after the step
+    assert np.isfinite(res.convergence_time(1.0, after_s=1.0))
+
+
+def test_drift_ramp_discretizes_and_tracks():
+    """A thermal drift ramp on half the nodes drags the consensus at the
+    discretized rate; segments are one record each inside the ramp."""
+    ctrl = ControllerConfig(kp=4e-8)
+    cfg = SimConfig(dt=1e-3, steps=2000, record_every=20)
+    ramp = DriftRamp(t=0.4, t_end=1.2, nodes=(0, 1, 2, 3),
+                     rate_ppm_per_s=5.0)
+    comp = compile_scenario(Scenario(events=(ramp,)), TOPO, LINKS, cfg)
+    # One single-record segment per ramp step; the last step's segment
+    # extends to the end of the run (ν_u is constant from there on).
+    in_ramp = [s for s in comp.segments
+               if 0.4 <= s.start_record * 0.02 < 1.2 - 0.02]
+    assert len(in_ramp) == 39 and all(s.records == 1 for s in in_ramp)
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, Scenario(events=(ramp,)), cfg)
+    # total drift = rate * span * (nodes/N) on the consensus
+    drift = res.freq_ppm[-1].mean() - res.freq_ppm[int(0.4 / 0.02) - 1].mean()
+    assert abs(drift - 5.0 * 0.8 * 0.5) < 0.3
+
+
+def test_holdover_freezes_then_reset_reconverges():
+    ctrl = ControllerConfig(kp=4e-8)
+    cfg = SimConfig(dt=1e-3, steps=3000, record_every=20)
+    sc = Scenario(events=(NodeHoldover(t=0.6, nodes=(2,)),
+                          NodeReset(t=1.6, nodes=(2,))))
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg)
+    held = (res.times > 0.6) & (res.times <= 1.6)
+    f2 = res.freq_ppm[held, 2]
+    # held node's recorded frequency is exactly frozen...
+    assert np.all(f2 == f2[0])
+    # ...and the network reconverges onto it after the reset
+    assert np.isfinite(res.convergence_time(0.5, after_s=1.6))
+
+
+def test_link_drop_restores_with_reestablished_buffer():
+    """Dropping the hourglass bridge lets the cliques drift apart; the
+    restore (with buffer re-establishment) pulls them back together."""
+    topo = hourglass(4)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.array([4.0, 4.5, 5.0, 4.2, -5.0, -4.5, -4.2, -4.8], np.float32)
+    bridge = edges_between(topo, 3, 4)
+    ctrl = ControllerConfig(kp=4e-8)
+    cfg = SimConfig(dt=1e-3, steps=9000, record_every=50)
+    sc = Scenario(events=(LinkDrop(t=3.0, edges=bridge),
+                          LinkRestore(t=5.5, edges=bridge)))
+    res = run_scenario(topo, links, ctrl, ppm, sc, cfg)
+    t = res.times
+    gap = lambda row: abs(row[:4].mean() - row[4:].mean())
+    converged_gap = gap(res.freq_ppm[np.searchsorted(t, 3.0) - 1])
+    dropped_gap = gap(res.freq_ppm[np.searchsorted(t, 5.5) - 1])
+    final_gap = gap(res.freq_ppm[-1])
+    assert converged_gap < 0.5          # bridged: one consensus
+    assert dropped_gap > 4.0            # partitioned: per-clique means
+    assert final_gap < 0.5              # re-bridged: reconverges
+    # The dropped link's virtual occupancy drifted by thousands of frames;
+    # re-establishment snaps the restored buffer back to its β0 setpoint
+    # (within one record of post-restore drift).
+    i_drop_end = np.searchsorted(t, 5.5)      # last dropped-segment record
+    assert abs(res.beta[i_drop_end, bridge[0]]) > 1000.0
+    assert abs(res.beta[i_drop_end + 1, bridge[0]]) < 100.0
+
+
+def test_reestablish_recenters_occupancy():
+    ctrl = ControllerConfig(kp=2e-9)
+    cfg = _cfg(steps=480)
+    sc = Scenario(events=(LatencyStep(t=0.24, edges=SWAP, cable_m=1000.0,
+                                      reestablish=True),))
+    res = run_scenario(TOPO, LINKS, ctrl, PPM, sc, cfg)
+    i = np.searchsorted(res.times, 0.24)   # boundary (last pre-event) record
+    before = res.beta[i, SWAP[0]]
+    after = res.beta[i + 1, SWAP[0]]
+    # un-converged at 2e-9 gain, the DDC is far from its setpoint before
+    # the swap; re-establishment snaps it back to ~β0 (one record of
+    # drift remains)
+    assert abs(before) > 40.0
+    assert abs(after) < 15.0
+    # without re-establishment the occupancy just keeps drifting
+    plain = run_scenario(TOPO, LINKS, ctrl, PPM, Scenario(events=(
+        LatencyStep(t=0.24, edges=SWAP, cable_m=1000.0),)), cfg)
+    assert abs(plain.beta[i + 1, SWAP[0]]) > abs(before)
+
+
+# ------------------------------------------------------------- compilation
+
+def test_compiler_alignment_and_chunking():
+    cfg = _cfg()  # record period 12 ms
+    sc = Scenario(events=(Mark(t=0.0601), FreqStep(t=0.12, nodes=(0,),
+                                                   delta_ppm=1.0)))
+    comp = compile_scenario(sc, TOPO, LINKS, cfg)
+    assert [s.start_record for s in comp.segments] == [0, 5, 10]
+    assert comp.chunk_records == 5
+    assert any("snapped" in n for n in comp.notes)
+    assert comp.total_records == cfg.steps // cfg.record_every
+    with pytest.raises(ValueError, match="does not divide"):
+        run_scenario(TOPO, LINKS, ControllerConfig(kp=2e-8), PPM, sc, cfg,
+                     chunk_records=3)
+
+
+def test_compiler_drops_late_events_with_note():
+    cfg = _cfg()
+    sc = Scenario(events=(FreqStep(t=99.0, nodes=(0,), delta_ppm=1.0),))
+    comp = compile_scenario(sc, TOPO, LINKS, cfg)
+    assert comp.num_segments == 1
+    assert any("dropped" in n for n in comp.notes)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        LatencyStep(t=0.0, edges=(0,), cable_m=2.0, latency_s=1e-8)
+    with pytest.raises(ValueError, match="exactly one"):
+        LatencyStep(t=0.0, edges=(0,))
+    with pytest.raises(ValueError, match="t_end"):
+        DriftRamp(t=1.0, t_end=0.5, nodes=(0,), rate_ppm_per_s=1.0)
+    with pytest.raises(ValueError, match="no edges"):
+        edges_between(TOPO, 0, 0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_scenario(TOPO, LINKS, ControllerConfig(kp=2e-8), PPM,
+                     Scenario(events=()), _cfg(), engine="warp")
+    with pytest.raises(ValueError, match="proportional"):
+        run_scenario(TOPO, LINKS, ControllerConfig(kind="pi", kp=2e-8), PPM,
+                     Scenario(events=()), _cfg(), engine="fused")
+
+
+def test_network_facade_run_scenario():
+    from repro.core import BittideNetwork
+    net = BittideNetwork.build(fully_connected(4), cable_m=2.0)
+    sc = Scenario(events=(LatencyStep(
+        t=0.06, edges=edges_between(net.topo, 0, 1), cable_m=1000.0),))
+    res = net.run_scenario(sc, ctrl=ControllerConfig(kp=2e-8),
+                           cfg=SimConfig(dt=1e-3, steps=120,
+                                         record_every=12))
+    assert res.freq_ppm.shape == (10, 4)
+    assert res.lam.shape[0] == res.compiled.num_segments == 2
