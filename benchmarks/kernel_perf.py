@@ -293,6 +293,56 @@ def bench_scenario_replay():
             f"pass_one_compile={'PASS' if replay_compiles == 0 else 'FAIL'}")
 
 
+def bench_beta_overhead():
+    """β telemetry overhead: record_beta=True vs the ν-only fast path on
+    IDENTICAL work (fused engine, FC24, decimated records).
+
+    The in-kernel β record costs one extra C-class aggregation per RECORD
+    (not per period) on the resident engine, so the expected overhead is
+    ~1/record_every of the period-loop matmul work plus the extra HBM
+    record stream.  Hard gate: the ratio must stay ≤ 1.3× in smoke runs —
+    β telemetry has to be cheap enough to leave on for Fig-17/18-style
+    occupancy studies.  ratio_tiled rides along informationally (the
+    tiled engine pays one extra j-panel sweep per record, measured on
+    torus3d(8)).
+    """
+    topo = fully_connected(24)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-2, 2, topo.num_nodes)
+    ppm -= ppm.mean()
+    steps, record_every = 512, 16
+
+    def run(record_beta):
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-8,
+                              record_every=record_every,
+                              record_beta=record_beta)
+
+    res_on = run(True)
+    us_off = _bench(lambda: run(False), iters=3)
+    us_on = _bench(lambda: run(True), iters=3)
+    ratio = us_on / us_off
+    beta_max = float(np.abs(res_on.beta).max())
+
+    topo_t = torus3d(8)
+    links_t = make_links(topo_t, cable_m=2.0)
+    ppm_t = np.random.default_rng(1).uniform(-2, 2, topo_t.num_nodes)
+    ppm_t -= ppm_t.mean()
+
+    def run_t(record_beta):
+        return simulate_fused(topo_t, links_t, ppm_t, steps=64, kp=2e-8,
+                              record_every=8, record_beta=record_beta)
+
+    res_t = run_t(True)
+    us_t_off = _bench(lambda: run_t(False), iters=3)
+    us_t_on = _bench(lambda: run_t(True), iters=3)
+    return ("kernel_beta_overhead", us_on,
+            f"ratio={ratio:.2f};record_every={record_every};"
+            f"beta_abs_max={beta_max:.2f};engine={res_on.engine};"
+            f"ratio_tiled={us_t_on / us_t_off:.2f};"
+            f"engine_tiled={res_t.engine};"
+            f"pass_overhead={'PASS' if ratio <= 1.3 else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -340,11 +390,12 @@ def bench_sim_engine_throughput():
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
        bench_fused_vs_per_step, bench_tiled_vs_fused,
        bench_gain_sweep_compile, bench_scenario_replay,
-       bench_ensemble_throughput, bench_ensemble_xla_engine,
-       bench_sim_engine_throughput]
+       bench_beta_overhead, bench_ensemble_throughput,
+       bench_ensemble_xla_engine, bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
 # benches for the fused/tiled engines, skipping the 10k-node torus.
 SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
          bench_gain_sweep_compile, bench_scenario_replay,
-         bench_ensemble_throughput, bench_ensemble_xla_engine]
+         bench_beta_overhead, bench_ensemble_throughput,
+         bench_ensemble_xla_engine]

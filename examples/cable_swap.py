@@ -12,7 +12,13 @@ This demo replays the experiment on the scenario engine:
      (with buffer re-establishment, like the physical replug),
   3. plot/print the buffer transient and the before/after RTT tables.
 
-    PYTHONPATH=src python examples/cable_swap.py [--engine fused]
+The buffer transient comes straight from the kernel: the dense Pallas
+engines (the default ``--engine auto``) record the per-node net occupancy
+β in-kernel at every record point (``record_beta=True``), so no
+occupancy reconstruction happens on the host.  ``--engine segment-sum``
+shows the per-edge stream of the edge-list simulator instead.
+
+    PYTHONPATH=src python examples/cable_swap.py [--engine segment-sum]
                                                  [--no-plot] [--smoke]
 """
 import argparse
@@ -27,7 +33,7 @@ from repro.scenarios import (LatencyStep, Scenario, edges_between,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="segment-sum",
+    ap.add_argument("--engine", default="auto",
                     choices=["segment-sum", "auto", "fused", "tiled",
                              "per-step"])
     ap.add_argument("--no-plot", action="store_true",
@@ -51,7 +57,7 @@ def main():
         name="fiber-spool-swap")
 
     res = run_scenario(topo, links, ctrl, ppm.astype(np.float32), scenario,
-                       cfg, engine=args.engine)
+                       cfg, engine=args.engine, record_beta=True)
 
     rtt0, rtt1 = res.rtt(0), res.rtt(1)
     e = swap[0]
@@ -73,8 +79,16 @@ def main():
           f"{post.max():.4f} ppm worst-case after "
           "(the paper's point: clock control barely notices)")
     if res.beta.size:
-        occ = res.beta[:, e]
-        print(f"buffer occupancy on the swapped edge: "
+        if args.engine == "segment-sum":
+            occ = res.beta[:, e]          # per-edge stream (T, E)
+            occ_label = f"edge {e} (swapped)"
+        else:
+            # dense lanes: in-kernel per-node net occupancy (T, N) —
+            # follow the swapped edge's destination node
+            dst = int(np.asarray(topo.dst)[e])
+            occ = res.beta[:, dst]
+            occ_label = f"node {dst} net occupancy (in-kernel)"
+        print(f"buffer occupancy [{occ_label}]: "
               f"{occ[i_swap]:.2f} at the swap -> re-established at "
               f"{occ[i_swap + 1]:.2f}, settled at {occ[-1]:.2f}")
 
@@ -92,8 +106,7 @@ def main():
         ax1.set_ylabel("freq offset (ppm)")
         ax1.set_title("2 km fiber spliced into a running bittide network")
         if res.beta.size:
-            ax2.plot(res.times, res.beta[:, e], lw=0.9,
-                     label=f"edge {e} (swapped)")
+            ax2.plot(res.times, occ, lw=0.9, label=occ_label)
             ax2.axvline(t_swap, color="k", ls="--", lw=0.8)
             ax2.set_ylabel("buffer occupancy (frames)")
             ax2.legend()

@@ -20,7 +20,8 @@ python -m pytest -x -q "$@"
 if [ $# -gt 0 ]; then
     python -m pytest -q tests/test_kernels_fused.py \
         tests/test_engine_dispatch.py tests/test_gain_sweep.py \
-        tests/test_scenarios.py tests/test_ensemble_links.py
+        tests/test_scenarios.py tests/test_ensemble_links.py \
+        tests/test_beta_telemetry.py
 fi
 
 # Scenario smoke lane: replay the §5.6 fiber-swap demo end-to-end (the

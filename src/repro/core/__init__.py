@@ -12,11 +12,14 @@ as a composable, vectorized JAX library:
   reframing    elastic-buffer recentering (paper §4.2, ref [15])
   latency      logical latency / RTT extraction (Tables 1, 2)
   frame_level  frame-accurate discrete-event oracle (validation)
+  envelopes    closed-form occupancy step-response envelopes (arXiv:2410.05432)
   schedule     AOT collective/pipeline timetables on a logical synchrony net
   network      BittideNetwork facade: sync() -> LogicalSynchronyNetwork
 """
 from . import topology, frame_model, controller, ddc, reframing, latency
-from . import frame_level, schedule, network
+from . import envelopes, frame_level, schedule, network
+from .envelopes import (EnvelopeSpec, check_occupancy_envelope,
+                        freq_step_envelope, latency_step_envelope)
 
 from .topology import (Topology, fully_connected, hourglass, cube, ring, line,
                        star, torus3d, mesh2d, random_regular, from_links)

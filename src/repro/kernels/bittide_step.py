@@ -68,6 +68,32 @@ compiled kernel across all of its piecewise-constant segments.
 State layout: B is the sublane axis (pad to a multiple of 8 for float32),
 N the lane axis (pad to a multiple of 128); padding nodes have degree 0 and
 stay inert, padding batch rows are dead weight.
+
+β telemetry (``record_beta=`` / ``emit_beta=``)
+-----------------------------------------------
+The paper's headline hardware result is *bounded buffer excursions*
+(Figs. 12–14, 17–19), so the kernels can record the occupancy alongside ν.
+In relative coordinates the per-edge occupancy is a pure function of the
+instantaneous state (see ``repro.core.frame_model``):
+
+    β_e = ψ_src − ν_src·ω·l_e + λeff_e − ψ_dst        [frames]
+
+The dense kernels never materialize the (C, N, N) β tensor; what they CAN
+emit for free-ish is the **per-node net occupancy** — the same aggregation
+the controller already computes, minus the setpoint term:
+
+    β_i = Σ_{e→i} w_e·β_e = Σ_c [A_c @ (ψ − ν·lat_c)]_i − ψ_i·deg_i + lamsum_i
+
+With ``record_beta=True`` the fused engines evaluate this at every record
+point from the *post-update* state (the segment-sum recording convention)
+and emit it as a second decimated telemetry stream.  For float32 accuracy
+the record computation centers ψ by its mean first — β is exactly
+invariant under a uniform ψ shift, and centering keeps the matmul partial
+sums O(ψ spread) instead of O(ψ magnitude).  Cost: one extra C-class
+aggregation per *record* (not per period) — the resident engine reuses the
+VMEM-resident adjacency, the tiled engine appends one extra j-panel sweep
+per record to its grid, so the ν-only fast path is untouched when the
+flag is off (it is a compile-time switch, not a traced branch).
 """
 from __future__ import annotations
 
@@ -106,8 +132,8 @@ TILE_J_MAX = 2 * TILE
 
 def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_i_ref,
             nu_u_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref, nu_out_ref,
-            *, kp: float, beta_off: float, dt_frames: float,
-            num_classes: int, j_tiles: int):
+            *opt_refs, kp: float, beta_off: float, dt_frames: float,
+            num_classes: int, j_tiles: int, emit_beta: bool):
     j = pl.program_id(1)
 
     # Partial Σ_c A_c @ (ψ_j − ν_j·lat_c) for this (i, j) tile.
@@ -133,6 +159,12 @@ def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_i_ref,
     # Last j tile: fold per-node invariants, apply controller, integrate.
     @pl.when(j == j_tiles - 1)
     def _finalize():
+        if emit_beta:
+            # Per-node net occupancy of the INPUT state: the accumulated
+            # aggregation is still in the ν' output block at this point.
+            opt_refs[0][...] = (nu_out_ref[...]
+                                - psi_i_ref[...] * deg_ref[...]
+                                + lamsum_ref[...])
         err = (nu_out_ref[...]
                - (psi_i_ref[...] + beta_off) * deg_ref[...]
                + lamsum_ref[...])
@@ -149,7 +181,8 @@ def _kernel(lat_ref, a_ref, psi_j_ref, nu_j_ref, psi_i_ref, nu_i_ref,
 
 def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
                         kp: float, beta_off: float, dt_frames: float,
-                        *, ctrl_mask=None, interpret: bool = False):
+                        *, ctrl_mask=None, emit_beta: bool = False,
+                        interpret: bool = False):
     """One fused bittide control period (per-step baseline kernel).
 
     Args:
@@ -161,10 +194,16 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
       kp, beta_off, dt_frames: static controller/integration constants.
       ctrl_mask: optional (N,) float32 controller-enable mask; nodes with
         mask 0 hold their previous ν (clock holdover).  None = all enabled.
+      emit_beta: also output the per-node net occupancy (frames) of the
+        *input* state, Σ_{e→i} w_e·β_e — β is a pure function of state, so
+        the per-step record lane calls the kernel once more on the
+        post-update state (ψ pre-centered by the caller) to record it.
+        Compile-time switch: the two-output fast path is unchanged.
       interpret: run the kernel body in interpret mode (CPU validation).
 
     Returns:
-      (psi_next, nu_next), both (N,) float32.
+      (psi_next, nu_next), both (N,) float32; with ``emit_beta`` a third
+      element beta_node (N,) float32.
     """
     n = psi.shape[0]
     c = a.shape[0]
@@ -183,9 +222,22 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
 
     kern = functools.partial(
         _kernel, kp=float(kp), beta_off=float(beta_off),
-        dt_frames=float(dt_frames), num_classes=int(c), j_tiles=j_tiles)
+        dt_frames=float(dt_frames), num_classes=int(c), j_tiles=j_tiles,
+        emit_beta=bool(emit_beta))
 
-    psi_next, nu_next = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, TILE), lambda i, j: (0, i)),            # psi'
+        pl.BlockSpec((1, TILE), lambda i, j: (0, i)),            # nu' (accum)
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n), jnp.float32),
+        jax.ShapeDtypeStruct((1, n), jnp.float32),
+    ]
+    if emit_beta:
+        out_specs.append(pl.BlockSpec((1, TILE), lambda i, j: (0, i)))
+        out_shape.append(jax.ShapeDtypeStruct((1, n), jnp.float32))
+
+    out = pl.pallas_call(
         kern,
         grid=(i_tiles, j_tiles),
         in_specs=[
@@ -200,27 +252,30 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # deg
             pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # lamsum
         ],
-        out_specs=[
-            pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # psi'
-            pl.BlockSpec((1, TILE), lambda i, j: (0, i)),        # nu' (accum)
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, n), jnp.float32),
-            jax.ShapeDtypeStruct((1, n), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(lat_frames.reshape(c, 1).astype(jnp.float32),
       a.astype(jnp.float32), row(psi), row(nu), row(psi), row(nu),
       row(nu_u), row(jnp.asarray(ctrl_mask, jnp.float32)),
       row(deg), row(lamsum))
-    return psi_next[0], nu_next[0]
+    if emit_beta:
+        return out[0][0], out[1][0], out[2][0]
+    return out[0][0], out[1][0]
 
 
 def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
                   boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
-                  nu_out_ref, rec_ref, psi_s, nu_s,
-                  *, dt_frames: float, record_every: int, num_classes: int):
+                  nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
+                  record_every: int, num_classes: int, record_beta: bool):
     t = pl.program_id(0)
+
+    # Optional β record output is spliced between the fixed outputs and the
+    # scratch refs (pallas_call passes outputs before scratch).
+    if record_beta:
+        brec_ref, psi_s, nu_s = opt_refs
+    else:
+        psi_s, nu_s = opt_refs
 
     # First grid step: load initial state into the persistent VMEM scratch.
     @pl.when(t == 0)
@@ -261,6 +316,23 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
 
     # Decimated telemetry: ν once per record, not once per period.
     rec_ref[...] = nu[None]
+    if record_beta:
+        # Per-node net occupancy of the POST-update state (the segment-sum
+        # recording convention).  β is invariant under a uniform ψ shift,
+        # so center ψ by its row mean first: the matmul partial sums then
+        # stay O(ψ spread) instead of O(ψ magnitude), which is what keeps
+        # the float32 record within 1e-6 frames of the edge-list math.
+        # Cost: one extra C-class aggregation per RECORD on the resident
+        # adjacency — ~1/record_every of the period loop's matmul work.
+        psi_c = psi - jnp.mean(psi, axis=1, keepdims=True)
+        bacc = jnp.zeros_like(psi)
+        for c in range(num_classes):
+            x = psi_c - nu * lat[:, c:c + 1]
+            bacc = bacc + jax.lax.dot_general(
+                x, a_ref[c],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        brec_ref[...] = (bacc - psi_c * deg + lamsum)[None]
     psi_out_ref[...] = psi
     nu_out_ref[...] = nu
 
@@ -375,7 +447,8 @@ def _check_shapes(b, n, num_records, record_every):
 def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                          kp, beta_off, dt_frames: float,
                          *, num_records: int, record_every: int,
-                         ctrl_mask=None, interpret: bool = False):
+                         ctrl_mask=None, record_beta: bool = False,
+                         interpret: bool = False):
     """Advance ``num_records * record_every`` control periods in ONE kernel.
 
     Args:
@@ -394,10 +467,15 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       record_every: control periods fused per record (in-kernel loop).
       ctrl_mask: optional (N,) controller-enable mask — nodes with mask 0
         hold their previous ν (clock holdover).  Traced; None = all on.
+      record_beta: also decimate the per-node net occupancy (frames) to
+        every record — a fourth output, computed in-kernel from the
+        post-update state against the resident adjacency.  Compile-time
+        switch; the ν-only fast path is unchanged when off.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
-      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N)).
+      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
+      beta_rec (num_records, B, N) or None).
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -412,10 +490,25 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
 
     kern = functools.partial(
         _fused_kernel, dt_frames=float(dt_frames),
-        record_every=int(record_every), num_classes=int(c))
+        record_every=int(record_every), num_classes=int(c),
+        record_beta=bool(record_beta))
 
     full2 = lambda t: (0, 0)
-    psi_f, nu_f, rec = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((b, n), full2),                     # psi final
+        pl.BlockSpec((b, n), full2),                     # nu final
+        pl.BlockSpec((1, b, n), lambda t: (t, 0, 0)),    # ν record t
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
+    ]
+    if record_beta:
+        out_specs.append(pl.BlockSpec((1, b, n), lambda t: (t, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    out = pl.pallas_call(
         kern,
         grid=(num_records,),
         in_specs=[
@@ -430,16 +523,8 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((1, n), full2),                 # deg
             pl.BlockSpec((b, n), full2),                 # lamsum per draw
         ],
-        out_specs=[
-            pl.BlockSpec((b, n), full2),                 # psi final
-            pl.BlockSpec((b, n), full2),                 # nu final
-            pl.BlockSpec((1, b, n), lambda t: (t, 0, 0)),  # ν record t
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, n), jnp.float32),
-            jax.ShapeDtypeStruct((b, n), jnp.float32),
-            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((b, n), jnp.float32),             # ψ carry
             pltpu.VMEM((b, n), jnp.float32),             # ν carry
@@ -450,17 +535,28 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
       _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    return psi_f, nu_f, rec
+    if record_beta:
+        return out[0], out[1], out[2], out[3]
+    return out[0], out[1], out[2], None
 
 
 def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
                   boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
-                  nu_out_ref, rec_ref, psi_s, nu_s, acc_s,
-                  *, dt_frames: float, tile_j: int, num_classes: int):
+                  nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
+                  tile_j: int, num_classes: int, record_beta: bool):
     t = pl.program_id(0)
     p = pl.program_id(1)
     j = pl.program_id(2)
     j_tiles = pl.num_programs(2)
+    # With β recording the period axis carries one extra trailing pass per
+    # record: p < periods advances the state, p == periods re-streams the
+    # panels once more to aggregate the POST-update state's occupancy.
+    periods = pl.num_programs(1) - (1 if record_beta else 0)
+
+    if record_beta:
+        brec_ref, psi_s, nu_s, acc_s = opt_refs
+    else:
+        psi_s, nu_s, acc_s = opt_refs
 
     first = jnp.logical_and(t == 0, jnp.logical_and(p == 0, j == 0))
 
@@ -476,6 +572,13 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     psi_j = psi_s[:, cols]                                    # (B, TJ)
     nu_j = nu_s[:, cols]
     lat = lat_ref[...]                                        # (B, C)
+    if record_beta:
+        # β pass: center ψ by its mean (β is exactly shift-invariant; the
+        # centering keeps float32 partial sums O(ψ spread)).  The mean is
+        # over the full scratch row, so every panel of the pass — and every
+        # engine — subtracts the same constant.
+        m = jnp.mean(psi_s[...], axis=1, keepdims=True)       # (B, 1)
+        psi_j = jnp.where(p == periods, psi_j - m, psi_j)
     partial = jnp.zeros(psi_s.shape, jnp.float32)
     for c in range(num_classes):
         x = psi_j - nu_j * lat[:, c:c + 1]
@@ -494,7 +597,7 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         acc_s[...] += partial
 
     # Last panel of the period: fold invariants, apply controller, step.
-    @pl.when(j == j_tiles - 1)
+    @pl.when(jnp.logical_and(j == j_tiles - 1, p < periods))
     def _finalize():
         psi = psi_s[...]
         nu = nu_s[...]
@@ -514,11 +617,21 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         psi_out_ref[...] = psi_next
         nu_out_ref[...] = nu_next
 
+    if record_beta:
+        # Last panel of the β pass: the accumulator now holds the full
+        # aggregation of the record's post-update state.
+        @pl.when(jnp.logical_and(j == j_tiles - 1, p == periods))
+        def _record_beta():
+            brec_ref[...] = (acc_s[...]
+                             - (psi_s[...] - m) * deg_ref[...]
+                             + lamsum_ref[...])[None]
+
 
 def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                                kp, beta_off, dt_frames: float,
                                *, num_records: int, record_every: int,
                                tile_j: int, ctrl_mask=None,
+                               record_beta: bool = False,
                                interpret: bool = False):
     """Tiled fused engine: adjacency streamed in (C, N, tile_j) panels.
 
@@ -528,6 +641,14 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     instead of the whole (C, N, N) stack — Fig-18-scale networks run in
     one ``pallas_call`` without the per-step fallback.  ``tile_j`` must be
     a multiple of TILE dividing N (use :func:`select_engine` to pick it).
+
+    With ``record_beta`` the period grid axis grows by ONE extra pass per
+    record — ``(num_records, record_every + 1, N // tile_j)`` — that
+    re-streams the panels to aggregate the post-update state's per-node
+    net occupancy (the state advances only on the first ``record_every``
+    passes).  Streaming overhead is therefore (record_every+1)/record_every;
+    the flag is a compile-time switch and the ν-only grid is unchanged
+    when off.
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -546,12 +667,27 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
 
     kern = functools.partial(
         _tiled_kernel, dt_frames=float(dt_frames), tile_j=int(tile_j),
-        num_classes=int(c))
+        num_classes=int(c), record_beta=bool(record_beta))
 
     full3 = lambda t, p, j: (0, 0)
-    psi_f, nu_f, rec = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((b, n), full3),                     # psi final
+        pl.BlockSpec((b, n), full3),                     # nu final
+        pl.BlockSpec((1, b, n), lambda t, p, j: (t, 0, 0)),  # ν record
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
+    ]
+    if record_beta:
+        out_specs.append(pl.BlockSpec((1, b, n), lambda t, p, j: (t, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    out = pl.pallas_call(
         kern,
-        grid=(num_records, record_every, j_tiles),
+        grid=(num_records, record_every + (1 if record_beta else 0),
+              j_tiles),
         in_specs=[
             pl.BlockSpec((b, c), full3),                   # lat per draw
             # A column panel: the index map advances with j, so the Pallas
@@ -567,16 +703,8 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((1, n), full3),                   # deg
             pl.BlockSpec((b, n), full3),                   # lamsum per draw
         ],
-        out_specs=[
-            pl.BlockSpec((b, n), full3),                   # psi final
-            pl.BlockSpec((b, n), full3),                   # nu final
-            pl.BlockSpec((1, b, n), lambda t, p, j: (t, 0, 0)),  # ν record
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, n), jnp.float32),
-            jax.ShapeDtypeStruct((b, n), jnp.float32),
-            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((b, n), jnp.float32),               # ψ carry
             pltpu.VMEM((b, n), jnp.float32),               # ν carry
@@ -588,4 +716,6 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
       _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    return psi_f, nu_f, rec
+    if record_beta:
+        return out[0], out[1], out[2], out[3]
+    return out[0], out[1], out[2], None

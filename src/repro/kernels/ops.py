@@ -30,8 +30,9 @@ points are:
 
 All dense runners return a :class:`DenseResult` — a 2-tuple
 ``(freq_ppm, psi)`` (unpacks exactly like before) carrying ``.engine`` /
-``.tile_j`` dispatch metadata and ``.nu``, the exact final frequencies
-for segment chaining.
+``.tile_j`` dispatch metadata, ``.nu``, the exact final frequencies for
+segment chaining, and ``.beta``, the in-kernel per-node net occupancy
+telemetry (frames) when ``record_beta=True``.
 
 Scenario plumbing (``repro.scenarios``): ``init=`` seeds the state from
 a prior result, ``ctrl_mask=`` gates the controller per node (holdover),
@@ -62,7 +63,8 @@ from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES,
                            bittide_fused_pallas, bittide_step_pallas,
                            bittide_tiled_fused_pallas, fused_vmem_bytes,
                            select_engine, tiled_vmem_bytes)
-from .ref import bittide_dense_multistep_ref, bittide_dense_step_ref
+from .ref import (bittide_dense_multistep_ref, bittide_dense_step_ref,
+                  node_occupancy_ref)
 
 __all__ = ["densify", "latency_classes", "bittide_step", "simulate_dense",
            "simulate_dense_perstep", "simulate_fused",
@@ -92,18 +94,39 @@ class DenseResult(tuple):
     ``psi``) so a result can seed the next run via ``init=`` — the
     scenario runner's segment-chaining contract.  (``freq_ppm[..., -1, :]``
     is ν·1e6 rounded through float32 and does NOT round-trip bitwise.)
+
+    ``.beta`` is the in-kernel β telemetry — per-node net occupancy
+    Σ_{e→i} w_e·β_e in *frames*, shape (B, R, N) / (R, N) matching
+    ``freq_ppm`` — or None when the run did not ``record_beta``.  Unlike
+    the ppm-scaled frequency records, β records are the raw float32
+    kernel values, so ``.beta[..., -1, :]`` (see :meth:`beta_final`) IS
+    the exact final occupancy: a chained (split) run with β recording
+    reproduces the unsplit run's β stream bit-for-bit.
     """
 
     engine: str
     tile_j: int
     nu: Optional[np.ndarray]
+    beta: Optional[np.ndarray]
 
-    def __new__(cls, freq_ppm, psi, engine: str, tile_j: int, nu=None):
+    def __new__(cls, freq_ppm, psi, engine: str, tile_j: int, nu=None,
+                beta=None):
         self = tuple.__new__(cls, (freq_ppm, psi))
         self.engine = engine
         self.tile_j = int(tile_j)
         self.nu = nu
+        self.beta = beta
         return self
+
+    @property
+    def beta_final(self) -> Optional[np.ndarray]:
+        """Exact per-node net occupancy at the last record (frames).
+
+        Mirrors ``.nu``: the last β record is emitted unscaled by the
+        kernel, so no rounding separates a chained run from an unsplit
+        one.  None when the run did not record β.
+        """
+        return None if self.beta is None else self.beta[..., -1, :]
 
 
 def latency_classes(lat_frames: np.ndarray,
@@ -207,7 +230,21 @@ def densify(topo: Topology, links: LinkParams, omega_nom: float = OMEGA_NOM,
 def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
                  interpret: bool = True, use_ref: bool = False,
                  ctrl_mask=None):
-    """One control period (per-step baseline path)."""
+    """One control period (per-step baseline path).
+
+    Args:
+      psi, nu, nu_u: (N_pad,) float32 state — ψ in frames, ν/ν_u as
+        relative frequency offsets (dimensionless; ppm·1e-6).
+      a, lam_eff: (C, N_pad, N_pad) float32 adjacency / λeff stacks from
+        :func:`densify` (λeff in frames).
+      lat: (C,) float32 per-class physical latencies in frames.
+      kp, beta_off, dt_frames: **static** jit keys on this legacy path
+        (rel-freq per frame, frames, frames per control period) — the
+        fused engines trace the gains instead.
+      ctrl_mask: optional (N_pad,) traced controller-enable mask.
+
+    Returns (psi', nu'), both (N_pad,) float32.
+    """
     if use_ref:
         psi2, nu2, _ = bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat,
                                               kp, beta_off, dt_frames,
@@ -221,41 +258,56 @@ def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
 @functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
                                              "record_every", "engine",
                                              "tile_j", "interpret",
-                                             "use_ref"))
+                                             "use_ref", "record_beta"))
 def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
                   lamsum, lat, dt_frames, num_records, record_every, engine,
-                  tile_j, interpret, use_ref):
+                  tile_j, interpret, use_ref, record_beta: bool = False):
     """jit entry for the fused engines; one compile per (B, N, C, statics).
 
-    ``kp`` / ``beta_off`` are traced (B,) per-draw gain vectors — gain
-    sweeps share one executable.  ``ctrl_mask`` (N,), ``lamsum`` (B, N)
-    and ``lat`` (B, C) are likewise traced — the scenario runner swaps
-    them per segment against ONE compiled kernel.  ``engine``/``tile_j``
-    come from :func:`repro.kernels.bittide_step.select_engine`.
+    Traced arguments (data, never compile keys — the scenario runner swaps
+    them per segment against ONE compiled kernel):
+      psi, nu, nu_u: (B_pad, N_pad) float32 state (ψ frames, ν relative).
+      kp, beta_off: (B_pad,) per-draw controller gains (gain sweeps share
+        one executable).
+      ctrl_mask: (N_pad,) controller enables (0 = clock holdover).
+      a, lam_eff: (C, N_pad, N_pad) adjacency / λeff stacks (frames).
+      lamsum: (B_pad, N_pad) per-node λeff fold Σ_{e→i} w_e·λeff_e.
+      lat: (B_pad, C) per-draw class latencies in frames.
+
+    Static compile keys: ``dt_frames`` (frames per control period),
+    ``num_records`` / ``record_every`` (telemetry grid), ``engine`` /
+    ``tile_j`` (from :func:`repro.kernels.bittide_step.select_engine`),
+    ``interpret``, ``use_ref``, and ``record_beta`` — the β switch is a
+    kernel *variant* (extra output + extra work), so ν-only runs keep
+    their exact previous executable.
+
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
     """
     if use_ref:
         return bittide_dense_multistep_ref(
             psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
-            num_records, record_every, ctrl_mask)
+            num_records, record_every, ctrl_mask, record_beta=record_beta)
     # Step-invariant per-node degree fold, hoisted out of the record grid.
     deg = a.sum(axis=(0, 2))
     if engine == "tiled":
         return bittide_tiled_fused_pallas(
             psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
             num_records=num_records, record_every=record_every,
-            tile_j=tile_j, ctrl_mask=ctrl_mask, interpret=interpret)
+            tile_j=tile_j, ctrl_mask=ctrl_mask, record_beta=record_beta,
+            interpret=interpret)
     return bittide_fused_pallas(
         psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every,
-        ctrl_mask=ctrl_mask, interpret=interpret)
+        ctrl_mask=ctrl_mask, record_beta=record_beta, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
                                              "num_records", "record_every",
-                                             "interpret", "use_ref"))
+                                             "interpret", "use_ref",
+                                             "record_beta"))
 def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
                     dt_frames, num_records, record_every, interpret,
-                    use_ref):
+                    use_ref, record_beta: bool = False):
     """Capability-fallback engine with the fused engines' record contract.
 
     A scan of per-period 2-D kernels (one ``pallas_call`` per control
@@ -265,6 +317,14 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
     compile keys on this path (it exists for capability, not speed), but
     the link arrays and the controller mask are traced, so a multi-segment
     scenario still compiles it exactly once.
+
+    Shapes: single-draw (N_pad,) state, (C, N_pad, N_pad) stacks, (C,)
+    class latencies in frames.  With ``record_beta`` each record issues
+    ONE extra measurement launch of the 2-D kernel (``emit_beta=True``) on
+    the post-update state — β stays an in-kernel quantity on this lane too
+    — at (record_every+1)/record_every launch overhead.
+
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
     """
 
     def period(carry, _):
@@ -279,13 +339,28 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
                 ctrl_mask=ctrl_mask, interpret=interpret)
         return (psi, nu), None
 
+    def measure(psi, nu):
+        # β is exactly invariant under a uniform ψ shift; center on the
+        # host side of the kernel so its float32 partial sums stay small
+        # (the fused engines center identically, in-kernel).
+        psi_c = psi - jnp.mean(psi)
+        if use_ref:
+            return node_occupancy_ref(psi_c, nu, a, lam_eff, lat)
+        return bittide_step_pallas(
+            psi_c, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
+            ctrl_mask=ctrl_mask, emit_beta=True, interpret=interpret)[2]
+
     def record(carry, _):
         carry, _ = jax.lax.scan(period, carry, None, length=record_every)
+        if record_beta:
+            return carry, (carry[1], measure(*carry))
         return carry, carry[1]
 
     (psi, nu), rec = jax.lax.scan(record, (psi, nu), None,
                                   length=num_records)
-    return psi, nu, rec
+    if record_beta:
+        return psi, nu, rec[0], rec[1]
+    return psi, nu, rec, None
 
 
 def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]:
@@ -388,7 +463,8 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             tile_j: Optional[int] = None,
                             init=None, ctrl_mask=None,
                             lat_classes: Optional[np.ndarray] = None,
-                            edge_w: Optional[np.ndarray] = None) -> DenseResult:
+                            edge_w: Optional[np.ndarray] = None,
+                            record_beta: bool = False) -> DenseResult:
     """Batched fused synchronization: B draws in one compiled call.
 
     Args:
@@ -424,11 +500,17 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         class set so every segment hits one compiled kernel).
       edge_w: optional (E,) edge weights; weight 0 removes a (dropped)
         link from the error aggregation.
+      record_beta: also record the per-node net occupancy β_i =
+        Σ_{e→i} w_e·β_e (frames) in-kernel at every record point — the
+        paper's central measured quantity (bounded buffer excursions,
+        Figs. 12–14, 17–19).  A compile-time kernel variant: the ν-only
+        fast path is byte-identical when off.
 
     Returns:
       DenseResult ``(freq_ppm (B, R, N), psi (B, N))`` with
-      R = steps // record_every, ``.engine`` / ``.tile_j`` metadata and
-      ``.nu`` — the exact final frequencies for chaining.
+      R = steps // record_every, ``.engine`` / ``.tile_j`` metadata,
+      ``.nu`` — the exact final frequencies for chaining — and ``.beta``
+      ((B, R, N) frames, or None without ``record_beta``).
     """
     ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
     if ppm_u.shape[1] != topo.num_nodes:
@@ -520,7 +602,7 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                 f"no fused/tiled working set fits the VMEM budget for "
                 f"B={b_pad}, N={n_pad}, C={c}; falling back to the per-step "
                 "kernel", stacklevel=2)
-        freqs, psis, nus = [], [], []
+        freqs, psis, nus, betas = [], [], [], []
         mask_j = jnp.asarray(mask_pad)
         for bi in range(b):
             if beta0_batched:
@@ -530,16 +612,19 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                     omega_nom, lat_classes=classes_np, edge_w=edge_w)
             else:
                 lam_bi = lam_eff
-            psi_f, nu_f, rec = _perstep_engine(
+            psi_f, nu_f, rec, brec = _perstep_engine(
                 psi0[bi], nu0[bi], nu_u[bi], mask_j, a, lam_bi,
                 jnp.asarray(latv[bi]), float(kp[bi]), float(beta_off[bi]),
                 float(omega_nom * dt), int(num_records), int(record_every),
-                interp, bool(use_ref))
+                interp, bool(use_ref), bool(record_beta))
             freqs.append(np.asarray(rec)[:, :n] * 1e6)
             psis.append(np.asarray(psi_f)[:n])
             nus.append(np.asarray(nu_f)[:n])
+            if record_beta:
+                betas.append(np.asarray(brec)[:, :n])
         return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0,
-                           nu=np.stack(nus))
+                           nu=np.stack(nus),
+                           beta=np.stack(betas) if record_beta else None)
 
     lat_pad = np.zeros((b_pad, c), np.float32)
     lat_pad[:b] = latv
@@ -547,17 +632,21 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
     lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
 
-    psi_f, nu_f, rec = _fused_engine(
+    psi_f, nu_f, rec, brec = _fused_engine(
         psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
         jnp.asarray(mask_pad), a, lam_eff, jnp.asarray(lamsum_pad),
         jnp.asarray(lat_pad), float(omega_nom * dt), int(num_records),
-        int(record_every), str(chosen), int(tj), interp, bool(use_ref))
+        int(record_every), str(chosen), int(tj), interp, bool(use_ref),
+        bool(record_beta))
 
     freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
+    beta = (np.ascontiguousarray(
+        np.transpose(np.asarray(brec)[:, :b, :n], (1, 0, 2)))
+        if record_beta else None)
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
         np.asarray(psi_f)[:b, :n], chosen, tj,
-        nu=np.asarray(nu_f)[:b, :n])
+        nu=np.asarray(nu_f)[:b, :n], beta=beta)
 
 
 def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
@@ -567,12 +656,13 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    use_ref: bool = False, engine: str = "auto",
                    tile_j: Optional[int] = None, init=None,
                    ctrl_mask=None, lat_classes=None,
-                   edge_w=None) -> DenseResult:
+                   edge_w=None, record_beta: bool = False) -> DenseResult:
     """Single-draw fused run; returns (freq_ppm (R, N), psi (N,)).
 
     ``init`` takes (psi (N,), nu (N,)) for segment chaining; the scenario
     kwargs (``ctrl_mask``, ``lat_classes``, ``edge_w``) pass through to
-    :func:`simulate_ensemble_dense`.
+    :func:`simulate_ensemble_dense`, as does ``record_beta`` (the result's
+    ``.beta`` is then (R, N) per-node net occupancy in frames).
     """
     if init is not None and not isinstance(init, DenseResult):
         init = (np.atleast_2d(init[0]), np.atleast_2d(init[1]))
@@ -581,10 +671,11 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
         dt=dt, beta_off=beta_off, record_every=record_every,
         omega_nom=omega_nom, interpret=interpret, use_ref=use_ref,
         engine=engine, tile_j=tile_j, init=init, ctrl_mask=ctrl_mask,
-        lat_classes=lat_classes, edge_w=edge_w)
+        lat_classes=lat_classes, edge_w=edge_w, record_beta=record_beta)
     freq, psi = res
     return DenseResult(freq[0], psi[0], res.engine, res.tile_j,
-                       nu=None if res.nu is None else res.nu[0])
+                       nu=None if res.nu is None else res.nu[0],
+                       beta=None if res.beta is None else res.beta[0])
 
 
 def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,
@@ -594,8 +685,9 @@ def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    use_ref: bool = False) -> DenseResult:
     """Fused-kernel synchronization run; returns (freq_ppm (T,N), psi (N,)).
 
-    Back-compat API (per-period telemetry); delegates to the fused
-    multi-period engine with ``record_every=1``.
+    Back-compat API (per-period telemetry: T == steps, freq in ppm, ψ in
+    frames); delegates to the fused multi-period engine with
+    ``record_every=1``.
     """
     return simulate_fused(topo, links, ppm_u, steps, kp, dt=dt,
                           beta_off=beta_off, record_every=1,

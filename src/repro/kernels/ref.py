@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["bittide_dense_step_ref", "bittide_dense_multistep_ref",
-           "occupancy_ref"]
+           "occupancy_ref", "node_occupancy_ref"]
 
 
 def occupancy_ref(psi, nu, a, lam_eff, lat_frames):
@@ -41,6 +41,16 @@ def occupancy_ref(psi, nu, a, lam_eff, lat_frames):
     x = psi[None, None, :] - nu[None, None, :] * lat_frames[:, None, None]
     beta = a * (x - psi[None, :, None]) + lam_eff
     return beta
+
+
+def node_occupancy_ref(psi, nu, a, lam_eff, lat_frames):
+    """(N,) per-node net occupancy β_i = Σ_{e→i} w_e·β_e (frames).
+
+    The dense engines' β telemetry quantity: the same per-node aggregation
+    the controller consumes, without the β_off setpoint term.  Edge
+    weights (LinkDrop) arrive folded into ``a``/``lam_eff`` by densify.
+    """
+    return occupancy_ref(psi, nu, a, lam_eff, lat_frames).sum(axis=(0, 2))
 
 
 def bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
@@ -64,7 +74,7 @@ def bittide_dense_step_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
 def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
                                 kp, beta_off, dt_frames,
                                 num_records: int, record_every: int,
-                                ctrl_mask=None):
+                                ctrl_mask=None, record_beta: bool = False):
     """Multi-period, optionally batched oracle for the fused engine.
 
     Args:
@@ -80,12 +90,17 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
       record_every: control periods per record.
       ctrl_mask: optional (N,) controller-enable mask (holdover), shared
         across the batch.
+      record_beta: also record the per-node net occupancy
+        (:func:`node_occupancy_ref`) of the post-update state at every
+        record point — the fused engines' β telemetry contract.
 
     Returns:
-      (psi_final, nu_final, nu_rec) with nu_rec of shape
-      (num_records, N) or (num_records, B, N).
+      (psi_final, nu_final, nu_rec, beta_rec) with nu_rec of shape
+      (num_records, N) or (num_records, B, N); beta_rec has the same
+      shape as nu_rec in frames, or is None when ``record_beta`` is off.
     """
     step = bittide_dense_step_ref
+    measure = node_occupancy_ref
     if psi.ndim == 2:
         b = psi.shape[0]
 
@@ -98,6 +113,8 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
         step = jax.vmap(
             bittide_dense_step_ref,
             in_axes=(0, 0, 0, None, None, lat_axis, 0, 0, None, None))
+        measure = jax.vmap(node_occupancy_ref,
+                           in_axes=(0, 0, None, None, lat_axis))
 
     def one_period(_, carry):
         p, v = carry
@@ -107,8 +124,13 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
 
     def one_record(carry, _):
         carry = jax.lax.fori_loop(0, record_every, one_period, carry)
-        return carry, carry[1]
+        rec = carry[1]
+        if record_beta:
+            rec = (rec, measure(carry[0], carry[1], a, lam_eff, lat_frames))
+        return carry, rec
 
     (psi, nu), rec = jax.lax.scan(one_record, (psi, nu), None,
                                   length=num_records)
-    return psi, nu, rec
+    if record_beta:
+        return psi, nu, rec[0], rec[1]
+    return psi, nu, rec, None

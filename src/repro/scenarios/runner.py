@@ -13,17 +13,34 @@ Engines:
 
 ``segment-sum``   the production edge-list simulator
                   (:func:`repro.core.frame_model.simulate` /
-                  ``simulate_ensemble``) — records β telemetry, supports
-                  every controller kind, quantization, telemetry noise,
-                  and fully heterogeneous per-draw (B, E) links.
+                  ``simulate_ensemble``) — records per-edge (T, E) β
+                  telemetry, supports every controller kind, quantization,
+                  telemetry noise, and fully heterogeneous per-draw (B, E)
+                  links.
 ``fused``/``tiled``/``per-step``/``auto``
                   the dense Pallas lanes, driven directly at the jitted
-                  engine layer (segment prep — densify, λeff folds,
-                  padding — runs once per segment; chunks replay on
-                  device-resident state) — ν telemetry only, proportional
+                  engine layer — ν telemetry plus, with
+                  ``record_beta=True``, in-kernel per-node net occupancy
+                  (T, N) β telemetry (frames; see
+                  ``repro.kernels.bittide_step``); proportional
                   controller, shared base links (per-draw λeff from
                   re-establishment is supported; per-draw base latencies
-                  belong on segment-sum).
+                  belong on segment-sum).  The per-segment (C, N, N)
+                  adjacency stacks are built ONCE up front
+                  (:func:`_build_dense_stacks`): segment-to-segment
+                  diff-updates touch only the edges whose latency class
+                  or weight changed, repeated parameter sets (swap-back
+                  events) are deduped, and each unique stack is placed on
+                  the device a single time — the chunk loop then replays
+                  the jitted engine with zero host rebuilds and zero
+                  re-transfers.
+
+β splicing: occupancy is a pure function of the threaded (ψ, ν, λeff)
+state in relative coordinates, so dense β telemetry splices across
+segment boundaries exactly like ψ/ν — bit-identically for a no-event
+split, and through a LatencyStep re-establishment the first post-event
+record reflects the re-filled buffer (the new λeff fold) just as the
+segment-sum recording does.
 
 λeff semantics (see ``repro.scenarios.events``): a plain LatencyStep
 keeps λeff constant — occupancy is continuous through the swap and the
@@ -34,10 +51,11 @@ from the live state so the buffer restarts at its β0 setpoint.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.controller import ControllerConfig
@@ -45,10 +63,10 @@ from repro.core.frame_model import (EB_INIT, LinkParams, SimConfig,
                                     _convergence_time, broadcast_gain,
                                     simulate, simulate_ensemble)
 from repro.core.topology import Topology
-from repro.kernels.bittide_step import select_engine
+from repro.kernels.bittide_step import TILE, select_engine
 from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
                                _pad_batch, _pad_gain, _perstep_engine,
-                               densify)
+                               densify, latency_classes)
 
 from .compiler import CompiledScenario, compile_scenario
 from .events import Scenario
@@ -62,12 +80,21 @@ _DENSE_ENGINES = ("auto", "fused", "tiled", "per-step")
 class ScenarioResult:
     """Concatenated telemetry + final state of a scenario run.
 
-    ``freq_ppm`` is (T, N) for a single run or (B, T, N) for an ensemble;
-    ``beta`` is (T, E) on the segment-sum engine (empty on the dense
-    lanes, which decimate ν only).  ``lam`` is the (S, E) logical-latency
-    table per segment — ``rint(EB_INIT + λeff + ω·l)`` with draw-0 values
-    when λeff is per-draw — whose successive differences are the Table-2
-    latency shifts.
+    ``freq_ppm`` is (T, N) for a single run or (B, T, N) for an ensemble.
+
+    ``beta`` is the occupancy telemetry in *frames* (empty when β
+    recording is off):
+
+    * segment-sum engine — per-edge, (T, E) / (B, T, E);
+    * dense Pallas lanes with ``record_beta=True`` — in-kernel per-node
+      net occupancy Σ_{e→i} w_e·β_e, (T, N) / (B, T, N).  Dropped links
+      (weight 0) leave the aggregation, so the dense stream covers live
+      links only.
+
+    ``lam`` is the (S, E) logical-latency table per segment —
+    ``rint(EB_INIT + λeff + ω·l)`` with draw-0 values when λeff is
+    per-draw — whose successive differences are the Table-2 latency
+    shifts.
     """
 
     freq_ppm: np.ndarray
@@ -151,28 +178,105 @@ def _apply_reestablish(lam_eff, edges, beta0_base, psi, nu, lat_frames,
     return lam_eff
 
 
+class _DenseStacks:
+    """Per-segment dense adjacency stacks, built once per scenario run.
+
+    ``a[si]`` is the device-resident (C, N_pad, N_pad) float32 adjacency
+    of segment ``si`` over the scenario's global latency-class axis.  The
+    builder walks the segments ONCE on the host, diff-updating a single
+    master array — only the edges whose latency class or link weight
+    changed between consecutive segments are touched — and dedupes
+    identical parameter sets (a swap-back event reuses the original
+    device buffer), so each unique stack is transferred to the device
+    exactly once per run however many chunks replay it.  ``lam_dummy``
+    is a shared zero (C, 1, 1) placeholder for the fused/tiled engines'
+    unused λeff argument (dead in the Pallas jaxpr — those kernels fold
+    λeff via the traced ``lamsum`` rows instead — so it only needs to
+    exist, not to be full-size; a real (C, N_pad, N_pad) zeros stack
+    would double the device footprint at Fig-18 scale for nothing).
+    """
+
+    def __init__(self, a: List, lam_dummy, classes: np.ndarray, n_pad: int):
+        self.a = a
+        self.lam_dummy = lam_dummy
+        self.classes = classes
+        self.n_pad = n_pad
+        self.num_unique = len({id(x) for x in a})
+
+
+def _build_dense_stacks(topo: Topology, comp, cfg: SimConfig,
+                        tile: int = TILE) -> _DenseStacks:
+    """Build every segment's (C, N_pad, N_pad) A stack up front.
+
+    Closes the ROADMAP host-densify item: the old path re-densified the
+    full stack inside the segment loop on every ``run_scenario`` call;
+    Fig-18-scale scenario studies pay O(C·N²) per segment for what is
+    usually a 2-edge cable swap.  Here segment 0 pays the full scatter
+    and each subsequent segment pays O(|changed edges|).
+    """
+    classes = np.asarray(comp.lat_classes, np.float64)
+    c = len(classes)
+    n_pad = ((topo.num_nodes + tile - 1) // tile) * tile
+    dst = np.asarray(topo.dst, np.int64)
+    src = np.asarray(topo.src, np.int64)
+    # float64 master: diff-updates subtract and re-add edge weights, which
+    # stays exact for the 0/1-ish weights but would accumulate rounding in
+    # float32 over many segments.
+    master = np.zeros((c, n_pad, n_pad), np.float64)
+    prev_inv = prev_w = None
+    by_key, out = {}, []
+    for seg in comp.segments:
+        lat_frames = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
+        if lat_frames.ndim == 2:   # guarded earlier: dense needs shared links
+            lat_frames = lat_frames[0]
+        _, inv = latency_classes(lat_frames, lat_classes=classes)
+        w = np.asarray(seg.edge_w, np.float64)
+        if prev_inv is None:
+            np.add.at(master, (inv, dst, src), w)
+        else:
+            ch = np.nonzero((inv != prev_inv) | (w != prev_w))[0]
+            if len(ch):
+                np.add.at(master, (prev_inv[ch], dst[ch], src[ch]),
+                          -prev_w[ch])
+                np.add.at(master, (inv[ch], dst[ch], src[ch]), w[ch])
+        prev_inv, prev_w = inv, w
+        key = (inv.tobytes(), w.tobytes())
+        if key not in by_key:
+            by_key[key] = jax.device_put(master.astype(np.float32))
+        out.append(by_key[key])
+    lam_dummy = jax.device_put(np.zeros((c, 1, 1), np.float32))
+    return _DenseStacks(out, lam_dummy, classes, n_pad)
+
+
 def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
                         ctrl: ControllerConfig, ppm2d: np.ndarray,
-                        cfg: SimConfig, engine: str):
+                        cfg: SimConfig, engine: str, stacks: _DenseStacks,
+                        seg_index: int):
     """Host-side prep for one dense-engine segment (done once per segment).
 
-    Densifies the segment's links over the scenario's global class set,
-    folds λeff into the traced (B_pad, N_pad) lamsum rows (per-draw when
-    re-establishment made λeff per-draw), and pads gains/mask/ν_u.  The
-    chunk loop then replays the jitted engine on device-resident state
-    with no further host rebuilds.
+    Args:
+      links_seg: the segment's links — ``latency_s`` (E,) seconds,
+        ``beta0`` the live λeff fold, (E,) or per-draw (B, E) frames.
+      ppm2d: (B, N) per-draw unadjusted offsets (ppm) for this segment.
+      stacks / seg_index: the precomputed per-segment adjacency stacks
+        (see :class:`_DenseStacks`) — A is NOT re-densified here.
+
+    Picks up the precomputed A stack, folds λeff into the traced
+    (B_pad, N_pad) lamsum rows (per-draw when re-establishment made λeff
+    per-draw), and pads gains/mask/ν_u.  The chunk loop then replays the
+    jitted engine on device-resident state with no further host work.
 
     Returns (a, lam_list, lamsum, lat, mask, nu_u, kp, beta_off, chosen,
     tile_j, b_pad, n_pad); ``lam_list`` holds per-draw (C, N, N) λeff
-    tensors for the per-step engine (a single shared entry otherwise).
+    tensors for the per-step engine (the shared zero placeholder on the
+    fused/tiled lanes, whose kernels fold λeff via ``lamsum`` instead).
     """
     b, n = ppm2d.shape
     beta0 = np.asarray(links_seg.beta0, np.float64)
     beta0_rows = beta0 if beta0.ndim == 2 else beta0[None]
-    links0 = LinkParams(latency_s=seg.latency_s, beta0=beta0_rows[0])
-    a, lam0, classes, n_pad = densify(
-        topo, links0, cfg.omega_nom, lat_classes=comp.lat_classes,
-        edge_w=seg.edge_w)
+    a = stacks.a[seg_index]
+    n_pad = stacks.n_pad
+    classes = stacks.classes
     c = a.shape[0]
     nu_u, b_pad = _pad_batch(ppm2d, n, n_pad)
 
@@ -185,14 +289,25 @@ def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
     else:
         chosen, tj = "fused", n_pad
 
-    if chosen == "per-step" and beta0.ndim == 2:
-        lam_list = [densify(topo,
-                            LinkParams(latency_s=seg.latency_s,
-                                       beta0=beta0[bi]),
-                            cfg.omega_nom, lat_classes=comp.lat_classes,
-                            edge_w=seg.edge_w)[1] for bi in range(b)]
+    if chosen == "per-step":
+        # The capability lane consumes the dense λeff tensor directly; its
+        # per-period kernel folds lamsum internally from it.  (Rebuilt per
+        # segment: λeff is live state under re-establishment events.)
+        if beta0.ndim == 2:
+            lam_list = [densify(topo,
+                                LinkParams(latency_s=seg.latency_s,
+                                           beta0=beta0[bi]),
+                                cfg.omega_nom, lat_classes=comp.lat_classes,
+                                edge_w=seg.edge_w)[1] for bi in range(b)]
+        else:
+            lam0 = densify(topo,
+                           LinkParams(latency_s=seg.latency_s,
+                                      beta0=beta0_rows[0]),
+                           cfg.omega_nom, lat_classes=comp.lat_classes,
+                           edge_w=seg.edge_w)[1]
+            lam_list = [lam0] * max(b, 1)
     else:
-        lam_list = [lam0] * max(b, 1)
+        lam_list = [stacks.lam_dummy] * max(b, 1)
 
     lamsum_rows = _lamsum_host(topo, beta0_rows, seg.edge_w,
                                beta0_rows.shape[0], n_pad)
@@ -216,6 +331,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                  engine: str = "segment-sum",
                  chunk_records: Optional[int] = None,
                  compiled: Optional[CompiledScenario] = None,
+                 record_beta: Optional[bool] = None,
                  interpret: Optional[bool] = None) -> ScenarioResult:
     """Run a dynamic-event scenario, chaining one engine across segments.
 
@@ -231,6 +347,13 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
       chunk_records: kernel-launch granularity override; must divide
         every segment's record count.  Default: the compiler's GCD.
       compiled: reuse a previous :func:`compile_scenario` result.
+      record_beta: occupancy telemetry.  ``True`` records β on any
+        engine — per-edge (T, E) on segment-sum, in-kernel per-node net
+        (T, N) on the dense lanes; ``False`` disables it everywhere.
+        Default ``None`` keeps back-compat: segment-sum follows
+        ``cfg.record_beta`` and the dense lanes stay on their ν-only
+        fast path.  The flag is constant across a scenario, so a
+        multi-segment run still compiles each engine exactly once.
 
     Returns:
       ScenarioResult with concatenated telemetry, threaded final state,
@@ -262,6 +385,11 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             raise ValueError(
                 "quantize_beta / telemetry noise are segment-sum features")
 
+    # β recording: explicit flag wins; None keeps segment-sum on the
+    # cfg.record_beta default and the dense lanes on the ν-only fast path.
+    rb_seg = cfg.record_beta if record_beta is None else bool(record_beta)
+    rb_dense = False if record_beta is None else bool(record_beta)
+
     rec_period = cfg.dt * cfg.record_every
     beta0_base = np.asarray(links.beta0, np.float64)
     lam_eff = np.array(beta0_base, copy=True)
@@ -272,8 +400,11 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     freq_chunks, beta_chunks = [], []
     lam_rows, launches = [], 0
     eng_label, tile_j = engine, 0
+    # All segments' dense adjacency stacks, built once with diff-updates
+    # (the fused/tiled/per-step chunk loops never re-densify A).
+    stacks = _build_dense_stacks(topo, comp, cfg) if dense else None
 
-    for seg in comp.segments:
+    for si, seg in enumerate(comp.segments):
         lat_frames = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
         if seg.reestablish:
             if state is None and psi_pad is None:
@@ -296,13 +427,14 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         lam_rows.append(_lam_table(lam_eff, seg.latency_s, cfg.omega_nom))
 
         if dense:
-            # Segment prep — densify, λeff folds, padding — happens ONCE
-            # per segment; the chunk loop below replays the jitted engine
-            # on device-resident padded state with zero host rebuilds.
+            # Segment prep — λeff folds, padding, stack lookup — happens
+            # ONCE per segment; the chunk loop below replays the jitted
+            # engine on device-resident padded state with zero host
+            # rebuilds (A was densified before the segment loop).
             (a, lam_list, lamsum_j, lat_j, mask_j, nu_u_j, kp_j, boff_j,
              chosen, tj, b_pad, n_pad) = _prep_dense_segment(
                 topo, links_seg, seg, comp, ctrl, np.atleast_2d(ppm_seg),
-                cfg, engine)
+                cfg, engine, stacks, si)
             eng_label, tile_j = chosen, tj
             if psi_pad is None:
                 psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
@@ -316,19 +448,25 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                         psi_pad[bi], nu_pad[bi], nu_u_j[bi], mask_j, a,
                         lam_list[bi], lat_j[bi], float(kp_np[bi]),
                         float(boff_np[bi]), dt_frames, int(chunk),
-                        int(cfg.record_every), interp, False)
+                        int(cfg.record_every), interp, False, rb_dense)
                         for bi in range(b)]
                     psi_pad = psi_pad.at[:b].set(
                         jnp.stack([r[0] for r in rows]))
                     nu_pad = nu_pad.at[:b].set(
                         jnp.stack([r[1] for r in rows]))
                     rec = jnp.stack([r[2] for r in rows], axis=1)
+                    if rb_dense:
+                        beta_chunks.append(np.stack(
+                            [np.asarray(r[3])[:, :n] for r in rows]))
                 else:
-                    psi_pad, nu_pad, rec = _fused_engine(
+                    psi_pad, nu_pad, rec, brec = _fused_engine(
                         psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j, a,
                         lam_list[0], lamsum_j, lat_j, dt_frames,
                         int(chunk), int(cfg.record_every), chosen, int(tj),
-                        interp, False)
+                        interp, False, rb_dense)
+                    if rb_dense:
+                        beta_chunks.append(
+                            np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
                 freq_chunks.append(
                     np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
                 launches += 1
@@ -340,7 +478,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             # stays bit-identical).
             cfg_chunk = dataclasses.replace(
                 cfg, steps=chunk * cfg.record_every,
-                seed=cfg.seed + 104729 * launches)
+                seed=cfg.seed + 104729 * launches, record_beta=rb_seg)
             if single:
                 res = simulate(topo, links_seg, ctrl, ppm_seg, cfg_chunk,
                                init=state, edge_w=seg.edge_w,
@@ -362,12 +500,17 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             freq = freq[0]
         psi_f = np.asarray(psi_pad)[:b, :n]
         nu_f = np.asarray(nu_pad)[:b, :n]
+        if rb_dense:
+            beta = np.concatenate(beta_chunks, axis=1)
+            if single:
+                beta = beta[0]
+        else:
+            beta = np.zeros(freq.shape[:-1] + (0,), np.float32)
         if single:
             psi_f, nu_f = psi_f[0], nu_f[0]
-        beta = np.zeros(freq.shape[:-1] + (0,), np.float32)
         c_state = {}
     else:
-        beta = (np.concatenate(beta_chunks, axis=axis) if cfg.record_beta
+        beta = (np.concatenate(beta_chunks, axis=axis) if rb_seg
                 else np.zeros(freq.shape[:-1] + (0,), np.float32))
         psi_f, nu_f, c_state = state.psi, state.nu, state.c_state
 
