@@ -343,6 +343,55 @@ def bench_beta_overhead():
             f"pass_overhead={'PASS' if ratio <= 1.3 else 'FAIL'}")
 
 
+def bench_reframe_overhead():
+    """Closed-loop re-centering lane: the auto_reframe=True replay of a
+    drift-ramp scenario vs the identical replay with reframing off, on the
+    fused engine (β recording on in both, so the ratio isolates the guard
+    inspection + rotation splices: the per-chunk edge-estimate matmul, the
+    host Laplacian solves, and the λeff/lamsum re-preps).
+
+    Hard gate: pass_one_compile — replaying the WHOLE auto-reframed
+    scenario (including every rotation splice) against a warm cache must
+    add ZERO compile entries, because a rotation rewrites only traced
+    inputs (lamsum rows / λeff tensors), never a shape.  The overhead
+    ratio rides along informationally, as does the splice count and the
+    occupancy the loop reclaimed (max |β| with vs without reframing).
+    """
+    from repro.core.reframing import ReframePolicy
+    from repro.scenarios import DriftRamp, Scenario, run_scenario
+
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(7).uniform(-1, 1, 8).astype(np.float32)
+    ppm -= ppm.mean()
+    ctrl = ControllerConfig(kp=2e-8)
+    cfg = SimConfig(dt=1e-3, steps=720, record_every=12)
+    sc = Scenario(events=(DriftRamp(t=0.06, t_end=0.54, nodes=(0, 1, 2),
+                                    rate_ppm_per_s=7.5),), name="reframe")
+    pol = ReframePolicy(depth=16, margin=4.0)
+
+    def run(auto):
+        return run_scenario(topo, links, ctrl, ppm, sc, cfg, engine="fused",
+                            record_beta=True,
+                            auto_reframe=pol if auto else False)
+
+    res_off = run(False)
+    res_on = run(True)                    # warm compile (same executable)
+    size0 = _fused_engine._cache_size()
+    us_on = _bench(lambda: run(True), iters=3)
+    splice_compiles = _fused_engine._cache_size() - size0
+    us_off = _bench(lambda: run(False), iters=3)
+    beta_off_max = float(np.abs(res_off.beta).max())
+    beta_on_max = float(np.abs(res_on.beta).max())
+    return ("kernel_reframe_overhead", us_on,
+            f"ratio_vs_no_reframe={us_on / us_off:.2f};"
+            f"reframes={len(res_on.reframes)};"
+            f"beta_abs_max_off={beta_off_max:.1f};"
+            f"beta_abs_max_on={beta_on_max:.1f};"
+            f"splice_compiles={splice_compiles};"
+            f"pass_one_compile={'PASS' if splice_compiles == 0 else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -390,12 +439,13 @@ def bench_sim_engine_throughput():
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
        bench_fused_vs_per_step, bench_tiled_vs_fused,
        bench_gain_sweep_compile, bench_scenario_replay,
-       bench_beta_overhead, bench_ensemble_throughput,
+       bench_beta_overhead, bench_reframe_overhead,
+       bench_ensemble_throughput,
        bench_ensemble_xla_engine, bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
 # benches for the fused/tiled engines, skipping the 10k-node torus.
 SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
          bench_gain_sweep_compile, bench_scenario_replay,
-         bench_beta_overhead, bench_ensemble_throughput,
-         bench_ensemble_xla_engine]
+         bench_beta_overhead, bench_reframe_overhead,
+         bench_ensemble_throughput, bench_ensemble_xla_engine]

@@ -15,10 +15,9 @@ import time
 
 import numpy as np
 
-from repro.core import (BittideNetwork, ControllerConfig, OscillatorSpec,
-                        SimConfig, cube, fully_connected, hourglass, simulate,
+from repro.core import (ControllerConfig, SimConfig, cube, fully_connected, hourglass, simulate,
                         torus3d, make_links)
-from repro.core.latency import round_trip_latency, rtt_table
+from repro.core.latency import round_trip_latency
 from repro.core.reframing import reframe
 
 # Experiment-calibrated gains (units: relative frequency per frame of

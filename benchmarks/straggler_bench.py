@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import make_links, ring, fully_connected
+from repro.core import make_links, ring
 from repro.core.latency import logical_latency
 from repro.core.schedule import (LogicalSynchronyNetwork,
                                  ring_allreduce_schedule, verify_bounded)

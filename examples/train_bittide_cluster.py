@@ -18,11 +18,9 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import (ControllerConfig, SimConfig, make_links, mesh2d)
-from repro.core.latency import logical_latency
+from repro.core import (ControllerConfig, SimConfig, mesh2d)
 from repro.core.network import BittideNetwork, OscillatorSpec
-from repro.core.schedule import (LogicalSynchronyNetwork,
-                                 ring_allreduce_schedule, verify_bounded)
+from repro.core.schedule import (ring_allreduce_schedule, verify_bounded)
 from repro.data import DataConfig, SyntheticPipeline
 from repro.ft import simulate_stragglers
 from repro.models import ModelZoo

@@ -1,35 +1,72 @@
 #!/usr/bin/env bash
-# Per-PR gate: tier-1 tests + cross-engine parity matrix + fast benchmark
-# smoke with a JSON perf record compared against the committed baseline.
+# Per-PR gate: lint + tier-1 tests + cross-engine parity matrix + fast
+# benchmark smoke with a JSON perf record compared against the committed
+# baseline.
 #
-#   scripts/ci.sh [extra pytest args...]
+#   scripts/ci.sh [--fast] [extra pytest args...]
+#
+# --fast is the per-push quick gate (see .github/workflows/ci.yml): lint,
+# tier-1 tests minus the `slow` marker (heavy parity-matrix / envelope /
+# long-horizon suites), and the benchmark smoke lane.  The no-flag run is
+# the full PR gate.
 #
 # Writes BENCH_kernels.json at the repo root (the fused/tiled-engine perf
-# trajectory; see benchmarks/README.md).  Exits nonzero if tests fail, any
-# smoke bench reports FAIL, or the baseline comparison finds a hard gate.
+# trajectory; see benchmarks/README.md).  Exits nonzero if lint or tests
+# fail, any smoke bench reports FAIL, or the baseline comparison finds a
+# hard gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
-
-# The cross-engine parity matrix + dispatch/gain-sweep/scenario gates must
-# run even when the caller filtered the main pytest invocation down to a
-# subset; a no-argument run already covered them above, so don't pay for
-# them twice.
-if [ $# -gt 0 ]; then
-    python -m pytest -q tests/test_kernels_fused.py \
-        tests/test_engine_dispatch.py tests/test_gain_sweep.py \
-        tests/test_scenarios.py tests/test_ensemble_links.py \
-        tests/test_beta_telemetry.py
+FAST=0
+if [ "${1:-}" = "--fast" ]; then
+    FAST=1
+    shift
 fi
 
-# Scenario smoke lane: replay the §5.6 fiber-swap demo end-to-end (the
-# scenario compiler + runner + Table-2 latency-shift path).
-python examples/cable_swap.py --smoke --no-plot > /dev/null
-echo "ci: scenario smoke (cable_swap --smoke) green"
+# Lint gate (ruff.toml at the repo root).  The gate is mandatory where
+# ruff is installed (the GitHub workflow installs it via
+# requirements-ci.txt); hermetic containers without it get a loud skip
+# rather than a silent pass.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks scripts examples
+    echo "ci: lint green (ruff)"
+elif python -c "import ruff" >/dev/null 2>&1; then
+    python -m ruff check src tests benchmarks scripts examples
+    echo "ci: lint green (python -m ruff)"
+else
+    echo "ci: WARNING ruff not installed; lint gate skipped" >&2
+fi
+
+if [ "$FAST" -eq 1 ]; then
+    python -m pytest -x -q -m "not slow" "$@"
+else
+    python -m pytest -x -q "$@"
+
+    # The cross-engine parity matrix + dispatch/gain-sweep/scenario/
+    # reframing gates must run even when the caller filtered the main
+    # pytest invocation down to a subset; a no-argument run already
+    # covered them above, so don't pay for them twice.
+    if [ $# -gt 0 ]; then
+        python -m pytest -q tests/test_kernels_fused.py \
+            tests/test_engine_dispatch.py tests/test_gain_sweep.py \
+            tests/test_scenarios.py tests/test_ensemble_links.py \
+            tests/test_beta_telemetry.py tests/test_reframing.py
+    fi
+
+    # Scenario smoke lanes: the §5.6 fiber-swap demo end-to-end (scenario
+    # compiler + runner + Table-2 latency shifts) and the closed-loop
+    # re-centering demo (guard band + rotation splices + RTT conservation).
+    python examples/cable_swap.py --smoke --no-plot > /dev/null
+    python examples/auto_reframe.py --smoke --no-plot > /dev/null
+    echo "ci: scenario smoke (cable_swap, auto_reframe --smoke) green"
+fi
 
 python -m benchmarks.run --smoke --json BENCH_kernels.json
 python scripts/compare_bench.py BENCH_kernels.json \
     benchmarks/baselines/BENCH_kernels.json
-echo "ci: tests green, parity matrix green, BENCH_kernels.json written"
+if [ "$FAST" -eq 1 ]; then
+    echo "ci: fast gate green (lint, not-slow tests, smoke benches)"
+else
+    echo "ci: tests green, parity matrix green, BENCH_kernels.json written"
+fi

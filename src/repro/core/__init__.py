@@ -21,6 +21,8 @@ from . import envelopes, frame_level, schedule, network
 from .envelopes import (EnvelopeSpec, check_occupancy_envelope,
                         freq_step_envelope, latency_step_envelope)
 
+from .reframing import (ReframePolicy, ReframeResult, reframe, reframe_net,
+                        reframe_state)
 from .topology import (Topology, fully_connected, hourglass, cube, ring, line,
                        star, torus3d, mesh2d, random_regular, from_links)
 from .controller import ControllerConfig, hardware_gain

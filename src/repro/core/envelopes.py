@@ -76,7 +76,8 @@ from .topology import Topology
 
 __all__ = ["EnvelopeSpec", "laplacian", "spectral_gap",
            "freq_step_envelope", "latency_step_envelope",
-           "check_occupancy_envelope", "default_slack"]
+           "check_occupancy_envelope", "default_slack",
+           "reframe_guard_margin"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +240,32 @@ def default_slack(env: EnvelopeSpec, nu_bound: float, lat_frames_max: float,
             + env.a_max * env.amp
             + env.amp * (1.0 - np.exp(-env.sigma * rec))
             + 1e-4)
+
+
+def reframe_guard_margin(topo: Topology, kp: float, dt: float,
+                         record_every: int, nu_bound: float,
+                         lat_frames_max: float,
+                         omega_nom: float = OMEGA_NOM,
+                         edge_w=None) -> float:
+    """Default guard-band margin for the auto-reframe trigger (frames).
+
+    The closed-loop re-centering subsystem
+    (``repro.scenarios.run_scenario(auto_reframe=...)``) trips a pointer
+    rotation when the node-normalized in-kernel occupancy record crosses
+    ``depth/2 − margin``.  The margin must cover what the *record* can
+    understate about the true worst occupancy between inspections —
+    exactly the terms :func:`default_slack` charges for a zero-amplitude
+    envelope (the ν·ω·l in-flight coupling, second-order controller
+    products, float32 telemetry rounding), floored at one frame (the
+    quantization granularity of a pointer shift).  Scenarios whose
+    disturbances slew the occupancy faster than one frame per record
+    chunk should pass a larger margin via
+    :class:`repro.core.reframing.ReframePolicy`.
+    """
+    env = freq_step_envelope(topo, kp, dt, nodes=(), delta_ppm=0.0,
+                             omega_nom=omega_nom, edge_w=edge_w)
+    return max(1.0, default_slack(env, nu_bound, lat_frames_max, dt,
+                                  record_every, omega_nom))
 
 
 def check_occupancy_envelope(times, beta, t0: float, env: EnvelopeSpec,

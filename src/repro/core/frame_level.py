@@ -12,7 +12,14 @@ outgoing wire.  It is the ground truth used to validate:
   * dynamic events: a mid-run cable swap (``repro.scenarios.LatencyStep``)
     re-fills the wire at the new length — in-flight/in-buffer frames keep
     their λ, and λ jumps by exactly the inserted in-flight frame count at
-    the splice (the paper's §5.6 fiber-spool experiment, Table 2).
+    the splice (the paper's §5.6 fiber-spool experiment, Table 2);
+  * frame rotation (``repro.scenarios.Reframe``, arXiv:2504.07044): the
+    read pointer of an elastic buffer jumps by δ frames, splicing the
+    sequence stream contiguously — occupancy AND logical latency both
+    shift by exactly δ, frames behind the pointer are untouched (zero
+    loss from the post-splice stream), and λ stays constant within each
+    epoch.  This is the ground truth for the closed-loop buffer
+    re-centering subsystem (``run_scenario(auto_reframe=...)``).
 
 Pure numpy, event-accurate, intended for small N (tests and examples).
 """
@@ -41,9 +48,12 @@ class FrameLevelResult:
     ticks: np.ndarray        # (N,) total localticks executed
     # Dynamic-event bookkeeping (empty when events is None):
     # per-edge ordered list of distinct λ values observed (one per epoch),
-    # and the net in-flight frames inserted by LatencySteps per edge.
+    # the net in-flight frames inserted by LatencySteps per edge, and the
+    # net read-pointer rotation applied by Reframe events per edge.
     lam_epochs: list = dataclasses.field(default_factory=list)
     inserted: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    rotated: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, np.int64))
 
 
@@ -77,9 +87,11 @@ def simulate_frames(
         the new length with sequence numbers counting back contiguously
         from the sender's current localtick, so occupancy is continuous,
         frames already in flight keep their λ, and λ jumps by exactly the
-        inserted in-flight frame count at the splice — and ``FreqStep``
-        (oscillator rate change).  Other event types are abstract-model
-        constructs; passing them raises.
+        inserted in-flight frame count at the splice — ``FreqStep``
+        (oscillator rate change), and ``Reframe`` (read-pointer rotation:
+        occupancy and λ shift by exactly the applied per-edge shift, the
+        stream splices contiguously with zero loss).  Other event types
+        are abstract-model constructs; passing them raises.
     """
     n, e = topo.num_nodes, topo.num_edges
     rate_nom = omega_nom * sim_rate_scale
@@ -108,24 +120,26 @@ def simulate_frames(
     occ_max = np.full(e, init_occ, np.int64)
     underflow = overflow = False
     inserted = np.zeros(e, np.int64)
+    rotated = np.zeros(e, np.int64)
     # edge -> pending first-seqs of post-event wire regimes (a second swap
     # can land while the first regime's frames are still in flight, so
     # this is a queue, ordered by construction: seqs only grow).
     splice_seq: dict = {}
 
     pending = []
-    _LatencyStep = _FreqStep = None
+    _LatencyStep = _FreqStep = _Reframe = None
     if events is not None:
         # Lazy import: events live in repro.scenarios (which imports core).
-        from repro.scenarios.events import FreqStep, LatencyStep, Scenario
-        _LatencyStep, _FreqStep = LatencyStep, FreqStep
+        from repro.scenarios.events import (FreqStep, LatencyStep, Reframe,
+                                            Scenario)
+        _LatencyStep, _FreqStep, _Reframe = LatencyStep, FreqStep, Reframe
         evs = list(events.events) if isinstance(events, Scenario) \
             else list(events)
         for ev in sorted(evs, key=lambda x: x.t):
-            if not isinstance(ev, (LatencyStep, FreqStep)):
+            if not isinstance(ev, (LatencyStep, FreqStep, Reframe)):
                 raise ValueError(
-                    f"frame-level oracle supports LatencyStep and FreqStep "
-                    f"events, got {type(ev).__name__}")
+                    f"frame-level oracle supports LatencyStep, FreqStep "
+                    f"and Reframe events, got {type(ev).__name__}")
             pending.append(ev)
 
     out_edges = [np.nonzero(topo.src == i)[0] for i in range(n)]
@@ -168,6 +182,57 @@ def simulate_frames(
                 # registering one would mask a later real violation.
                 splice_seq.setdefault(ei, []).append(s_hi - fl_new)
 
+    def apply_reframe(ev, t):
+        """Read-pointer rotation: splice the sequence stream by δ frames.
+
+        The FIFO + wire of an edge hold the contiguous sequence range
+        [next_pop, sent_src − 1].  Rotating the read pointer by δ > 0
+        re-opens δ already-consumed frames (the head extends down to
+        next_pop − δ: occupancy and λ grow by δ); δ < 0 advances the
+        pointer past δ buffered frames (occupancy and λ shrink by δ).
+        Frames behind the pointer — the whole post-splice stream — are
+        untouched, so no frame of it is lost, and the splice is
+        registered so the λ-epoch accounting sees a rotation, not a
+        constancy violation.
+        """
+        idx = list(ev.edge_ids(e))
+        for ei in idx:
+            deliver(ei, t)          # pointer state must be current
+        if ev.shift is not None:
+            sh = ev.shifts_for(e)
+        else:
+            occ = np.array([len(fifos[ei]) for ei in idx], np.float64)
+            setpoint = depth / 2.0 + ev.target
+            if ev.mode == "per-edge":
+                sh = np.rint(setpoint - occ).astype(np.int64)
+            else:
+                # Graph mode: RTT-conserving potential assignment from the
+                # per-node net occupancy (idx is all edges here).
+                from .reframing import graph_shifts
+                net = np.zeros(n, np.float64)
+                np.add.at(net, topo.dst[idx], occ - setpoint)
+                sh = graph_shifts(topo, net)[1]
+        for k, ei in enumerate(idx):
+            d = int(sh[k])
+            if d == 0:
+                continue
+            next_pop = int(sent[topo.src[ei]]) - len(wires[ei]) - len(fifos[ei])
+            if d > 0:
+                fifos[ei][:0] = list(range(next_pop - d, next_pop))
+            else:
+                if len(fifos[ei]) < -d:
+                    raise RuntimeError(
+                        f"reframe shift {d} exceeds buffer occupancy "
+                        f"{len(fifos[ei])} on edge {ei}")
+                del fifos[ei][:-d]
+            rotated[ei] += d
+            # First post-rotation pop has seq == next_pop − d, whatever
+            # the sign: that is where the new λ epoch begins.
+            splice_seq.setdefault(ei, []).append(next_pop - d)
+            occ_now = len(fifos[ei])
+            occ_min[ei] = min(occ_min[ei], occ_now)
+            occ_max[ei] = max(occ_max[ei], occ_now)
+
     corr = np.zeros(n, np.float64)
     next_control = control_period_s
     t_end = duration_s
@@ -184,6 +249,8 @@ def simulate_frames(
             if isinstance(ev, _FreqStep):
                 ppm[list(ev.nodes)] += ev.delta_ppm
                 rates = rate_nom * (1.0 + ppm * 1e-6)
+            elif isinstance(ev, _Reframe):
+                apply_reframe(ev, t)
             else:
                 apply_latency_step(ev, t)
         if controller is not None and t >= next_control:
@@ -241,4 +308,5 @@ def simulate_frames(
     return FrameLevelResult(
         lam=lam, lam_constant=lam_const, occupancy_min=occ_min,
         occupancy_max=occ_max, underflow=underflow, overflow=overflow,
-        ticks=sent, lam_epochs=lam_epochs, inserted=inserted)
+        ticks=sent, lam_epochs=lam_epochs, inserted=inserted,
+        rotated=rotated)

@@ -88,18 +88,28 @@ class BittideNetwork:
 
     def run_scenario(self, scenario, ctrl: Optional[ControllerConfig] = None,
                      cfg: Optional[SimConfig] = None,
-                     engine: str = "segment-sum", **kw):
+                     engine: str = "segment-sum", auto_reframe=False, **kw):
         """Run a dynamic-event scenario (cable swaps, drift ramps, holdover,
-        link outages) against this network — the paper's §5.6 live
-        fiber-insertion experiment generalized to any event sequence.
+        link outages, pointer rotations) against this network — the
+        paper's §5.6 live fiber-insertion experiment generalized to any
+        event sequence.
+
+        ``auto_reframe=True`` (or a
+        :class:`repro.core.reframing.ReframePolicy`) enables closed-loop
+        buffer re-centering: the runner watches the in-kernel β record
+        and splices RTT-conserving pointer rotations whenever occupancy
+        approaches the elastic-buffer depth, so long disturbance
+        scenarios stay inside the hardware's 32-deep buffers.
 
         Delegates to :func:`repro.scenarios.run_scenario`; returns its
         ScenarioResult (``.lam`` holds the per-segment logical-latency
-        tables whose differences are the Table-2 RTT shifts).
+        tables whose differences are the Table-2 RTT shifts;
+        ``.reframes`` the applied rotations).
         """
         # Deferred import: repro.scenarios composes on top of repro.core.
         from repro.scenarios import run_scenario as _run_scenario
         ctrl = ctrl or ControllerConfig(kind="proportional", kp=2e-8)
         cfg = cfg or SimConfig(dt=1e-4, steps=20_000, record_every=20)
         return _run_scenario(self.topo, self.links, ctrl, self.ppm_u,
-                             scenario, cfg, engine=engine, **kw)
+                             scenario, cfg, engine=engine,
+                             auto_reframe=auto_reframe, **kw)

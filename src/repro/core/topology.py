@@ -12,7 +12,7 @@ simulation (Fig 18), and a few generic families used by the property tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence, Tuple
+from typing import Iterable, Tuple
 
 import numpy as np
 

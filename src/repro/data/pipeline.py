@@ -14,7 +14,7 @@ can actually learn it (the end-to-end example's loss goes well below ln V):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,7 @@ and simulations.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Sequence, Tuple
-
-import numpy as np
 
 from repro.launch.mesh import make_mesh_from_devices
 

@@ -15,7 +15,6 @@ the adaptation of the paper to the training-framework layer.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

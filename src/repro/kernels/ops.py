@@ -38,7 +38,13 @@ Scenario plumbing (``repro.scenarios``): ``init=`` seeds the state from
 a prior result, ``ctrl_mask=`` gates the controller per node (holdover),
 ``edge_w=`` drops links from the error aggregation, and ``lat_classes=``
 pins the dense latency-class axis so piecewise-constant segments share
-one compiled kernel.  ``links`` may carry per-draw (B, E) parameters —
+one compiled kernel.  The per-node λeff fold ``lamsum`` is likewise a
+traced (B, N) input — it is the ONLY λeff the fused/tiled kernels
+consume — which is what lets the closed-loop reframing subsystem
+(``run_scenario(auto_reframe=...)``) splice read-pointer rotations
+(λeff += integer shifts) between record chunks without ever recompiling:
+a rotation is a data rewrite of ``lamsum`` (and of the per-step lane's
+λeff tensor), never a shape change.  ``links`` may carry per-draw (B, E) parameters —
 the dense lane requires a shared class structure (one latency per class
 per draw); fully heterogeneous per-draw links run on the segment-sum
 lane in ``repro.core.frame_model``.
@@ -59,10 +65,8 @@ import numpy as np
 from repro.core.frame_model import LinkParams, OMEGA_NOM, broadcast_gain
 from repro.core.topology import Topology
 
-from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES,
-                           bittide_fused_pallas, bittide_step_pallas,
-                           bittide_tiled_fused_pallas, fused_vmem_bytes,
-                           select_engine, tiled_vmem_bytes)
+from .bittide_step import (SUBLANE, TILE, bittide_fused_pallas, bittide_step_pallas,
+                           bittide_tiled_fused_pallas, select_engine)
 from .ref import (bittide_dense_multistep_ref, bittide_dense_step_ref,
                   node_occupancy_ref)
 

@@ -19,7 +19,7 @@ fusion); reality sits between it and the CPU per-op figure.
 """
 from __future__ import annotations
 
-from repro.configs.base import ArchConfig, ShapeSpec, SHAPES
+from repro.configs.base import ArchConfig, ShapeSpec
 
 __all__ = ["analytic_hbm_bytes"]
 

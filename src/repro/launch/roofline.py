@@ -9,7 +9,7 @@ import dataclasses
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import Dict
 
 CHIPS = 256  # single-pod roofline basis
 HBM_BW = 819e9

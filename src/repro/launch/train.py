@@ -6,9 +6,7 @@ NamedShardings, which `.lower()` accepts directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.models import ModelZoo
-from repro.models.layers import ParamDef, abstract, materialize, pspec_tree, dtype_of
+from repro.models.layers import abstract, materialize, pspec_tree, dtype_of
 from repro.models.model_zoo import InputDef
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 

@@ -21,7 +21,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import ParamDef, rmsnorm
 

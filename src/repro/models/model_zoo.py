@@ -12,13 +12,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeSpec
 
-from .layers import ParamDef, dtype_of
 from .losses import chunked_xent
 from .transformer import cache_defs, lm_decode_step, lm_forward, model_defs
 

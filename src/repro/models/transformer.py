@@ -13,13 +13,12 @@ flash-decoding's distribution scheme for free).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .attention import attention, chunked_attention, decode_attention
+from .attention import chunked_attention, decode_attention
 from .layers import ParamDef, rmsnorm, rope, stack_defs, swiglu
 from .mamba2 import (mamba_apply, mamba_cache_defs, mamba_decode_step,
                      mamba_defs)

@@ -8,7 +8,6 @@ updates are computed in float32 regardless.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,13 +18,15 @@ parameter-step analysis of arXiv:2109.14111 and the occupancy-transient
 bounds of arXiv:2410.05432.
 """
 from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop, LinkRestore,
-                     Mark, NodeHoldover, NodeReset, Scenario, edges_between)
+                     Mark, NodeHoldover, NodeReset, Reframe, Scenario,
+                     edges_between)
 from .compiler import CompiledScenario, Segment, compile_scenario
-from .runner import ScenarioResult, run_scenario
+from .runner import AppliedReframe, ScenarioResult, run_scenario
 
 __all__ = [
     "Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
-    "NodeReset", "LinkDrop", "LinkRestore", "Scenario", "edges_between",
+    "NodeReset", "LinkDrop", "LinkRestore", "Reframe", "Scenario",
+    "edges_between",
     "CompiledScenario", "Segment", "compile_scenario",
-    "ScenarioResult", "run_scenario",
+    "AppliedReframe", "ScenarioResult", "run_scenario",
 ]

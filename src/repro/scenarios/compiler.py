@@ -46,7 +46,7 @@ from repro.core.topology import Topology
 from repro.kernels.ops import MAX_EXACT_CLASSES, latency_classes
 
 from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop, LinkRestore,
-                     Mark, NodeHoldover, NodeReset, Scenario)
+                     Mark, NodeHoldover, NodeReset, Reframe, Scenario)
 
 __all__ = ["Segment", "CompiledScenario", "compile_scenario"]
 
@@ -59,8 +59,11 @@ class Segment:
     a LatencyStep writes the same new value into every draw's column).
     ``reestablish`` lists edges whose elastic buffer re-initializes to
     its β0 setpoint at this segment's start — resolved by the runner
-    against the live ψ/ν state.  ``events`` are the events applied at
-    the start (for reporting/plot annotation).
+    against the live ψ/ν state.  ``reframe`` lists the read-pointer
+    rotations (:class:`repro.scenarios.events.Reframe`) applied at this
+    segment's start, likewise resolved against the live state when their
+    shifts are implicit.  ``events`` are the events applied at the start
+    (for reporting/plot annotation).
     """
 
     start_record: int
@@ -70,6 +73,7 @@ class Segment:
     edge_w: np.ndarray               # (E,) float32 error weights
     ctrl_mask: np.ndarray            # (N,) float32 controller enables
     reestablish: Tuple[int, ...] = ()
+    reframe: Tuple[Reframe, ...] = ()
     events: Tuple[object, ...] = ()
 
     @property
@@ -165,9 +169,15 @@ def compile_scenario(scenario: Scenario, topo: Topology, links: LinkParams,
     for bi, r in enumerate(boundaries[:-1]):
         evs = boundary_events.get(r, [])
         reest: List[int] = []
+        refr: List[Reframe] = []
         for ev in evs:
             if isinstance(ev, Mark):
                 pass
+            elif isinstance(ev, Reframe):
+                # A rotation changes no engine parameter shape or value
+                # that the compiler tracks — the runner resolves the λeff
+                # rewrite against the live state at this boundary.
+                refr.append(ev)
             elif isinstance(ev, LatencyStep):
                 new = ev.new_latency_s(cfg.omega_nom, SIGNAL_VELOCITY,
                                        PIPE_FRAMES)
@@ -194,6 +204,7 @@ def compile_scenario(scenario: Scenario, topo: Topology, links: LinkParams,
             latency_s=lat.copy(), dppm=dppm.copy(),
             edge_w=edge_w.copy(), ctrl_mask=mask.copy(),
             reestablish=tuple(dict.fromkeys(reest)),
+            reframe=tuple(refr),
             events=tuple(evs)))
 
     chunk = 0

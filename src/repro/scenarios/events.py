@@ -33,6 +33,21 @@ perturbation of that kind:
     receiver's error sum (weight 0).  Restore re-adds it, by default
     re-establishing the buffer at its β0 setpoint (``reestablish=True``),
     like the hardware's link bring-up.
+``Reframe``
+    A read-pointer rotation on the elastic buffers (paper §4.2;
+    "Buffer Centering for bittide Synchronization via Frame Rotation",
+    arXiv:2504.07044).  Each listed buffer's logical latency λ shifts by
+    exactly the applied pointer shift — occupancy is traded for
+    headroom, no frame of the post-splice stream is lost.  Shifts may be
+    explicit (integer frames per edge) or computed from the live state
+    at the splice: ``mode="per-edge"`` recenters every listed buffer to
+    ``target`` independently (the hardware's one-shot post-sync
+    reframing), ``mode="graph"`` applies the RTT-conserving
+    least-squares potential assignment of
+    :mod:`repro.core.reframing` against the per-node net occupancy.
+    The *closed-loop* variant — reframing whenever the in-kernel β
+    record approaches the buffer depth — is the runner's
+    ``auto_reframe=`` policy, not an event.
 ``Mark``
     A no-op segment boundary — forces the runner to split at a record
     (used by the chaining regression tests and for annotating plots).
@@ -52,7 +67,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 __all__ = ["Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
-           "NodeReset", "LinkDrop", "LinkRestore", "Scenario",
+           "NodeReset", "LinkDrop", "LinkRestore", "Reframe", "Scenario",
            "edges_between"]
 
 
@@ -177,6 +192,56 @@ class LinkRestore:
 
     def __post_init__(self):
         object.__setattr__(self, "edges", _ids(self.edges))
+
+
+@dataclasses.dataclass(frozen=True)
+class Reframe:
+    """Rotate elastic-buffer read pointers at time ``t`` (frame rotation).
+
+    edges: directed edges to rotate; None = every edge.
+    shift: explicit integer pointer shifts in frames — a scalar or one
+      value per listed edge.  None (default) computes the shifts from the
+      live state at the splice.
+    mode: shift assignment when ``shift`` is None — ``"per-edge"`` recenters
+      each listed buffer to ``target`` independently (Δλ arbitrary per
+      edge; the post-sync hardware reframing), ``"graph"`` solves the
+      least-squares node-potential assignment from the per-node net
+      occupancy (all cycle sums of λ — every RTT — conserved exactly).
+    target: normalized occupancy setpoint (0 = half-full).
+
+    Whatever the mode, each edge's logical latency shifts by EXACTLY the
+    applied pointer shift and the occupancy moves with it — the
+    frame-rotation invariant checked by the frame-level oracle.
+    """
+    t: float
+    edges: Optional[Tuple[int, ...]] = None
+    shift: Optional[object] = None
+    mode: str = "per-edge"
+    target: float = 0.0
+
+    def __post_init__(self):
+        if self.edges is not None:
+            object.__setattr__(self, "edges", _ids(self.edges))
+        if self.mode not in ("per-edge", "graph"):
+            raise ValueError(f"unknown Reframe mode {self.mode!r}")
+        if self.mode == "graph" and self.edges is not None:
+            raise ValueError(
+                "graph-mode Reframe rotates every edge (node potentials "
+                "are global); leave edges=None")
+        if self.shift is not None:
+            sh = np.asarray(self.shift, np.float64)
+            if np.any(sh != np.rint(sh)):
+                raise ValueError("Reframe shifts are whole read-pointer "
+                                 "steps; got non-integer values")
+
+    def shifts_for(self, num_edges: int) -> np.ndarray:
+        """(len(edges),) int64 explicit shifts (requires ``shift``)."""
+        idx = self.edge_ids(num_edges)
+        return np.broadcast_to(
+            np.asarray(self.shift, np.int64), (len(idx),)).copy()
+
+    def edge_ids(self, num_edges: int) -> Tuple[int, ...]:
+        return tuple(range(num_edges)) if self.edges is None else self.edges
 
 
 @dataclasses.dataclass(frozen=True)

@@ -47,6 +47,31 @@ keeps λeff constant — occupancy is continuous through the swap and the
 logical latency λ = λeff + ω·l shifts by exactly the in-flight frame
 count, the paper's Table-2 observation.  ``reestablish`` recomputes λeff
 from the live state so the buffer restarts at its β0 setpoint.
+
+Closed-loop buffer re-centering (``auto_reframe=``): real elastic
+buffers are 32 frames deep, and the hardware keeps them there by
+*reframing* — rotating read pointers so occupancy returns to the
+setpoint, trading λ for headroom (paper §4.2; arXiv:2504.07044).  With
+``auto_reframe`` enabled the runner closes that loop in simulation:
+between record chunks it inspects the in-kernel β record against the
+guard band ``depth/2 − margin`` (margin defaults to
+:func:`repro.core.envelopes.reframe_guard_margin`).  The record is per
+NODE but the buffer wall is per EDGE, so the trigger reconstructs the
+graph-consistent per-edge occupancy estimate — node potentials from the
+Laplacian pseudo-inverse of the net record, differenced along each edge
+— before comparing against the guard.  When tripped, the runner
+splices a pointer rotation computed from the live threaded state
+(:func:`repro.core.reframing.graph_shifts`): integer
+node potentials solve the Laplacian least-squares problem against the
+net occupancy deviation, every edge's λeff shifts by
+``x_src − x_dst``, and ALL cycle sums of λ — every RTT — are conserved
+by construction.  The shifts rewrite only traced inputs (the per-node
+``lamsum`` fold on the fused/tiled lanes, the λeff tensor on the
+per-step lane, ``links.beta0`` on segment-sum), so the SAME compiled
+engine continues across every splice: long scenarios whose
+DriftRamp/FreqStep excursions would overflow a 32-deep buffer now run
+indefinitely inside it, at the cost of a per-splice λ rotation recorded
+in ``ScenarioResult.reframes``.
 """
 from __future__ import annotations
 
@@ -59,9 +84,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.controller import ControllerConfig
+from repro.core.envelopes import laplacian, reframe_guard_margin
 from repro.core.frame_model import (EB_INIT, LinkParams, SimConfig,
                                     _convergence_time, broadcast_gain,
                                     simulate, simulate_ensemble)
+from repro.core.reframing import (ReframePolicy, edge_occupancy,
+                                  node_net_occupancy, shift_assignment)
 from repro.core.topology import Topology
 from repro.kernels.bittide_step import TILE, select_engine
 from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
@@ -71,9 +99,27 @@ from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
 from .compiler import CompiledScenario, compile_scenario
 from .events import Scenario
 
-__all__ = ["ScenarioResult", "run_scenario"]
+__all__ = ["AppliedReframe", "ScenarioResult", "run_scenario"]
 
 _DENSE_ENGINES = ("auto", "fused", "tiled", "per-step")
+
+
+@dataclasses.dataclass(frozen=True)
+class AppliedReframe:
+    """One pointer rotation the runner spliced into a scenario.
+
+    record: global record index the rotation precedes (the shift is live
+      from this record on); time: the same boundary in seconds.
+    shift: integer read-pointer shifts in frames — (E,), or (B, E) when a
+      batched run's draws rotated independently.  Δλ per edge equals the
+      shift exactly (the frame-rotation invariant).
+    auto: True for guard-band splices, False for explicit Reframe events.
+    """
+
+    record: int
+    time: float
+    shift: np.ndarray
+    auto: bool
 
 
 @dataclasses.dataclass
@@ -94,7 +140,10 @@ class ScenarioResult:
     ``lam`` is the (S, E) logical-latency table per segment —
     ``rint(EB_INIT + λeff + ω·l)`` with draw-0 values when λeff is
     per-draw — whose successive differences are the Table-2 latency
-    shifts.
+    shifts.  Rows are segment-START snapshots: rotations
+    ``auto_reframe`` splices mid-segment appear in ``reframes`` and in
+    :attr:`lam_final`, not in ``lam`` (graph-mode rotations conserve
+    every RTT, so ``rtt()`` is unaffected either way).
     """
 
     freq_ppm: np.ndarray
@@ -116,10 +165,22 @@ class ScenarioResult:
     tile_j: int
     chunk_records: int
     num_launches: int
+    # Pointer rotations spliced into the run (explicit Reframe events and
+    # auto_reframe guard trips), in record order.
+    reframes: List[AppliedReframe] = dataclasses.field(default_factory=list)
 
     @property
     def scenario(self) -> Scenario:
         return self.compiled.scenario
+
+    @property
+    def total_reframe_shift(self) -> np.ndarray:
+        """(E,) (or (B, E)) accumulated pointer shift over all rotations —
+        the net λ the run traded for buffer headroom (zeros if none)."""
+        total = np.zeros(self.topo.num_edges, np.int64)
+        for r in self.reframes:
+            total = total + np.asarray(r.shift, np.int64)
+        return total
 
     def convergence_time(self, band_ppm: float = 1.0,
                          after_s: float = 0.0) -> float:
@@ -134,8 +195,19 @@ class ScenarioResult:
                   - self.freq_ppm[sel].min(axis=1))
         return _convergence_time(spread, self.times[sel], band_ppm)
 
+    @property
+    def lam_final(self) -> np.ndarray:
+        """(E,) logical latencies at the END of the run.
+
+        Unlike ``lam[-1]`` (a segment-START snapshot), this is computed
+        from the final λeff and therefore includes every rotation
+        ``auto_reframe`` spliced mid-segment."""
+        return _lam_table(self.lam_eff,
+                          self.compiled.segments[-1].latency_s,
+                          self.cfg.omega_nom)
+
     def rtt(self, seg: int = -1) -> np.ndarray:
-        """(E,) round-trip logical latency table of one segment."""
+        """(E,) round-trip logical latency table of one segment (start)."""
         lam = self.lam[seg]
         return lam + lam[self.topo.reverse_edge_index()]
 
@@ -176,6 +248,57 @@ def _apply_reestablish(lam_eff, edges, beta0_base, psi, nu, lat_frames,
     lam_eff[..., idx] = (target - psi[..., src] + nu[..., src] * lf
                          + psi[..., dst])
     return lam_eff
+
+
+def _rotation_shifts(topo: Topology, lam_eff, psi, nu, lat_frames, edge_w,
+                     mode: str, target: float, edges=None, explicit=None,
+                     lap_pinv=None):
+    """Resolve a pointer rotation against the live state.
+
+    Args:
+      lam_eff: live λeff fold, (E,) or per-draw (B, E) frames.
+      psi, nu: live state, (N,) or (B, N) (exact threaded values — every
+        engine computes identical shifts from them).
+      lat_frames: physical latencies in frames, (E,) or (B, E).
+      mode/target/edges/explicit: the rotation spec — explicit integer
+        shifts, or state-computed "per-edge" (independent recentering to
+        ``target``) / "graph" (RTT-conserving potential assignment from
+        the per-node net occupancy) shifts.
+
+    Returns ``(lam_eff_new, shift)``.  λeff is promoted to per-draw only
+    when the shifts are state-dependent and the state is batched
+    (explicit shifts stay shared across draws).
+    """
+    lam = np.asarray(lam_eff, np.float64)
+    e = topo.num_edges
+    idx = list(range(e)) if edges is None else list(edges)
+    if explicit is not None:
+        sh = np.zeros(e, np.int64)
+        sh[idx] = np.broadcast_to(np.asarray(explicit, np.int64), (len(idx),))
+        return lam + sh, sh
+    psi = np.asarray(psi, np.float64)
+    nu = np.asarray(nu, np.float64)
+    batched = psi.ndim == 2
+    if batched and lam.ndim == 1:
+        lam = np.tile(lam, (psi.shape[0], 1))
+    rows = psi.shape[0] if batched else 1
+    lam_rows = lam.reshape(rows, e)
+    psi_rows = psi.reshape(rows, -1)
+    nu_rows = nu.reshape(rows, -1)
+    lat_rows = np.broadcast_to(np.asarray(lat_frames, np.float64),
+                               (rows, e))
+    shifts = np.zeros((rows, e), np.int64)
+    for bi in range(rows):
+        beta = edge_occupancy(topo, psi_rows[bi], nu_rows[bi], lat_rows[bi],
+                              lam_rows[bi])
+        # The ONE shift-assignment rule (shared with reframe_state);
+        # the auto path reuses the guard's cached Laplacian pinv.
+        shifts[bi] = shift_assignment(topo, beta, edge_w, mode, target,
+                                      edges=edges, lap_pinv=lap_pinv)[1]
+    lam_new = lam_rows + shifts
+    if not batched:
+        return lam_new[0], shifts[0]
+    return lam_new, shifts
 
 
 class _DenseStacks:
@@ -332,6 +455,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                  chunk_records: Optional[int] = None,
                  compiled: Optional[CompiledScenario] = None,
                  record_beta: Optional[bool] = None,
+                 auto_reframe=False,
                  interpret: Optional[bool] = None) -> ScenarioResult:
     """Run a dynamic-event scenario, chaining one engine across segments.
 
@@ -354,6 +478,22 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         ``cfg.record_beta`` and the dense lanes stay on their ν-only
         fast path.  The flag is constant across a scenario, so a
         multi-segment run still compiles each engine exactly once.
+      auto_reframe: closed-loop buffer re-centering.  ``True`` (or a
+        :class:`repro.core.reframing.ReframePolicy`) makes the runner
+        inspect each chunk's β record — the in-kernel per-node net
+        occupancy on the dense lanes, the per-edge record's
+        destination fold on segment-sum — reconstruct the
+        graph-consistent per-edge occupancy estimate from it, compare
+        against the guard band ``depth/2 − margin``, and, when tripped,
+        splice an RTT-conserving graph-mode pointer rotation (computed
+        from the live threaded state) before the next chunk.  The rotation rewrites only traced
+        λeff inputs, so the same compiled engine continues across every
+        splice; each one is logged in ``ScenarioResult.reframes``.
+        Implies β recording on every lane (``record_beta=False`` is
+        rejected).  Trip decisions are made once per chunk, so pick
+        ``chunk_records`` (and the policy margin) such that one chunk of
+        occupancy slew cannot cross from the guard band to the buffer
+        wall.
 
     Returns:
       ScenarioResult with concatenated telemetry, threaded final state,
@@ -390,6 +530,30 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     rb_seg = cfg.record_beta if record_beta is None else bool(record_beta)
     rb_dense = False if record_beta is None else bool(record_beta)
 
+    policy: Optional[ReframePolicy] = None
+    guard = 0.0
+    if auto_reframe:
+        policy = (auto_reframe if isinstance(auto_reframe, ReframePolicy)
+                  else ReframePolicy())
+        if record_beta is False:
+            raise ValueError(
+                "auto_reframe inspects the β record; record_beta=False is "
+                "contradictory")
+        rb_seg = rb_dense = True   # the guard trigger needs the record
+        if policy.margin is None:
+            kp_max = float(np.max(np.asarray(ctrl.kp)))
+            nu_bound = (float(np.abs(ppm_u).max())
+                        + max(float(np.abs(s.dppm).max())
+                              for s in comp.segments)) * 1e-6
+            lat_max = max(float(np.asarray(s.latency_s).max())
+                          for s in comp.segments) * cfg.omega_nom
+            margin = reframe_guard_margin(
+                topo, kp_max, cfg.dt, cfg.record_every, nu_bound, lat_max,
+                cfg.omega_nom)
+        else:
+            margin = policy.margin
+        guard = policy.guard(margin)
+
     rec_period = cfg.dt * cfg.record_every
     beta0_base = np.asarray(links.beta0, np.float64)
     lam_eff = np.array(beta0_base, copy=True)
@@ -399,32 +563,78 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     psi_pad = nu_pad = None      # dense lanes: padded (B_pad, N_pad) state
     freq_chunks, beta_chunks = [], []
     lam_rows, launches = [], 0
+    reframes: List[AppliedReframe] = []
+    guard_cache: dict = {}     # edge_w bytes -> (deg_w, Laplacian pinv)
+    rec_done, total = 0, comp.total_records
     eng_label, tile_j = engine, 0
     # All segments' dense adjacency stacks, built once with diff-updates
     # (the fused/tiled/per-step chunk loops never re-densify A).
     stacks = _build_dense_stacks(topo, comp, cfg) if dense else None
 
+    def live_state():
+        """Exact threaded (ψ, ν) — (N,)/(B, N) float host views.  Every
+        engine resolves rotations/re-establishments against these, so
+        the spliced λeff rewrites agree across lanes to state precision."""
+        if state is None and psi_pad is None:
+            return (np.zeros_like(ppm_u, np.float64),
+                    ppm_u.astype(np.float64) * 1e-6)
+        if dense:
+            psi_now = np.asarray(psi_pad)[:b, :n]
+            nu_now = np.asarray(nu_pad)[:b, :n]
+            return (psi_now[0], nu_now[0]) if single else (psi_now, nu_now)
+        return state.psi, state.nu
+
     for si, seg in enumerate(comp.segments):
         lat_frames = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
         if seg.reestablish:
-            if state is None and psi_pad is None:
-                psi_now = np.zeros_like(ppm_u, np.float64)
-                nu_now = ppm_u.astype(np.float64) * 1e-6
-            elif dense:
-                psi_now = np.asarray(psi_pad)[:b, :n]
-                nu_now = np.asarray(nu_pad)[:b, :n]
-                if single:
-                    psi_now, nu_now = psi_now[0], nu_now[0]
-            else:
-                psi_now, nu_now = state.psi, state.nu
+            psi_now, nu_now = live_state()
             lam_eff = _apply_reestablish(
                 lam_eff, seg.reestablish, beta0_base, psi_now, nu_now,
                 lat_frames, topo)
+        for ev in seg.reframe:
+            # Explicit Reframe events: resolved at the boundary against
+            # the live state (like re-establishment), applied as a λeff
+            # rewrite whose Δλ is exactly the pointer shift.
+            psi_now, nu_now = live_state()
+            lam_eff, shift = _rotation_shifts(
+                topo, lam_eff, psi_now, nu_now, lat_frames, seg.edge_w,
+                ev.mode, ev.target, edges=ev.edges, explicit=ev.shift)
+            reframes.append(AppliedReframe(
+                record=seg.start_record, time=seg.start_record * rec_period,
+                shift=shift, auto=False))
         ppm_seg = (ppm_u + seg.dppm.astype(np.float32)
                    if single else ppm_u + seg.dppm.astype(np.float32)[None])
         links_seg = LinkParams(latency_s=seg.latency_s,
                                beta0=np.array(lam_eff, copy=True))
         lam_rows.append(_lam_table(lam_eff, seg.latency_s, cfg.omega_nom))
+        if policy is not None:
+            # Guard preparation: the dense record is the per-NODE net
+            # occupancy, but the buffer wall is per EDGE.  The
+            # graph-consistent per-edge estimate inverts the same
+            # Laplacian fold the shifts solve — β̂_e = p_src − p_dst with
+            # L p = −(net − target·deg) — so the trigger watches exactly
+            # the occupancy component a rotation can recenter, at one
+            # (T, N) × (N, N) matmul per chunk.  The O(N³) pseudo-inverse
+            # is cached on the edge-weight vector: edge_w only changes at
+            # LinkDrop/LinkRestore boundaries, so ramp-heavy scenarios
+            # (one segment per record) pay it once, not per segment.
+            wkey = np.asarray(seg.edge_w, np.float64).tobytes()
+            if wkey not in guard_cache:
+                deg_c = np.zeros(n, np.float64)
+                np.add.at(deg_c, np.asarray(topo.dst),
+                          np.asarray(seg.edge_w, np.float64))
+                guard_cache[wkey] = (deg_c, np.linalg.pinv(
+                    laplacian(topo, np.asarray(seg.edge_w, np.float64))))
+            deg_w, lap_pinv = guard_cache[wkey]
+            src_np, dst_np = np.asarray(topo.src), np.asarray(topo.dst)
+
+            def edge_estimate_max(net_records):
+                """Max |β̂_e| over a chunk of (..., N) net-occupancy rows."""
+                dev = np.asarray(net_records, np.float64) \
+                    - policy.target * deg_w
+                pot = dev @ lap_pinv.T
+                return float(np.abs(pot[..., src_np]
+                                    - pot[..., dst_np]).max())
 
         if dense:
             # Segment prep — λeff folds, padding, stack lookup — happens
@@ -442,7 +652,8 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             interp = _auto_interpret(interpret)
             kp_np = np.asarray(kp_j)
             boff_np = np.asarray(boff_j)
-            for _ in range(seg.records // chunk):
+            chunks_in_seg = seg.records // chunk
+            for ci in range(chunks_in_seg):
                 if chosen == "per-step":
                     rows = [_perstep_engine(
                         psi_pad[bi], nu_pad[bi], nu_u_j[bi], mask_j, a,
@@ -470,6 +681,38 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 freq_chunks.append(
                     np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
                 launches += 1
+                rec_done += chunk
+                if policy is not None and rec_done < total:
+                    # Guard-band trip: the chunk's in-kernel β record,
+                    # edge-estimated, against depth/2 − margin.
+                    if edge_estimate_max(beta_chunks[-1]) >= guard:
+                        psi_now, nu_now = live_state()
+                        lam_eff, shift = _rotation_shifts(
+                            topo, lam_eff, psi_now, nu_now, lat_frames,
+                            seg.edge_w, "graph", policy.target,
+                            lap_pinv=lap_pinv)
+                        reframes.append(AppliedReframe(
+                            record=rec_done, time=rec_done * rec_period,
+                            shift=shift, auto=True))
+                        # The rotation rewrites only traced inputs (the
+                        # lamsum fold / per-step λeff tensors), so the
+                        # re-prepped segment replays the SAME compiled
+                        # engine — zero recompiles across splices.  On a
+                        # segment's final chunk the next segment's own
+                        # prep picks the shifted lam_eff up, so skip the
+                        # re-prep there (its outputs would be discarded).
+                        if ci + 1 < chunks_in_seg:
+                            links_seg = LinkParams(
+                                latency_s=seg.latency_s,
+                                beta0=np.array(lam_eff, copy=True))
+                            (a, lam_list, lamsum_j, lat_j, mask_j, nu_u_j,
+                             kp_j, boff_j, chosen, tj, b_pad, n_pad) = \
+                                _prep_dense_segment(
+                                    topo, links_seg, seg, comp, ctrl,
+                                    np.atleast_2d(ppm_seg), cfg, engine,
+                                    stacks, si)
+                            kp_np = np.asarray(kp_j)
+                            boff_np = np.asarray(boff_j)
             continue
 
         for _ in range(seg.records // chunk):
@@ -492,6 +735,21 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             freq_chunks.append(res.freq_ppm)
             beta_chunks.append(res.beta)
             launches += 1
+            rec_done += chunk
+            if policy is not None and rec_done < total:
+                # Same trigger quantity as the dense lanes: the per-edge
+                # record folded by destination, then edge-estimated.
+                net = node_net_occupancy(topo, res.beta, seg.edge_w)
+                if edge_estimate_max(net) >= guard:
+                    lam_eff, shift = _rotation_shifts(
+                        topo, lam_eff, res.psi, res.nu, lat_frames,
+                        seg.edge_w, "graph", policy.target,
+                        lap_pinv=lap_pinv)
+                    reframes.append(AppliedReframe(
+                        record=rec_done, time=rec_done * rec_period,
+                        shift=shift, auto=True))
+                    links_seg = LinkParams(latency_s=seg.latency_s,
+                                           beta0=np.array(lam_eff, copy=True))
 
     axis = 1 if (dense or not single) else 0
     freq = np.concatenate(freq_chunks, axis=axis)
@@ -524,4 +782,4 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                                 for s in comp.segments]),
         topo=topo, links=links, ctrl=ctrl, cfg=cfg, compiled=comp,
         engine=eng_label, tile_j=tile_j, chunk_records=chunk,
-        num_launches=launches)
+        num_launches=launches, reframes=reframes)

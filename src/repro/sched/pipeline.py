@@ -19,12 +19,10 @@ paper's contribution mapped to training.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.schedule import (LogicalSynchronyNetwork, StaticSchedule,
                                  pipeline_schedule, verify_bounded)

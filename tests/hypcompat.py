@@ -15,6 +15,8 @@ Usage in test modules::
 """
 from __future__ import annotations
 
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 import functools
 import os
 import zlib

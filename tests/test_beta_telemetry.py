@@ -68,6 +68,7 @@ PARITY_CASES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize(
     "topo,kp,ppm_scale,steps,rec", PARITY_CASES,
@@ -167,6 +168,7 @@ def _settle(scale=2.0):
     return topo, links, ppm
 
 
+@pytest.mark.slow
 def test_freq_step_stays_inside_closed_form_envelope_fc8():
     """Acceptance: the FC8 FreqStep β transient recorded in-kernel stays
     inside the arXiv:2410.05432 closed-form envelope — and the envelope
@@ -195,6 +197,7 @@ def test_freq_step_stays_inside_closed_form_envelope_fc8():
     np.testing.assert_allclose(db_meas, env.db_inf, rtol=0, atol=0.05)
 
 
+@pytest.mark.slow
 def test_freq_step_envelope_torus():
     """The torus transient obeys the same closed-form bound (λ₂ of the
     3-D torus Laplacian sets the decay)."""
@@ -215,6 +218,7 @@ def test_freq_step_envelope_torus():
     assert ok, f"torus transient escaped the envelope by {-margin}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("topo_fn,kp,scale", [
     (lambda: fully_connected(8), 2e-7, 2.0),
     (lambda: torus3d(4), 5e-7, 0.5),

@@ -2,7 +2,7 @@
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config
-from repro.configs.base import SHAPES, applicable, skip_reason
+from repro.configs.base import SHAPES, applicable
 
 # name -> (expected total params, expected active params), billions
 PUBLISHED = {

@@ -1,7 +1,6 @@
 """Property tests for the bit-faithful DDC arithmetic (paper §4.2)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypcompat import given, settings, st
 
 from repro.core import ddc

@@ -1,11 +1,9 @@
 """Unit + property tests for the abstract frame model simulation."""
 import numpy as np
-import pytest
 from hypcompat import given, settings, st
 
 from repro.core import (ControllerConfig, SimConfig, fully_connected, hourglass,
-                        cube, ring, random_regular, simulate, make_links)
-from repro.core.frame_model import OMEGA_NOM
+                        random_regular, simulate, make_links)
 
 
 def run(topo, ppm, ctrl=None, **cfg_kw):

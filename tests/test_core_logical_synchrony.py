@@ -1,7 +1,6 @@
 """Logical synchrony validation: frame-level oracle, latency, reframing,
 and AOT schedules (the consequences in paper §1.4)."""
 import numpy as np
-import pytest
 from hypcompat import given, settings, st
 
 from repro.core import (ControllerConfig, SimConfig, fully_connected, ring,

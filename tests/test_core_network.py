@@ -1,6 +1,5 @@
 """BittideNetwork facade + AOT schedule property tests."""
 import numpy as np
-import pytest
 from hypcompat import given, settings, st
 
 from repro.core import (BittideNetwork, ControllerConfig, OscillatorSpec,

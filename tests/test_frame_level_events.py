@@ -177,7 +177,7 @@ def test_freq_step_event_changes_rates():
 def test_frame_level_rejects_abstract_only_events():
     topo = ring(3)
     links = make_links(topo, cable_m=2.0)
-    with pytest.raises(ValueError, match="LatencyStep and FreqStep"):
+    with pytest.raises(ValueError, match="LatencyStep, FreqStep and Reframe"):
         fl.simulate_frames(topo, links, np.zeros(3), 0.5,
                            events=[NodeHoldover(t=0.1, nodes=(0,))])
 

@@ -45,6 +45,7 @@ def _parity_ppm(topo):
     return np.random.default_rng(7).uniform(-8, 8, topo.num_nodes)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("engine", ["fused", "tiled", "per-step"])
 @pytest.mark.parametrize("topo", PARITY_TOPOS, ids=lambda t: t.name)
 def test_parity_matrix_vs_segment_sum(topo, engine):

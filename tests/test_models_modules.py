@@ -82,7 +82,7 @@ def test_ssd_chunked_matches_naive_recurrence(seed, chunk):
 
 def test_moe_matches_explicit_loop():
     """With ample capacity, grouped one-hot dispatch == per-token loop."""
-    from repro.models.moe import moe_apply, moe_defs, padded_experts
+    from repro.models.moe import moe_apply, moe_defs
     cfg = get_config("qwen2-moe-a2.7b").reduced()
     cfg = cfg.__class__(**{**cfg.__dict__, "moe_capacity_factor": 8.0,
                            "num_shared_experts": 0})

@@ -4,13 +4,11 @@ jax fixes its device count at first init, so these run in subprocesses
 with XLA_FLAGS=--xla_force_host_platform_device_count=8 — the same
 mechanism the production dry-run uses at 512.
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

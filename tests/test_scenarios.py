@@ -15,14 +15,13 @@ These tests pin:
   * event physics: Table-2 logical-latency shifts, FreqStep consensus
     moves, drift ramps, holdover freezes, link drop/restore.
 """
-import dataclasses
 
 import numpy as np
 import pytest
 
 from repro.core import (ControllerConfig, SimConfig, fully_connected,
-                        hourglass, make_links, simulate, simulate_ensemble)
-from repro.core.frame_model import _jitted_run, _jitted_run_ensemble
+                        hourglass, make_links, simulate)
+from repro.core.frame_model import _jitted_run
 from repro.kernels import simulate_fused
 from repro.kernels.ops import _fused_engine, _perstep_engine
 from repro.scenarios import (DriftRamp, FreqStep, LatencyStep, LinkDrop,
@@ -97,6 +96,7 @@ def _swap_scenario():
                     name="fc8-swap")
 
 
+@pytest.mark.slow
 def test_latency_step_parity_matrix_all_engines():
     """Acceptance: the FC8 cable-swap scenario on fused/tiled/per-step
     matches the segment-sum reference at EVERY record point to <1e-6 ppm,

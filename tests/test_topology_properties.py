@@ -6,12 +6,10 @@ Runs under real hypothesis when installed, else the deterministic
 import warnings
 
 import numpy as np
-import pytest
 from hypcompat import given, settings, st
 
-from repro.core import (Topology, cube, fully_connected, hourglass,
+from repro.core import (cube, fully_connected, hourglass,
                         make_links, mesh2d, random_regular, torus3d)
-from repro.core.frame_model import OMEGA_NOM
 from repro.kernels import TILE, densify, simulate_fused
 from repro.kernels.ops import MAX_EXACT_CLASSES
 
