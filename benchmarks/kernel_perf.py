@@ -392,6 +392,56 @@ def bench_reframe_overhead():
             f"pass_one_compile={'PASS' if splice_compiles == 0 else 'FAIL'}")
 
 
+def bench_chaos_campaign():
+    """Chaos-campaign lane: a 64-draw randomized fault-injection campaign
+    (per-draw FreqStep/DriftRamp/LatencyStep magnitudes, victims, and
+    cable lengths) end-to-end on the fused engine: seeded samplers ->
+    one-compile batched scenario replay -> per-draw envelope/overflow
+    triage.
+
+    draws_per_s is whole-campaign throughput including triage.  Hard
+    gate: pass_one_compile — a RESEEDED campaign (all-new magnitudes,
+    victims, cable draws) against a warm cache must add ZERO compile
+    entries, because every sampled parameter is traced data, never a
+    shape.
+    """
+    from repro.scenarios import (ChaosCampaign, DriftRampSampler,
+                                 FreqStepSampler, LatencyStepSampler,
+                                 edges_between)
+
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ControllerConfig(kp=2e-8)
+    cfg = SimConfig(dt=1e-3, steps=480, record_every=24)
+    B = 64
+
+    def camp(seed):
+        return ChaosCampaign(
+            topo=topo, ctrl=ctrl,
+            samplers=(FreqStepSampler(t=0.072, ppm_range=(0.05, 2.0)),
+                      DriftRampSampler(t=0.168, t_end=0.288,
+                                       rate_range=(0.05, 2.0)),
+                      LatencyStepSampler(t=0.24,
+                                         edges=edges_between(topo, 0, 1),
+                                         cable_range=(5.0, 100.0))),
+            num_draws=B, seed=seed, ppm_range=0.05, links=links, cfg=cfg,
+            engine="fused")
+
+    camp(0).run()                          # warm compile
+    size0 = _fused_engine._cache_size()
+    t0 = time.perf_counter()
+    result = camp(1).run()                 # reseeded: all-new parameters
+    dt = time.perf_counter() - t0
+    compiles = _fused_engine._cache_size() - size0
+    counts = result.counts()
+    return ("kernel_chaos_campaign", dt * 1e6,
+            f"draws={B};draws_per_s={B / dt:.1f};"
+            f"launches={result.result.num_launches};"
+            f"frac_verdict_pass={counts['PASS'] / B:.2f};"
+            f"campaign_compiles={compiles};"
+            f"pass_one_compile={'PASS' if compiles == 0 else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -440,7 +490,7 @@ ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
        bench_fused_vs_per_step, bench_tiled_vs_fused,
        bench_gain_sweep_compile, bench_scenario_replay,
        bench_beta_overhead, bench_reframe_overhead,
-       bench_ensemble_throughput,
+       bench_chaos_campaign, bench_ensemble_throughput,
        bench_ensemble_xla_engine, bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
@@ -448,4 +498,5 @@ ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
 SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
          bench_gain_sweep_compile, bench_scenario_replay,
          bench_beta_overhead, bench_reframe_overhead,
-         bench_ensemble_throughput, bench_ensemble_xla_engine]
+         bench_chaos_campaign, bench_ensemble_throughput,
+         bench_ensemble_xla_engine]

@@ -74,10 +74,11 @@ import numpy as np
 from .frame_model import OMEGA_NOM
 from .topology import Topology
 
-__all__ = ["EnvelopeSpec", "laplacian", "spectral_gap",
+__all__ = ["EnvelopeSpec", "BatchedEnvelope", "laplacian", "spectral_gap",
            "freq_step_envelope", "latency_step_envelope",
-           "check_occupancy_envelope", "default_slack",
-           "reframe_guard_margin"]
+           "freq_step_envelopes", "latency_step_envelopes",
+           "check_occupancy_envelope", "check_occupancy_envelopes",
+           "default_slack", "reframe_guard_margin"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +112,38 @@ class EnvelopeSpec:
         """(T,) envelope |b − b∞| may not exceed, at ``times`` ≥ t0."""
         dt = np.maximum(np.asarray(times, np.float64) - t0, 0.0)
         return self.amp * np.exp(-self.sigma * dt) + slack
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedEnvelope:
+    """Per-draw closed-form envelopes sharing one Laplacian spectrum.
+
+    The chaos-campaign form of :class:`EnvelopeSpec`: B draws see the
+    same topology (so λ₂/λ_max are computed once) but each has its own
+    disturbance magnitude and gain — ``db_inf`` is (B, N), ``amp`` /
+    ``sigma`` / ``a_max`` are (B,).  The per-draw claim is identical:
+
+        |b_i(t) − (b_i(t0⁻) + db_inf[d, i])|
+            ≤ amp[d]·exp(−sigma[d]·(t−t0)) + slack[d]
+    """
+
+    db_inf: np.ndarray   # (B, N) frames
+    amp: np.ndarray      # (B,) frames
+    sigma: np.ndarray    # (B,) 1/s
+    lam2: float
+    lam_max: float
+    a_max: np.ndarray    # (B,)
+
+    @property
+    def num_draws(self) -> int:
+        return self.db_inf.shape[0]
+
+    def draw(self, b: int) -> EnvelopeSpec:
+        """Draw ``b``'s envelope as a plain :class:`EnvelopeSpec`."""
+        return EnvelopeSpec(
+            db_inf=self.db_inf[b].copy(), amp=float(self.amp[b]),
+            sigma=float(self.sigma[b]), lam2=self.lam2,
+            lam_max=self.lam_max, a_max=float(self.a_max[b]))
 
 
 def laplacian(topo: Topology, edge_w=None) -> np.ndarray:
@@ -222,6 +255,83 @@ def latency_step_envelope(topo: Topology, kp: float, dt: float,
         sigma=sigma, lam2=lam2, lam_max=lam_max, a_max=a_max)
 
 
+def _rates_batched(topo: Topology, kp, dt: float, omega_nom: float,
+                   edge_w, b: int):
+    """Per-draw (kp, λ₂, λ_max, a_max, sigma) with one spectrum solve."""
+    lam2, lam_max = spectral_gap(laplacian(topo, edge_w))
+    kp = np.broadcast_to(
+        np.asarray(kp, np.float64).reshape(-1), (b,)).copy()
+    dt_frames = omega_nom * dt
+    a_max = kp * dt_frames * lam_max
+    if np.any(a_max <= 0.0) or np.any(a_max > 1.0):
+        raise ValueError(
+            f"Δ·kp·λ_max outside (0, 1] for some draw (range "
+            f"[{a_max.min():.3g}, {a_max.max():.3g}]): the closed-form "
+            "envelope needs every per-period contraction in this regime")
+    sigma = kp * dt_frames * lam2 / dt
+    return kp, lam2, lam_max, a_max, sigma
+
+
+def freq_step_envelopes(topo: Topology, kp, dt: float, delta_ppm,
+                        omega_nom: float = OMEGA_NOM,
+                        edge_w=None) -> BatchedEnvelope:
+    """Per-draw FreqStep envelopes (the batched chaos-campaign oracle).
+
+    Args:
+      kp: proportional gain — scalar or (B,) per-draw.
+      delta_ppm: (B, N) per-draw ν_u step in ppm, zeros off the victims
+        (each draw's own magnitude AND victim set).
+
+    Same math as :func:`freq_step_envelope` per row; the Laplacian
+    spectrum is solved once for the batch.
+    """
+    dnu = np.atleast_2d(np.asarray(delta_ppm, np.float64)) * 1e-6
+    if dnu.shape[1] != topo.num_nodes:
+        raise ValueError(f"delta_ppm must be (B, {topo.num_nodes}), got "
+                         f"{np.shape(delta_ppm)}")
+    b = dnu.shape[0]
+    kp, lam2, lam_max, a_max, sigma = _rates_batched(
+        topo, kp, dt, omega_nom, edge_w, b)
+    dperp = dnu - dnu.mean(axis=1, keepdims=True)
+    return BatchedEnvelope(
+        db_inf=-dperp / kp[:, None],
+        amp=np.linalg.norm(dperp, axis=1) / kp,
+        sigma=sigma, lam2=lam2, lam_max=lam_max, a_max=a_max)
+
+
+def latency_step_envelopes(topo: Topology, kp, dt: float,
+                           edges: Sequence[int], dlat_s, nu_bound,
+                           omega_nom: float = OMEGA_NOM,
+                           edge_w=None) -> BatchedEnvelope:
+    """Per-draw λeff-preserving LatencyStep envelopes.
+
+    Args:
+      edges: swapped directed-edge ids, shared across draws.
+      dlat_s: (B, len(edges)) per-draw latency change in seconds
+        (sign-free; the bound uses magnitudes).
+      nu_bound: scalar or (B,) bound on |ν| of the senders at the step.
+
+    Same math as :func:`latency_step_envelope` per row.
+    """
+    edges = list(edges)
+    dl = np.atleast_2d(np.asarray(dlat_s, np.float64))
+    b = dl.shape[0]
+    dl = np.broadcast_to(dl, (b, len(edges)))
+    kp, lam2, lam_max, a_max, sigma = _rates_batched(
+        topo, kp, dt, omega_nom, edge_w, b)
+    nub = np.broadcast_to(np.asarray(nu_bound, np.float64).reshape(-1), (b,))
+    w = (np.ones(topo.num_edges, np.float64) if edge_w is None
+         else np.asarray(edge_w, np.float64))
+    dst = np.asarray(topo.dst)
+    dh = np.zeros((b, topo.num_nodes), np.float64)
+    for k, e in enumerate(edges):
+        dh[:, dst[e]] += w[e] * nub * np.abs(dl[:, k]) * omega_nom
+    return BatchedEnvelope(
+        db_inf=np.zeros((b, topo.num_nodes)),
+        amp=2.0 * np.linalg.norm(dh, axis=1),
+        sigma=sigma, lam2=lam2, lam_max=lam_max, a_max=a_max)
+
+
 def default_slack(env: EnvelopeSpec, nu_bound: float, lat_frames_max: float,
                   dt: float, record_every: int,
                   omega_nom: float = OMEGA_NOM) -> float:
@@ -300,4 +410,46 @@ def check_occupancy_envelope(times, beta, t0: float, env: EnvelopeSpec,
     dev = np.abs(beta[post] - (np.asarray(b_pre) + env.db_inf)[None, :])
     bound = env.bound(times[post], t0, slack)
     margin = float((bound[:, None] - dev).min())
+    return margin >= 0.0, margin
+
+
+def check_occupancy_envelopes(times, beta, t0: float, env: BatchedEnvelope,
+                              slack, b_pre: Optional[np.ndarray] = None):
+    """Per-draw form of :func:`check_occupancy_envelope`.
+
+    Args:
+      times: (T,) record times in seconds.
+      beta: (B, T, N) per-draw per-node net occupancy telemetry (frames).
+      t0: event time (shared — campaign events are simultaneous).
+      env: per-draw envelopes.
+      slack: scalar or (B,) additive slack in frames.
+      b_pre: (B, N) converged pre-event occupancy; default: the last
+        record strictly before t0, per draw.
+
+    Returns:
+      (ok (B,) bool, margin (B,)) — draw d passes iff its transient stays
+      inside its own envelope at every post-event record.
+    """
+    times = np.asarray(times, np.float64)
+    beta = np.asarray(beta, np.float64)
+    if beta.ndim == 2:
+        beta = beta[None]
+    b = beta.shape[0]
+    if env.num_draws != b:
+        raise ValueError(f"envelope batch {env.num_draws} != beta batch {b}")
+    if b_pre is None:
+        pre = np.nonzero(times < t0)[0]
+        if len(pre) == 0:
+            raise ValueError("no record before t0 to baseline against; "
+                             "pass b_pre explicitly")
+        b_pre = beta[:, pre[-1]]
+    b_pre = np.atleast_2d(np.asarray(b_pre, np.float64))
+    post = times >= t0
+    dtm = np.maximum(times[post] - t0, 0.0)
+    slack_b = np.broadcast_to(np.asarray(slack, np.float64).reshape(-1),
+                              (b,))
+    dev = np.abs(beta[:, post] - (b_pre + env.db_inf)[:, None, :])
+    bound = (env.amp[:, None] * np.exp(-env.sigma[:, None] * dtm[None, :])
+             + slack_b[:, None])
+    margin = (bound - dev.max(axis=2)).min(axis=1)
     return margin >= 0.0, margin

@@ -321,19 +321,24 @@ def _run_ensemble_core(src, dst, lat_frames, lam_eff, nu_u, dt_frames, inner,
     ``lat_frames`` / ``lam_eff`` are (B, E) per-draw link parameters
     (cable-length distributions; identical rows when shared), and
     ``psi0``/``nu0``/``c0`` per-draw initial state for segment chaining.
-    ``edge_w`` and ``ctrl_mask`` are shared across the batch (scenario
-    events hit every draw at the same time).
+    ``edge_w`` and ``ctrl_mask`` are shared (E,) / (N,) rows by default
+    (scenario events hit every draw at the same time); chaos campaigns
+    pass per-draw (B, E) / (B, N) rows — each draw its own dropped links
+    and holdover victims.
     """
 
     def one(lat_row, lam_row, nu_u_row, key, kp_row, boff_row, psi0_row,
-            nu0_row, c0_row):
+            nu0_row, c0_row, w_row, m_row):
         return _run_core(src, dst, lat_row, lam_row, nu_u_row, dt_frames,
                          inner, kp_row, boff_row, noise_ppm, key, psi0_row,
-                         nu0_row, c0_row, edge_w, ctrl_mask, ctrl,
+                         nu0_row, c0_row, w_row, m_row, ctrl,
                          num_nodes, outer, quantize_beta, record_beta)
 
-    return jax.vmap(one)(lat_frames, lam_eff, nu_u, noise_keys, kp, beta_off,
-                         psi0, nu0, c0)
+    w_axis = 0 if edge_w.ndim == 2 else None
+    m_axis = 0 if ctrl_mask.ndim == 2 else None
+    return jax.vmap(one, in_axes=(0,) * 9 + (w_axis, m_axis))(
+        lat_frames, lam_eff, nu_u, noise_keys, kp, beta_off,
+        psi0, nu0, c0, edge_w, ctrl_mask)
 
 
 @functools.lru_cache(maxsize=None)
@@ -370,16 +375,27 @@ def _resolve_init(init, nu_default, num_nodes: int, ctrl: ControllerConfig):
             {k: jnp.asarray(v, jnp.float32) for k, v in c_state.items()})
 
 
-def _edge_node_weights(edge_w, ctrl_mask, num_edges: int, num_nodes: int):
-    """Normalize the (traced) link-drop weights and controller mask."""
+def _edge_node_weights(edge_w, ctrl_mask, num_edges: int, num_nodes: int,
+                       num_draws: Optional[int] = None):
+    """Normalize the (traced) link-drop weights and controller mask.
+
+    Shared (E,) / (N,) rows always pass; with ``num_draws`` (ensemble
+    callers) per-draw (B, E) / (B, N) rows are accepted too — the chaos
+    campaigns' per-draw link-drop and holdover victims.
+    """
     w = (jnp.ones((num_edges,), jnp.float32) if edge_w is None
          else jnp.asarray(edge_w, jnp.float32))
     m = (jnp.ones((num_nodes,), jnp.float32) if ctrl_mask is None
          else jnp.asarray(ctrl_mask, jnp.float32))
-    if w.shape != (num_edges,):
-        raise ValueError(f"edge_w must be ({num_edges},), got {w.shape}")
-    if m.shape != (num_nodes,):
-        raise ValueError(f"ctrl_mask must be ({num_nodes},), got {m.shape}")
+    w_shapes = [(num_edges,)] + (
+        [(num_draws, num_edges)] if num_draws else [])
+    m_shapes = [(num_nodes,)] + (
+        [(num_draws, num_nodes)] if num_draws else [])
+    if w.shape not in w_shapes:
+        raise ValueError(f"edge_w must be one of {w_shapes}, got {w.shape}")
+    if m.shape not in m_shapes:
+        raise ValueError(f"ctrl_mask must be one of {m_shapes}, "
+                         f"got {m.shape}")
     return w, m
 
 
@@ -525,8 +541,11 @@ def simulate_ensemble(
       ppm_u: (B, N) unadjusted oscillator offsets in ppm, one row per draw.
       init: optional chained state — ``(psi, nu, c_state)`` with (B, N)
         leaves or a prior EnsembleResult (segment chaining).
-      edge_w: optional (E,) error weights shared across draws (0 = dropped
-        link); ctrl_mask: optional (N,) controller-enable mask (holdover).
+      edge_w: optional (E,) shared or (B, E) per-draw error weights
+        (0 = dropped link); ctrl_mask: optional (N,) shared or (B, N)
+        per-draw controller-enable mask (holdover).  Per-draw rows are
+        the chaos campaigns' randomized victims — traced data, one
+        compile per batch shape.
 
     Returns:
       EnsembleResult with leading batch axes; draw b reproduces
@@ -550,7 +569,7 @@ def simulate_ensemble(
     nu_u = jnp.asarray(ppm_u * 1e-6, jnp.float32)
     psi0, nu0, c0 = _resolve_init(init, nu_u, topo.num_nodes, ctrl)
     w, m = _edge_node_weights(edge_w, ctrl_mask, topo.num_edges,
-                              topo.num_nodes)
+                              topo.num_nodes, num_draws=b)
 
     (psi, nu, c_state), freq, beta = _jitted_run_ensemble()(
         *args, nu_u,

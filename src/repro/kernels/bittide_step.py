@@ -60,8 +60,10 @@ physical link parameters and the controller topology itself: the per-class
 latencies are a traced (B, C) input (per-draw cable-length distributions),
 the per-node λeff fold ``lamsum`` is a traced (B, N) input (per-draw /
 per-segment logical-latency constants), and a per-node controller-enable
-mask ``ctrl_mask`` (1, N) gates the frequency update — a masked node's ν
-is *held* at its previous value (clock holdover) instead of recomputed.
+mask ``ctrl_mask`` ((1, N) shared or (B, N) per-draw — chaos campaigns
+give each draw its own holdover victims) gates the frequency update — a
+masked node's ν is *held* at its previous value (clock holdover) instead
+of recomputed.
 None of these key a compile, so a multi-event scenario replays ONE
 compiled kernel across all of its piecewise-constant segments.
 
@@ -289,7 +291,7 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     kp = kp_ref[...]            # (B, 1) traced per-draw gains
     beta_off = boff_ref[...]
     lat = lat_ref[...]          # (B, C) traced per-draw class latencies
-    enabled = mask_ref[...] > 0.5   # (1, N) controller-enable mask
+    enabled = mask_ref[...] > 0.5   # (1, N)|(B, N) controller-enable mask
 
     def period(_, carry):
         psi, nu = carry
@@ -424,14 +426,17 @@ def _lamsum_rows(lamsum, b: int, n: int):
     return ls
 
 
-def _mask_row(ctrl_mask, n: int):
-    """Normalize the controller-enable mask to a (1, N) float32 row."""
+def _mask_row(ctrl_mask, n: int, b: int = 1):
+    """Normalize the controller-enable mask to (1, N) shared or (B, N)
+    per-draw float32 rows (each draw its own holdover victims)."""
     if ctrl_mask is None:
         return jnp.ones((1, n), jnp.float32)
-    mask = jnp.asarray(ctrl_mask, jnp.float32).reshape(1, -1)
-    if mask.shape != (1, n):
-        raise ValueError(f"ctrl_mask must be ({n},), got "
-                         f"{jnp.shape(ctrl_mask)}")
+    mask = jnp.asarray(ctrl_mask, jnp.float32)
+    if mask.ndim == 1:
+        mask = mask.reshape(1, -1)
+    if mask.shape not in ((1, n), (b, n)):
+        raise ValueError(f"ctrl_mask must be ({n},), (1, {n}) or "
+                         f"({b}, {n}), got {jnp.shape(ctrl_mask)}")
     return mask
 
 
@@ -465,8 +470,9 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       dt_frames: static integration constant.
       num_records: telemetry records to emit (grid length).
       record_every: control periods fused per record (in-kernel loop).
-      ctrl_mask: optional (N,) controller-enable mask — nodes with mask 0
-        hold their previous ν (clock holdover).  Traced; None = all on.
+      ctrl_mask: optional (N,) shared or (B, N) per-draw controller-enable
+        mask — nodes with mask 0 hold their previous ν (clock holdover).
+        Traced; None = all on.
       record_beta: also decimate the per-node net occupancy (frames) to
         every record — a fourth output, computed in-kernel from the
         post-update state against the resident adjacency.  Compile-time
@@ -493,6 +499,7 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         record_every=int(record_every), num_classes=int(c),
         record_beta=bool(record_beta))
 
+    mask = _mask_row(ctrl_mask, n, b)
     full2 = lambda t: (0, 0)
     out_specs = [
         pl.BlockSpec((b, n), full2),                     # psi final
@@ -519,7 +526,7 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((b, n), full2),                 # nu_u
             pl.BlockSpec((b, 1), full2),                 # kp per draw
             pl.BlockSpec((b, 1), full2),                 # beta_off per draw
-            pl.BlockSpec((1, n), full2),                 # ctrl mask
+            pl.BlockSpec((mask.shape[0], n), full2),     # ctrl mask
             pl.BlockSpec((1, n), full2),                 # deg
             pl.BlockSpec((b, n), full2),                 # lamsum per draw
         ],
@@ -533,7 +540,7 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
       psi.astype(jnp.float32), nu.astype(jnp.float32),
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
+      _gain_col(beta_off, b, "beta_off"), mask,
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
     if record_beta:
         return out[0], out[1], out[2], out[3]
@@ -669,6 +676,7 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         _tiled_kernel, dt_frames=float(dt_frames), tile_j=int(tile_j),
         num_classes=int(c), record_beta=bool(record_beta))
 
+    mask = _mask_row(ctrl_mask, n, b)
     full3 = lambda t, p, j: (0, 0)
     out_specs = [
         pl.BlockSpec((b, n), full3),                     # psi final
@@ -699,7 +707,7 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pl.BlockSpec((b, n), full3),                   # nu_u
             pl.BlockSpec((b, 1), full3),                   # kp per draw
             pl.BlockSpec((b, 1), full3),                   # beta_off
-            pl.BlockSpec((1, n), full3),                   # ctrl mask
+            pl.BlockSpec((mask.shape[0], n), full3),       # ctrl mask
             pl.BlockSpec((1, n), full3),                   # deg
             pl.BlockSpec((b, n), full3),                   # lamsum per draw
         ],
@@ -714,7 +722,7 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
       psi.astype(jnp.float32), nu.astype(jnp.float32),
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"), _mask_row(ctrl_mask, n),
+      _gain_col(beta_off, b, "beta_off"), mask,
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
     if record_beta:
         return out[0], out[1], out[2], out[3]

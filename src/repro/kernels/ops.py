@@ -273,7 +273,8 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
       psi, nu, nu_u: (B_pad, N_pad) float32 state (ψ frames, ν relative).
       kp, beta_off: (B_pad,) per-draw controller gains (gain sweeps share
         one executable).
-      ctrl_mask: (N_pad,) controller enables (0 = clock holdover).
+      ctrl_mask: (N_pad,) shared or (B_pad, N_pad) per-draw controller
+        enables (0 = clock holdover).
       a, lam_eff: (C, N_pad, N_pad) adjacency / λeff stacks (frames).
       lamsum: (B_pad, N_pad) per-node λeff fold Σ_{e→i} w_e·λeff_e.
       lat: (B_pad, C) per-draw class latencies in frames.
@@ -496,9 +497,10 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         ``DenseResult`` with ``.nu``) seeding the state — the scenario
         runner's segment-chaining hook.  Default: cold start (ψ = 0,
         ν = ν_u).
-      ctrl_mask: optional (N,) controller-enable mask; masked-out nodes
-        hold their previous ν (clock holdover).  Traced — toggling it
-        never recompiles.
+      ctrl_mask: optional (N,) shared or (B, N) per-draw controller-enable
+        mask; masked-out nodes hold their previous ν (clock holdover).
+        Traced — toggling it never recompiles (per-draw chaos campaigns
+        give each draw its own holdover victims).
       lat_classes: optional precomputed latency-class vector (frames)
         pinning the dense class axis (scenario segments share one global
         class set so every segment hits one compiled kernel).
@@ -576,9 +578,20 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                     f"{arr.shape}")
         psi0 = _pad_state(init_psi, b_pad, n_pad)
         nu0 = _pad_state(init_nu, b_pad, n_pad)
-    mask_pad = np.ones((n_pad,), np.float32)
-    if ctrl_mask is not None:
-        mask_pad[:n] = np.asarray(ctrl_mask, np.float32)
+    mask_np = (None if ctrl_mask is None
+               else np.asarray(ctrl_mask, np.float32))
+    if mask_np is not None and mask_np.ndim == 2:
+        # Per-draw holdover victims (chaos campaigns): padded draws and
+        # padded nodes stay enabled like the shared row's padding.
+        if mask_np.shape != (b, n):
+            raise ValueError(f"per-draw ctrl_mask must be ({b}, {n}), got "
+                             f"{mask_np.shape}")
+        mask_pad = np.ones((b_pad, n_pad), np.float32)
+        mask_pad[:b, :n] = mask_np
+    else:
+        mask_pad = np.ones((n_pad,), np.float32)
+        if mask_np is not None:
+            mask_pad[:n] = mask_np
     interp = _auto_interpret(interpret)
 
     if use_ref:
@@ -608,6 +621,8 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                 "kernel", stacklevel=2)
         freqs, psis, nus, betas = [], [], [], []
         mask_j = jnp.asarray(mask_pad)
+        mask_row = (lambda bi: mask_j[bi]) if mask_j.ndim == 2 \
+            else (lambda bi: mask_j)
         for bi in range(b):
             if beta0_batched:
                 _, lam_bi, _, _ = densify(
@@ -617,7 +632,7 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
             else:
                 lam_bi = lam_eff
             psi_f, nu_f, rec, brec = _perstep_engine(
-                psi0[bi], nu0[bi], nu_u[bi], mask_j, a, lam_bi,
+                psi0[bi], nu0[bi], nu_u[bi], mask_row(bi), a, lam_bi,
                 jnp.asarray(latv[bi]), float(kp[bi]), float(beta_off[bi]),
                 float(omega_nom * dt), int(num_records), int(record_every),
                 interp, bool(use_ref), bool(record_beta))

@@ -88,8 +88,8 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
       dt_frames: integration constant.
       num_records: telemetry records to emit.
       record_every: control periods per record.
-      ctrl_mask: optional (N,) controller-enable mask (holdover), shared
-        across the batch.
+      ctrl_mask: optional (N,) shared or (B, N) per-draw controller-enable
+        mask (holdover victims per draw in the batched form).
       record_beta: also record the per-node net occupancy
         (:func:`node_occupancy_ref`) of the post-update state at every
         record point — the fused engines' β telemetry contract.
@@ -110,9 +110,11 @@ def bittide_dense_multistep_ref(psi, nu, nu_u, a, lam_eff, lat_frames,
 
         kp, beta_off = per_draw(kp), per_draw(beta_off)
         lat_axis = 0 if jnp.ndim(lat_frames) == 2 else None
+        mask_axis = (0 if ctrl_mask is not None
+                     and jnp.ndim(ctrl_mask) == 2 else None)
         step = jax.vmap(
             bittide_dense_step_ref,
-            in_axes=(0, 0, 0, None, None, lat_axis, 0, 0, None, None))
+            in_axes=(0, 0, 0, None, None, lat_axis, 0, 0, None, mask_axis))
         measure = jax.vmap(node_occupancy_ref,
                            in_axes=(0, 0, None, None, lat_axis))
 

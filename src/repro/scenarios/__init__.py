@@ -16,12 +16,22 @@ This is the layer that reproduces the paper's fiber-insertion experiment
 hardware could not run at scale; the event semantics connect to the
 parameter-step analysis of arXiv:2109.14111 and the occupancy-transient
 bounds of arXiv:2410.05432.
+
+Chaos campaigns (``repro.scenarios.chaos``) lift every event parameter
+to a per-draw axis: one compiled engine runs B distinct randomized fault
+scenarios simultaneously, each draw's β record is checked against its
+own closed-form envelope, and failing draws shrink to standalone repros.
 """
 from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop, LinkRestore,
                      Mark, NodeHoldover, NodeReset, Reframe, Scenario,
                      edges_between)
 from .compiler import CompiledScenario, Segment, compile_scenario
 from .runner import AppliedReframe, ScenarioResult, run_scenario
+from .chaos import (VERDICT_ENVELOPE, VERDICT_OVERFLOW, VERDICT_PASS,
+                    VERDICT_RESCUED, CampaignResult, ChaosCampaign,
+                    DriftRampSampler, FreqStepSampler, HoldoverSampler,
+                    LatencyStepSampler, LinkDropSampler, ShrunkRepro,
+                    triage_result)
 
 __all__ = [
     "Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
@@ -29,4 +39,9 @@ __all__ = [
     "edges_between",
     "CompiledScenario", "Segment", "compile_scenario",
     "AppliedReframe", "ScenarioResult", "run_scenario",
+    "VERDICT_PASS", "VERDICT_ENVELOPE", "VERDICT_OVERFLOW",
+    "VERDICT_RESCUED",
+    "FreqStepSampler", "DriftRampSampler", "LatencyStepSampler",
+    "HoldoverSampler", "LinkDropSampler",
+    "ChaosCampaign", "CampaignResult", "ShrunkRepro", "triage_result",
 ]

@@ -56,6 +56,27 @@ Events carry *times in seconds*; the compiler snaps them to telemetry
 record boundaries (``cfg.dt * cfg.record_every``), the granularity at
 which the piecewise-constant lowering operates.
 
+Per-draw (chaos-campaign) parameters
+------------------------------------
+Every physical event accepts *per-draw* parameters so one batched
+(B-draw) simulation can run B distinct randomized fault scenarios —
+the ``repro.scenarios.chaos`` campaign regime:
+
+* magnitudes: ``FreqStep.delta_ppm`` / ``DriftRamp.rate_ppm_per_s`` may
+  be a (B,) array (one step size / slope per draw), and
+  ``LatencyStep.cable_m`` / ``latency_s`` a (B, K) array (one swap value
+  per draw per listed edge);
+* victims: node/edge selections (``nodes`` / ``edges``) may be a
+  sequence of B per-draw tuples — each draw gets its own holdover node
+  or dropped link.
+
+Events stay simultaneous across draws (every draw's segment boundaries
+coincide), which is what keeps a whole campaign on ONE compiled kernel:
+the compiler lowers per-draw parameters to traced (B, ·) arrays, never
+shapes.  ``event.num_draws`` reports the batch (None = shared), and
+``event.draw(b)`` / ``Scenario.draw(b)`` scalarize to a single-draw
+event list — the chaos triage's shrink-to-repro hook.
+
 This module is dependency-free (plain dataclasses + numpy) so the
 frame-level oracle can consume events without import cycles.
 """
@@ -71,11 +92,44 @@ __all__ = ["Mark", "LatencyStep", "FreqStep", "DriftRamp", "NodeHoldover",
            "edges_between"]
 
 
-def _ids(xs) -> Tuple[int, ...]:
-    """Normalize a node/edge selection to a tuple of ints."""
+def _ids(xs) -> Tuple:
+    """Normalize a node/edge selection to a tuple of ints (shared across
+    draws) or a tuple of per-draw tuples (one selection per draw)."""
     if isinstance(xs, (int, np.integer)):
         return (int(xs),)
-    return tuple(int(x) for x in xs)
+    rows = list(xs)
+    if rows and not isinstance(rows[0], (int, np.integer)):
+        return tuple(tuple(int(x) for x in row) for row in rows)
+    return tuple(int(x) for x in rows)
+
+
+def _sel_draws(sel: Tuple) -> Optional[int]:
+    """Batch size of a per-draw selection (None when shared)."""
+    if sel and isinstance(sel[0], tuple):
+        return len(sel)
+    return None
+
+
+def _sel_row(sel: Tuple, b: int) -> Tuple[int, ...]:
+    """Draw ``b``'s selection (identity for shared selections)."""
+    return sel[b] if _sel_draws(sel) is not None else sel
+
+
+def _mag_draws(value, per_draw_ndim: int = 1) -> Optional[int]:
+    """Batch size of a per-draw magnitude (None when shared)."""
+    if value is None:
+        return None
+    arr = np.asarray(value)
+    return int(arr.shape[0]) if arr.ndim == per_draw_ndim else None
+
+
+def _one_draws(name: str, *batches: Optional[int]) -> Optional[int]:
+    """Merge per-field batch sizes, requiring consistency."""
+    sizes = {b for b in batches if b is not None}
+    if len(sizes) > 1:
+        raise ValueError(
+            f"{name}: per-draw fields disagree on the batch size: {sizes}")
+    return sizes.pop() if sizes else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,8 +146,11 @@ class LatencyStep:
     Exactly one of ``cable_m`` (meters; converted with the paper's fiber
     group velocity + transceiver pipeline) or ``latency_s`` (seconds) must
     be given; a scalar applies to every listed edge, an array gives one
-    value per listed edge.  Remember bittide links are bidirectional —
-    a physical swap steps *both* directed edges (``edges_between``).
+    value per listed edge, and a (B, len(edges)) array one value per draw
+    per edge (chaos campaigns — victim edges stay shared so the dense
+    engines keep a per-draw class table).  Remember bittide links are
+    bidirectional — a physical swap steps *both* directed edges
+    (``edges_between``).
     """
     t: float
     edges: Tuple[int, ...]
@@ -103,30 +160,70 @@ class LatencyStep:
 
     def __post_init__(self):
         object.__setattr__(self, "edges", _ids(self.edges))
+        if _sel_draws(self.edges) is not None:
+            raise ValueError(
+                "LatencyStep victim edges are shared across draws; use a "
+                "(B, len(edges)) cable_m/latency_s for per-draw magnitudes")
         if (self.cable_m is None) == (self.latency_s is None):
             raise ValueError(
                 "LatencyStep takes exactly one of cable_m or latency_s")
 
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _one_draws("LatencyStep", _mag_draws(self.cable_m, 2),
+                          _mag_draws(self.latency_s, 2))
+
+    def draw(self, b: int) -> "LatencyStep":
+        if self.num_draws is None:
+            return self
+        pick = (lambda v: None if v is None
+                else np.asarray(v, np.float64)[b].copy())
+        return LatencyStep(t=self.t, edges=self.edges,
+                           cable_m=pick(self.cable_m),
+                           latency_s=pick(self.latency_s),
+                           reestablish=self.reestablish)
+
     def new_latency_s(self, omega_nom: float, velocity: float,
                       pipe_frames: float) -> np.ndarray:
-        """(len(edges),) one-way latency after the swap."""
+        """(len(edges),) — or per-draw (B, len(edges)) — latency after
+        the swap."""
         if self.latency_s is not None:
             lat = np.asarray(self.latency_s, np.float64)
         else:
             cable = np.asarray(self.cable_m, np.float64)
             lat = cable / velocity + pipe_frames / omega_nom
-        return np.broadcast_to(lat, (len(self.edges),)).astype(np.float64)
+        shape = ((lat.shape[0], len(self.edges)) if lat.ndim == 2
+                 else (len(self.edges),))
+        return np.broadcast_to(lat, shape).astype(np.float64)
 
 
 @dataclasses.dataclass(frozen=True)
 class FreqStep:
-    """Step the unadjusted frequency of ``nodes`` by ``delta_ppm``."""
+    """Step the unadjusted frequency of ``nodes`` by ``delta_ppm``.
+
+    ``delta_ppm`` may be a (B,) array and/or ``nodes`` a sequence of B
+    per-draw tuples for chaos campaigns (per-draw magnitudes/victims).
+    """
     t: float
     nodes: Tuple[int, ...]
-    delta_ppm: float
+    delta_ppm: object
 
     def __post_init__(self):
         object.__setattr__(self, "nodes", _ids(self.nodes))
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _one_draws("FreqStep", _sel_draws(self.nodes),
+                          _mag_draws(self.delta_ppm))
+
+    def draw(self, b: int) -> "FreqStep":
+        if self.num_draws is None:
+            return self
+        delta = self.delta_ppm
+        if _mag_draws(delta) is not None:
+            delta = float(np.asarray(delta, np.float64)[b])
+        return FreqStep(t=self.t, nodes=_sel_row(self.nodes, b),
+                        delta_ppm=delta)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,47 +232,100 @@ class DriftRamp:
 
     From ``t`` to ``t_end`` the nodes' ν_u drifts at ``rate_ppm_per_s``;
     the compiler discretizes the ramp to one constant step per telemetry
-    record (total drift = rate · (t_end − t)).
+    record (total drift = rate · (t_end − t)).  ``rate_ppm_per_s`` may be
+    a (B,) array and/or ``nodes`` a sequence of B per-draw tuples for
+    chaos campaigns.
     """
     t: float
     t_end: float
     nodes: Tuple[int, ...]
-    rate_ppm_per_s: float
+    rate_ppm_per_s: object
 
     def __post_init__(self):
         object.__setattr__(self, "nodes", _ids(self.nodes))
         if self.t_end <= self.t:
             raise ValueError("DriftRamp needs t_end > t")
 
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _one_draws("DriftRamp", _sel_draws(self.nodes),
+                          _mag_draws(self.rate_ppm_per_s))
+
+    def draw(self, b: int) -> "DriftRamp":
+        if self.num_draws is None:
+            return self
+        rate = self.rate_ppm_per_s
+        if _mag_draws(rate) is not None:
+            rate = float(np.asarray(rate, np.float64)[b])
+        return DriftRamp(t=self.t, t_end=self.t_end,
+                         nodes=_sel_row(self.nodes, b), rate_ppm_per_s=rate)
+
 
 @dataclasses.dataclass(frozen=True)
 class NodeHoldover:
-    """Open the control loop of ``nodes`` (ν and controller state freeze)."""
+    """Open the control loop of ``nodes`` (ν and controller state freeze).
+
+    ``nodes`` may be a sequence of B per-draw tuples (per-draw victims).
+    """
     t: float
     nodes: Tuple[int, ...]
 
     def __post_init__(self):
         object.__setattr__(self, "nodes", _ids(self.nodes))
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _sel_draws(self.nodes)
+
+    def draw(self, b: int) -> "NodeHoldover":
+        if self.num_draws is None:
+            return self
+        return NodeHoldover(t=self.t, nodes=_sel_row(self.nodes, b))
 
 
 @dataclasses.dataclass(frozen=True)
 class NodeReset:
-    """Close the control loop of ``nodes`` again (rejoin after holdover)."""
+    """Close the control loop of ``nodes`` again (rejoin after holdover).
+
+    ``nodes`` may be a sequence of B per-draw tuples (per-draw victims).
+    """
     t: float
     nodes: Tuple[int, ...]
 
     def __post_init__(self):
         object.__setattr__(self, "nodes", _ids(self.nodes))
 
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _sel_draws(self.nodes)
+
+    def draw(self, b: int) -> "NodeReset":
+        if self.num_draws is None:
+            return self
+        return NodeReset(t=self.t, nodes=_sel_row(self.nodes, b))
+
 
 @dataclasses.dataclass(frozen=True)
 class LinkDrop:
-    """Take directed ``edges`` down: weight 0 in the error aggregation."""
+    """Take directed ``edges`` down: weight 0 in the error aggregation.
+
+    ``edges`` may be a sequence of B per-draw tuples (per-draw victims —
+    segment-sum engine only; the dense adjacency stacks are shared).
+    """
     t: float
     edges: Tuple[int, ...]
 
     def __post_init__(self):
         object.__setattr__(self, "edges", _ids(self.edges))
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _sel_draws(self.edges)
+
+    def draw(self, b: int) -> "LinkDrop":
+        if self.num_draws is None:
+            return self
+        return LinkDrop(t=self.t, edges=_sel_row(self.edges, b))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +335,8 @@ class LinkRestore:
     ``reestablish=True`` (default) re-initializes each restored elastic
     buffer at its β0 setpoint, like the hardware's link bring-up; False
     resumes with the occupancy the (virtual) DDC drifted to meanwhile.
+    ``edges`` may be a sequence of B per-draw tuples (per-draw victims —
+    segment-sum engine only).
     """
     t: float
     edges: Tuple[int, ...]
@@ -192,6 +344,16 @@ class LinkRestore:
 
     def __post_init__(self):
         object.__setattr__(self, "edges", _ids(self.edges))
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        return _sel_draws(self.edges)
+
+    def draw(self, b: int) -> "LinkRestore":
+        if self.num_draws is None:
+            return self
+        return LinkRestore(t=self.t, edges=_sel_row(self.edges, b),
+                           reestablish=self.reestablish)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +430,29 @@ class Scenario:
         for e in self.events:
             t = max(t, getattr(e, "t_end", e.t))
         return t
+
+    @property
+    def num_draws(self) -> Optional[int]:
+        """Per-draw batch size implied by the events (None = shared).
+
+        All per-draw events must agree on B; shared events broadcast.
+        """
+        return _one_draws(
+            f"Scenario {self.name!r}",
+            *[getattr(e, "num_draws", None) for e in self.events])
+
+    def draw(self, b: int) -> "Scenario":
+        """Scalarize every per-draw event to draw ``b``'s parameters.
+
+        The returned single-draw scenario replays draw ``b`` standalone —
+        the chaos campaign's shrink-to-repro export.
+        """
+        nd = self.num_draws
+        if nd is not None and not (0 <= b < nd):
+            raise IndexError(f"draw {b} out of range for {nd} draws")
+        evs = tuple(e.draw(b) if getattr(e, "num_draws", None) is not None
+                    else e for e in self.events)
+        return Scenario(events=evs, name=f"{self.name}[draw {b}]")
 
 
 def edges_between(topo, a: int, b: int) -> Tuple[int, ...]:

@@ -72,6 +72,19 @@ engine continues across every splice: long scenarios whose
 DriftRamp/FreqStep excursions would overflow a 32-deep buffer now run
 indefinitely inside it, at the cost of a per-splice λ rotation recorded
 in ``ScenarioResult.reframes``.
+
+Per-draw chaos batches (``repro.scenarios.chaos``): when the compiled
+scenario carries per-draw event parameters (B distinct FreqStep sizes,
+DriftRamp slopes, LatencyStep Δl, holdover victims …), every lowered
+quantity is threaded as a traced (B, ·) array — (B, N) ν_u/dppm rows,
+(B, N) controller masks, (B, C) column-signature latency classes, (B, E)
+λeff folds — through the SAME compiled engines, so one compile runs B
+distinct randomized fault scenarios simultaneously.  The auto-reframe
+guard then trips and rotates draws INDIVIDUALLY: the per-chunk trigger
+is evaluated per draw, and only tripping rows receive a rotation
+(untripped rows keep their λeff bit-exactly and log a zero shift row).
+Per-draw LinkDrop/LinkRestore victims change the adjacency itself and
+stay segment-sum-only.
 """
 from __future__ import annotations
 
@@ -94,7 +107,7 @@ from repro.core.topology import Topology
 from repro.kernels.bittide_step import TILE, select_engine
 from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
                                _pad_batch, _pad_gain, _perstep_engine,
-                               densify, latency_classes)
+                               latency_classes)
 
 from .compiler import CompiledScenario, compile_scenario
 from .events import Scenario
@@ -234,10 +247,28 @@ def _apply_reestablish(lam_eff, edges, beta0_base, psi, nu, lat_frames,
     Solves ψ_src − ν_src·ω·l + λeff − ψ_dst = β0 against the live state;
     promotes λeff to per-draw (B, E) when the state is batched (each
     draw's clocks re-establish at different phases).
+
+    ``edges`` is a shared edge-id tuple, or — per-draw victims from a
+    chaos campaign — a tuple of B per-row tuples, in which case each
+    draw's rows re-establish independently against its own state.
     """
     psi = np.asarray(psi, np.float64)
     nu = np.asarray(nu, np.float64)
     lam_eff = np.asarray(lam_eff, np.float64)
+    if edges and isinstance(edges[0], tuple):
+        rows = psi.shape[0]
+        if lam_eff.ndim == 1:
+            lam_eff = np.tile(lam_eff, (rows, 1))
+        lat2 = np.broadcast_to(np.asarray(lat_frames, np.float64),
+                               lam_eff.shape)
+        beta2 = np.broadcast_to(np.asarray(beta0_base, np.float64),
+                                lam_eff.shape)
+        for bi, row in enumerate(edges):
+            if row:
+                lam_eff[bi] = _apply_reestablish(
+                    lam_eff[bi], row, beta2[bi], psi[bi], nu[bi], lat2[bi],
+                    topo)
+        return lam_eff
     if psi.ndim == 2 and lam_eff.ndim == 1:
         lam_eff = np.tile(lam_eff, (psi.shape[0], 1))
     idx = list(edges)
@@ -252,7 +283,7 @@ def _apply_reestablish(lam_eff, edges, beta0_base, psi, nu, lat_frames,
 
 def _rotation_shifts(topo: Topology, lam_eff, psi, nu, lat_frames, edge_w,
                      mode: str, target: float, edges=None, explicit=None,
-                     lap_pinv=None):
+                     lap_pinv=None, rows_mask=None):
     """Resolve a pointer rotation against the live state.
 
     Args:
@@ -264,6 +295,9 @@ def _rotation_shifts(topo: Topology, lam_eff, psi, nu, lat_frames, edge_w,
         shifts, or state-computed "per-edge" (independent recentering to
         ``target``) / "graph" (RTT-conserving potential assignment from
         the per-node net occupancy) shifts.
+      rows_mask: optional (B,) bool — rotate only these draws (the
+        auto-reframe guard passes its per-draw trip vector); untripped
+        rows keep their λeff and report zero shift.
 
     Returns ``(lam_eff_new, shift)``.  λeff is promoted to per-draw only
     when the shifts are state-dependent and the state is batched
@@ -287,8 +321,13 @@ def _rotation_shifts(topo: Topology, lam_eff, psi, nu, lat_frames, edge_w,
     nu_rows = nu.reshape(rows, -1)
     lat_rows = np.broadcast_to(np.asarray(lat_frames, np.float64),
                                (rows, e))
+    if rows_mask is not None:
+        rows_mask = np.broadcast_to(
+            np.asarray(rows_mask, bool).reshape(-1), (rows,))
     shifts = np.zeros((rows, e), np.int64)
     for bi in range(rows):
+        if rows_mask is not None and not rows_mask[bi]:
+            continue
         beta = edge_occupancy(topo, psi_rows[bi], nu_rows[bi], lat_rows[bi],
                               lam_rows[bi])
         # The ONE shift-assignment rule (shared with reframe_state);
@@ -319,10 +358,13 @@ class _DenseStacks:
     would double the device footprint at Fig-18 scale for nothing).
     """
 
-    def __init__(self, a: List, lam_dummy, classes: np.ndarray, n_pad: int):
+    def __init__(self, a: List, lam_dummy, classes, n_pad: int,
+                 class_rows=None, inv=None):
         self.a = a
         self.lam_dummy = lam_dummy
-        self.classes = classes
+        self.classes = classes          # (C,) shared class values, or None
+        self.class_rows = class_rows    # (B, C) per-draw values, or None
+        self.inv = inv                  # per-segment (E,) edge→class maps
         self.n_pad = n_pad
         self.num_unique = len({id(x) for x in a})
 
@@ -336,9 +378,20 @@ def _build_dense_stacks(topo: Topology, comp, cfg: SimConfig,
     Fig-18-scale scenario studies pay O(C·N²) per segment for what is
     usually a 2-edge cable swap.  Here segment 0 pays the full scatter
     and each subsequent segment pays O(|changed edges|).
+
+    Under per-draw column-signature latency classes (chaos campaigns) the
+    compiler has already assigned every segment's edges to the global
+    class axis (``comp.seg_inv``); the A scatter is identical — the class
+    *membership* of an edge is shared across draws even when the class
+    *values* differ per draw.
     """
-    classes = np.asarray(comp.lat_classes, np.float64)
-    c = len(classes)
+    per_draw = comp.per_draw_classes
+    if per_draw is not None:
+        classes = None
+        c = per_draw.shape[1]
+    else:
+        classes = np.asarray(comp.lat_classes, np.float64)
+        c = len(classes)
     n_pad = ((topo.num_nodes + tile - 1) // tile) * tile
     dst = np.asarray(topo.dst, np.int64)
     src = np.asarray(topo.src, np.int64)
@@ -347,12 +400,15 @@ def _build_dense_stacks(topo: Topology, comp, cfg: SimConfig,
     # float32 over many segments.
     master = np.zeros((c, n_pad, n_pad), np.float64)
     prev_inv = prev_w = None
-    by_key, out = {}, []
-    for seg in comp.segments:
-        lat_frames = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
-        if lat_frames.ndim == 2:   # guarded earlier: dense needs shared links
-            lat_frames = lat_frames[0]
-        _, inv = latency_classes(lat_frames, lat_classes=classes)
+    by_key, out, inv_list = {}, [], []
+    for si, seg in enumerate(comp.segments):
+        if per_draw is not None:
+            inv = np.asarray(comp.seg_inv[si], np.int64)
+        else:
+            lat_frames = (np.asarray(seg.latency_s, np.float64)
+                          * cfg.omega_nom)
+            _, inv = latency_classes(lat_frames, lat_classes=classes)
+            inv = np.asarray(inv, np.int64)
         w = np.asarray(seg.edge_w, np.float64)
         if prev_inv is None:
             np.add.at(master, (inv, dst, src), w)
@@ -363,12 +419,34 @@ def _build_dense_stacks(topo: Topology, comp, cfg: SimConfig,
                           -prev_w[ch])
                 np.add.at(master, (inv[ch], dst[ch], src[ch]), w[ch])
         prev_inv, prev_w = inv, w
+        inv_list.append(inv)
         key = (inv.tobytes(), w.tobytes())
         if key not in by_key:
             by_key[key] = jax.device_put(master.astype(np.float32))
         out.append(by_key[key])
     lam_dummy = jax.device_put(np.zeros((c, 1, 1), np.float32))
-    return _DenseStacks(out, lam_dummy, classes, n_pad)
+    return _DenseStacks(out, lam_dummy, classes, n_pad,
+                        class_rows=per_draw, inv=inv_list)
+
+
+def _lam_stack(topo: Topology, inv: np.ndarray, lam_eff_row, edge_w,
+               c: int, n_pad: int):
+    """(C, N_pad, N_pad) λeff tensor for one draw on the per-step lane.
+
+    The same per-edge w·λeff scatter ``densify`` performs (float32
+    accumulation included, so shared-class scenarios stay bit-identical
+    to the old densify-based path), but driven by a precomputed global
+    edge→class map — which, under per-draw column-signature classes, is
+    the only form the class assignment exists in.
+    """
+    lam = np.zeros((c, n_pad, n_pad), np.float32)
+    dst = np.asarray(topo.dst, np.int64)
+    src = np.asarray(topo.src, np.int64)
+    w = (np.ones(topo.num_edges, np.float64) if edge_w is None
+         else np.asarray(edge_w, np.float64))
+    np.add.at(lam, (inv, dst, src),
+              np.asarray(lam_eff_row, np.float64) * w)
+    return jnp.asarray(lam)
 
 
 def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
@@ -416,18 +494,13 @@ def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
         # The capability lane consumes the dense λeff tensor directly; its
         # per-period kernel folds lamsum internally from it.  (Rebuilt per
         # segment: λeff is live state under re-establishment events.)
+        inv_seg = stacks.inv[seg_index]
         if beta0.ndim == 2:
-            lam_list = [densify(topo,
-                                LinkParams(latency_s=seg.latency_s,
-                                           beta0=beta0[bi]),
-                                cfg.omega_nom, lat_classes=comp.lat_classes,
-                                edge_w=seg.edge_w)[1] for bi in range(b)]
+            lam_list = [_lam_stack(topo, inv_seg, beta0[bi], seg.edge_w,
+                                   c, n_pad) for bi in range(b)]
         else:
-            lam0 = densify(topo,
-                           LinkParams(latency_s=seg.latency_s,
-                                      beta0=beta0_rows[0]),
-                           cfg.omega_nom, lat_classes=comp.lat_classes,
-                           edge_w=seg.edge_w)[1]
+            lam0 = _lam_stack(topo, inv_seg, beta0_rows[0], seg.edge_w,
+                              c, n_pad)
             lam_list = [lam0] * max(b, 1)
     else:
         lam_list = [stacks.lam_dummy] * max(b, 1)
@@ -436,10 +509,23 @@ def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
                                beta0_rows.shape[0], n_pad)
     lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
     lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
-    lat_pad = np.broadcast_to(
-        np.asarray(classes, np.float32)[None, :], (b_pad, c))
-    mask_pad = np.ones((n_pad,), np.float32)
-    mask_pad[:n] = seg.ctrl_mask
+    if stacks.class_rows is not None:
+        # Per-draw class values (chaos campaigns): draw bi's latency row.
+        lat_pad = np.empty((b_pad, c), np.float32)
+        lat_pad[:b] = stacks.class_rows
+        lat_pad[b:] = stacks.class_rows[0]
+    else:
+        lat_pad = np.broadcast_to(
+            np.asarray(classes, np.float32)[None, :], (b_pad, c))
+    mask_np = np.asarray(seg.ctrl_mask, np.float32)
+    if mask_np.ndim == 2:
+        # Per-draw holdover victims: (B, N) → padded rows (padding rows
+        # keep the controller enabled; their state is inert anyway).
+        mask_pad = np.ones((b_pad, n_pad), np.float32)
+        mask_pad[:b, :n] = mask_np
+    else:
+        mask_pad = np.ones((n_pad,), np.float32)
+        mask_pad[:n] = mask_np
     kp_j = _pad_gain(broadcast_gain(ctrl.kp, b), b_pad)
     boff_j = _pad_gain(broadcast_gain(ctrl.beta_off, b, "beta_off"), b_pad)
     return (a, lam_list, jnp.asarray(lamsum_pad),
@@ -464,7 +550,10 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         ``links`` provides the t=0 physical parameters (per-draw (B, E)
         links are supported on the segment-sum engine).
       ppm_u: (N,) single run or (B, N) ensemble of oscillator draws —
-        scenario events hit every draw at the same times.
+        scenario events hit every draw at the same times.  When the
+        scenario carries per-draw event parameters (chaos campaigns),
+        B must equal the scenario's ``num_draws`` and draw ``b`` sees
+        exactly the events of ``scenario.draw(b)``.
       scenario: the event list (compiled here unless ``compiled`` given).
       engine: "segment-sum" (default) or a dense Pallas lane
         ("auto" | "fused" | "tiled" | "per-step").
@@ -489,6 +578,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         from the live threaded state) before the next chunk.  The rotation rewrites only traced
         λeff inputs, so the same compiled engine continues across every
         splice; each one is logged in ``ScenarioResult.reframes``.
+        On batched runs the trip decision and the rotation are PER
+        DRAW: a drifting draw reframes alone while its batchmates' λeff
+        stays untouched (their shift rows are zero).
         Implies β recording on every lane (``record_beta=False`` is
         rejected).  Trip decisions are made once per chunk, so pick
         ``chunk_records`` (and the policy margin) such that one chunk of
@@ -512,11 +604,25 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     dense = engine in _DENSE_ENGINES
     if not dense and engine != "segment-sum":
         raise ValueError(f"unknown engine {engine!r}")
+    if comp.num_draws is not None and (single
+                                       or ppm_u.shape[0] != comp.num_draws):
+        raise ValueError(
+            f"scenario carries per-draw event parameters for "
+            f"B={comp.num_draws} draws; ppm_u must be "
+            f"({comp.num_draws}, N), got {ppm_u.shape}")
     if dense:
-        if comp.lat_classes is None:
+        if comp.lat_classes is None and comp.per_draw_classes is None:
             raise ValueError(
-                "dense scenario engines need shared base links; per-draw "
-                "(B, E) latencies run on the segment-sum engine")
+                "dense scenario engines need shared base links or per-draw "
+                "latencies that collapse to few column-signature classes; "
+                "fully heterogeneous (B, E) latencies run on the "
+                "segment-sum engine" + "".join(
+                    "\n  note: " + nt for nt in comp.notes))
+        if any(np.asarray(s.edge_w).ndim == 2 for s in comp.segments):
+            raise ValueError(
+                "per-draw LinkDrop/LinkRestore victims need the "
+                "segment-sum engine (the dense (C, N, N) adjacency "
+                "stacks are shared across draws)")
         if ctrl.kind != "proportional":
             raise ValueError(
                 f"dense engines implement the proportional controller; "
@@ -602,8 +708,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             reframes.append(AppliedReframe(
                 record=seg.start_record, time=seg.start_record * rec_period,
                 shift=shift, auto=False))
-        ppm_seg = (ppm_u + seg.dppm.astype(np.float32)
-                   if single else ppm_u + seg.dppm.astype(np.float32)[None])
+        dppm32 = np.asarray(seg.dppm, np.float32)
+        ppm_seg = (ppm_u + dppm32 if (single or dppm32.ndim == 2)
+                   else ppm_u + dppm32[None])
         links_seg = LinkParams(latency_s=seg.latency_s,
                                beta0=np.array(lam_eff, copy=True))
         lam_rows.append(_lam_table(lam_eff, seg.latency_s, cfg.omega_nom))
@@ -628,13 +735,20 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             deg_w, lap_pinv = guard_cache[wkey]
             src_np, dst_np = np.asarray(topo.src), np.asarray(topo.dst)
 
-            def edge_estimate_max(net_records):
-                """Max |β̂_e| over a chunk of (..., N) net-occupancy rows."""
+            def edge_estimates(net_records):
+                """Per-draw max |β̂_e| over a chunk of (..., N) net rows.
+
+                Returns (B,) when the records carry a leading draw axis
+                (ndim 3: draw × record × node), else a length-1 array —
+                so the guard trips, and rotates, draws INDIVIDUALLY.
+                """
                 dev = np.asarray(net_records, np.float64) \
                     - policy.target * deg_w
                 pot = dev @ lap_pinv.T
-                return float(np.abs(pot[..., src_np]
-                                    - pot[..., dst_np]).max())
+                est = np.abs(pot[..., src_np] - pot[..., dst_np])
+                if est.ndim <= 2:
+                    return np.array([est.max()])
+                return est.max(axis=tuple(range(1, est.ndim)))
 
         if dense:
             # Segment prep — λeff folds, padding, stack lookup — happens
@@ -656,7 +770,8 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             for ci in range(chunks_in_seg):
                 if chosen == "per-step":
                     rows = [_perstep_engine(
-                        psi_pad[bi], nu_pad[bi], nu_u_j[bi], mask_j, a,
+                        psi_pad[bi], nu_pad[bi], nu_u_j[bi],
+                        mask_j[bi] if mask_j.ndim == 2 else mask_j, a,
                         lam_list[bi], lat_j[bi], float(kp_np[bi]),
                         float(boff_np[bi]), dt_frames, int(chunk),
                         int(cfg.record_every), interp, False, rb_dense)
@@ -684,13 +799,16 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 rec_done += chunk
                 if policy is not None and rec_done < total:
                     # Guard-band trip: the chunk's in-kernel β record,
-                    # edge-estimated, against depth/2 − margin.
-                    if edge_estimate_max(beta_chunks[-1]) >= guard:
+                    # edge-estimated PER DRAW, against depth/2 − margin.
+                    # Only tripping draws rotate — a drifting draw must
+                    # not perturb its well-behaved batchmates.
+                    tripped = edge_estimates(beta_chunks[-1]) >= guard
+                    if tripped.any():
                         psi_now, nu_now = live_state()
                         lam_eff, shift = _rotation_shifts(
                             topo, lam_eff, psi_now, nu_now, lat_frames,
                             seg.edge_w, "graph", policy.target,
-                            lap_pinv=lap_pinv)
+                            lap_pinv=lap_pinv, rows_mask=tripped)
                         reframes.append(AppliedReframe(
                             record=rec_done, time=rec_done * rec_period,
                             shift=shift, auto=True))
@@ -738,13 +856,15 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             rec_done += chunk
             if policy is not None and rec_done < total:
                 # Same trigger quantity as the dense lanes: the per-edge
-                # record folded by destination, then edge-estimated.
+                # record folded by destination, then edge-estimated per
+                # draw — only tripping draws rotate.
                 net = node_net_occupancy(topo, res.beta, seg.edge_w)
-                if edge_estimate_max(net) >= guard:
+                tripped = edge_estimates(net) >= guard
+                if tripped.any():
                     lam_eff, shift = _rotation_shifts(
                         topo, lam_eff, res.psi, res.nu, lat_frames,
                         seg.edge_w, "graph", policy.target,
-                        lap_pinv=lap_pinv)
+                        lap_pinv=lap_pinv, rows_mask=tripped)
                     reframes.append(AppliedReframe(
                         record=rec_done, time=rec_done * rec_period,
                         shift=shift, auto=True))

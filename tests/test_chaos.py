@@ -1,0 +1,328 @@
+"""Chaos campaigns: per-draw randomized fault injection, envelope
+triage, shrink-to-repro, and the per-draw auto-reframe guard.
+
+The chaos layer lifts every scenario event parameter to a per-draw
+traced axis, so ONE compiled engine runs B distinct randomized fault
+scenarios simultaneously.  These tests pin:
+
+  * seeded samplers are reproducible, and a campaign batch matches each
+    draw's standalone single-scenario replay to <1e-6 ppm on every lane;
+  * zero recompiles: a second campaign with different magnitudes and
+    victims adds no cache entries on any engine;
+  * the per-draw guard regression: a draw that trips the auto-reframe
+    guard must NOT rotate draws that did not trip (the PR-5 loop rotated
+    the whole batch) — the non-tripping draw stays bit-identical to its
+    single-draw run;
+  * LinkDrop -> LinkRestore partition-heal cycles return β inside the
+    closed-form envelope after the heal, with zero recompiles across
+    repeated cycles;
+  * triage classifies every draw, and every shrunk repro reproduces its
+    draw's verdict standalone (the acceptance campaign is `slow`).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ControllerConfig, ReframePolicy, SimConfig,
+                        fully_connected, make_links, torus3d)
+from repro.core.frame_model import _jitted_run, _jitted_run_ensemble
+from repro.kernels.ops import _fused_engine, _perstep_engine
+from repro.scenarios import (VERDICT_ENVELOPE, VERDICT_OVERFLOW, VERDICT_PASS,
+                             VERDICT_RESCUED, ChaosCampaign, DriftRampSampler,
+                             FreqStep, FreqStepSampler, HoldoverSampler,
+                             LatencyStepSampler, LinkDrop, LinkDropSampler,
+                             LinkRestore, Scenario, edges_between,
+                             run_scenario, triage_result)
+
+TOPO = fully_connected(8)
+LINKS = make_links(TOPO, cable_m=2.0)
+CTRL = ControllerConfig(kp=2e-8)
+VERDICTS = {VERDICT_PASS, VERDICT_RESCUED, VERDICT_ENVELOPE,
+            VERDICT_OVERFLOW}
+
+
+def _cfg(**kw):
+    base = dict(dt=1e-3, steps=480, record_every=12)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _campaign(num_draws=8, seed=0, engine="segment-sum", steps=480,
+              ppm_lo=0.05, ppm_hi=0.5, **kw):
+    t_hold = steps * 1e-3
+    return ChaosCampaign(
+        topo=TOPO, ctrl=CTRL,
+        samplers=(
+            FreqStepSampler(t=0.15 * t_hold, ppm_range=(ppm_lo, ppm_hi)),
+            DriftRampSampler(t=0.35 * t_hold, t_end=0.6 * t_hold,
+                             rate_range=(0.05, ppm_hi)),
+            LatencyStepSampler(t=0.5 * t_hold,
+                               edges=edges_between(TOPO, 0, 1),
+                               cable_range=(5.0, 100.0)),
+        ),
+        num_draws=num_draws, seed=seed, ppm_range=0.05, links=LINKS,
+        cfg=_cfg(steps=steps, record_every=24), engine=engine, **kw)
+
+
+# ------------------------------------------------------------- samplers
+
+def test_samplers_reproducible():
+    """Same seed -> identical scenario parameters and oscillator rows."""
+    a_sc, a_ppm = _campaign(seed=3).build()
+    b_sc, b_ppm = _campaign(seed=3).build()
+    np.testing.assert_array_equal(a_ppm, b_ppm)
+    assert len(a_sc.events) == len(b_sc.events)
+    for ea, eb in zip(a_sc.events, b_sc.events):
+        assert type(ea) is type(eb)
+        for d in range(8):
+            assert repr(ea.draw(d)) == repr(eb.draw(d))
+    c_sc, _ = _campaign(seed=4).build()
+    assert any(repr(ea.draw(0)) != repr(ec.draw(0))
+               for ea, ec in zip(a_sc.events, c_sc.events))
+
+
+def test_campaign_build_shapes():
+    camp = _campaign(num_draws=8)
+    sc, ppm = camp.build()
+    assert sc.num_draws == 8
+    assert ppm.shape == (8, TOPO.num_nodes)
+    assert np.abs(ppm).max() <= camp.ppm_range
+
+
+def test_linkdrop_sampler_requires_segment_sum():
+    camp = ChaosCampaign(
+        topo=TOPO, ctrl=CTRL,
+        samplers=(LinkDropSampler(t=0.12, t_restore=0.24),),
+        num_draws=4, links=LINKS, cfg=_cfg(), engine="fused")
+    with pytest.raises(ValueError, match="segment-sum"):
+        camp.run()
+
+
+# ------------------------------------- batch vs single replay, per lane
+
+@pytest.mark.parametrize("engine", ["segment-sum", "fused", "tiled",
+                                    "per-step"])
+def test_campaign_rows_match_single_draw_replays(engine):
+    """Each batch row reproduces its standalone single-scenario replay
+    to <1e-6 ppm on every lane (per-draw magnitudes, victims, and cable
+    lengths all threaded as traced data)."""
+    camp = _campaign(num_draws=6, engine=engine)
+    scenario, ppm = camp.build()
+    res = run_scenario(TOPO, LINKS, CTRL, ppm, scenario, camp.cfg,
+                       engine=engine, record_beta=True)
+    freq = np.asarray(res.freq_ppm)
+    for b in (0, 3, 5):
+        single = run_scenario(TOPO, LINKS, CTRL, ppm[b], scenario.draw(b),
+                              camp.cfg, engine=engine, record_beta=True)
+        np.testing.assert_allclose(freq[b], np.asarray(single.freq_ppm),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.beta)[b],
+                                   np.asarray(single.beta), atol=2e-5)
+
+
+def test_second_campaign_recompiles_nothing():
+    """Different magnitudes, victims, and cable draws are traced DATA:
+    a reseeded campaign adds zero cache entries on any engine."""
+    for engine in ("segment-sum", "fused", "tiled", "per-step"):
+        _campaign(num_draws=4, seed=0, engine=engine).run()
+    sizes = (_jitted_run_ensemble()._cache_size(),
+             _fused_engine._cache_size(), _perstep_engine._cache_size())
+    for engine in ("segment-sum", "fused", "tiled", "per-step"):
+        _campaign(num_draws=4, seed=9, engine=engine).run()
+    assert (_jitted_run_ensemble()._cache_size(),
+            _fused_engine._cache_size(),
+            _perstep_engine._cache_size()) == sizes
+
+
+# ------------------------------------------------- per-draw guard (PR-5 fix)
+
+def test_guard_trips_only_the_drifting_draw():
+    """Two-draw regression for the per-draw auto-reframe guard: draw 1
+    steps 6 ppm and trips; draw 0 is quiet and must keep zero shifts and
+    a bit-identical trajectory to its own single-draw run."""
+    cfg = _cfg(steps=1200)
+    ppm = np.zeros((2, TOPO.num_nodes), np.float32)
+    sc = Scenario(events=(FreqStep(t=0.12, nodes=((0,), (0,)),
+                                   delta_ppm=np.array([0.0, 6.0])),))
+    policy = ReframePolicy(depth=16, margin=4.0)
+    res = run_scenario(TOPO, LINKS, CTRL, ppm, sc, cfg, auto_reframe=policy)
+    auto = [r for r in res.reframes if r.auto]
+    assert auto, "the 6 ppm draw must trip the guard"
+    for r in auto:
+        sh = np.asarray(r.shift)
+        assert sh.shape[0] == 2
+        assert not (sh[0] != 0).any(), "quiet draw must not be rotated"
+        assert (sh[1] != 0).any()
+    single = run_scenario(TOPO, LINKS, CTRL, ppm[0], sc.draw(0), cfg,
+                          auto_reframe=policy)
+    np.testing.assert_array_equal(np.asarray(res.freq_ppm)[0],
+                                  np.asarray(single.freq_ppm))
+    np.testing.assert_array_equal(np.asarray(res.beta)[0],
+                                  np.asarray(single.beta))
+
+
+# ------------------------------------------------- partition-heal cycles
+
+def _heal_scenario(topo, a, b, cycles, t0=0.12, period=0.3, outage=0.12):
+    ed = edges_between(topo, a, b)
+    events = []
+    for k in range(cycles):
+        t = t0 + period * k
+        events += [LinkDrop(t=t, edges=ed),
+                   LinkRestore(t=t + outage, edges=ed, reestablish=True)]
+    return Scenario(events=tuple(events), name="heal-cycle")
+
+
+def test_partition_heal_cycles_fc8():
+    """Three drop/restore cycles of the same FC8 edge pair: β lands back
+    inside its closed-form envelope after the final heal, and a second
+    cycle scenario (different edge set, different timing) adds zero
+    cache entries — the whole cycle is traced data."""
+    cfg = _cfg(steps=1200)
+    ppm = np.random.default_rng(3).uniform(-0.05, 0.05,
+                                           TOPO.num_nodes).astype(np.float32)
+    res = run_scenario(TOPO, LINKS, CTRL, ppm,
+                       _heal_scenario(TOPO, 0, 2, cycles=3), cfg,
+                       record_beta=True)
+    assert np.isfinite(np.asarray(res.beta)).all()
+    verdicts, margins, _, _ = triage_result(res, depth=32)
+    assert verdicts[0] == VERDICT_PASS
+    assert margins[0] > 0.0
+    size = _jitted_run()._cache_size()
+    res2 = run_scenario(TOPO, LINKS, CTRL, ppm,
+                        _heal_scenario(TOPO, 1, 4, cycles=3, t0=0.24), cfg,
+                        record_beta=True)
+    assert _jitted_run()._cache_size() == size
+    assert triage_result(res2, depth=32)[0][0] == VERDICT_PASS
+
+
+@pytest.mark.slow
+def test_partition_heal_cycles_torus3d():
+    """Same partition-heal pin at the paper's scale-out size: repeated
+    drop/restore of one torus3d(8) edge pair heals back inside the
+    envelope with zero recompiles across the cycles."""
+    topo = torus3d(8)
+    links = make_links(topo, cable_m=2.0)
+    cfg = _cfg(steps=960, record_every=24)
+    ppm = np.random.default_rng(5).uniform(-0.05, 0.05,
+                                           topo.num_nodes).astype(np.float32)
+    a, b = int(topo.src[0]), int(topo.dst[0])
+    res = run_scenario(topo, links, CTRL, ppm,
+                       _heal_scenario(topo, a, b, cycles=2, period=0.36,
+                                      outage=0.12), cfg, record_beta=True)
+    assert np.isfinite(np.asarray(res.beta)).all()
+    verdicts, margins, _, _ = triage_result(res, depth=32)
+    assert verdicts[0] == VERDICT_PASS and margins[0] > 0.0
+    size = _jitted_run()._cache_size()
+    c, d = int(topo.src[7]), int(topo.dst[7])
+    run_scenario(topo, links, CTRL, ppm,
+                 _heal_scenario(topo, c, d, cycles=2, t0=0.24, period=0.36,
+                                outage=0.12), cfg, record_beta=True)
+    assert _jitted_run()._cache_size() == size
+
+
+# --------------------------------------------------------------- triage
+
+def test_triage_classifies_and_shrinks():
+    """A hot campaign produces OVERFLOW draws; triage classifies every
+    draw, overflow margins are NaN, and the worst draw's shrunk repro
+    reproduces its verdict standalone."""
+    camp = _campaign(num_draws=16, steps=1200, ppm_lo=0.2, ppm_hi=8.0)
+    result = camp.run()
+    assert set(result.verdicts) <= VERDICTS
+    counts = result.counts()
+    assert sum(counts.values()) == 16
+    assert counts[VERDICT_OVERFLOW] > 0
+    over = result.verdicts == VERDICT_OVERFLOW
+    assert np.isnan(result.margins[over]).all()
+    assert (result.peaks[over] > camp.depth / 2).all()
+    assert 0.0 <= result.survival_rate() < 1.0
+    shrunk = result.shrink()
+    assert shrunk.expected_verdict == VERDICT_OVERFLOW
+    assert shrunk.reproduces
+
+
+def test_triage_rescued_by_reframe():
+    """With the guard on, rescued draws triage RESCUED-BY-REFRAME (NaN
+    margin) and the rescue reproduces in the shrunk single-draw repro."""
+    camp = _campaign(num_draws=24, steps=1200, ppm_lo=0.2, ppm_hi=8.0,
+                     auto_reframe=True)
+    result = camp.run()
+    resc = np.flatnonzero(result.verdicts == VERDICT_RESCUED)
+    assert resc.size > 0, "expected at least one guard rescue"
+    assert np.isnan(result.margins[resc]).all()
+    assert result.reframed[resc].all()
+    shrunk = result.shrink(int(resc[0]))
+    assert shrunk.expected_verdict == VERDICT_RESCUED
+    assert shrunk.reproduces
+
+
+def test_triage_requires_beta_record():
+    sc, ppm = _campaign(num_draws=2).build()
+    res = run_scenario(TOPO, LINKS, CTRL, ppm, sc, _cfg(record_every=24),
+                       record_beta=False)
+    with pytest.raises(ValueError, match="record_beta"):
+        triage_result(res)
+
+
+def test_holdover_and_linkdrop_campaign_triage():
+    """Per-draw holdover victims and per-draw LinkDrop victim edges run
+    on the segment-sum lane; every draw classifies and the worst shrinks
+    to a reproducing repro."""
+    cfg = _cfg(steps=960, record_every=24)
+    camp = ChaosCampaign(
+        topo=TOPO, ctrl=CTRL,
+        samplers=(HoldoverSampler(t=0.2, t_reset=0.5),
+                  LinkDropSampler(t=0.3, t_restore=0.6)),
+        num_draws=6, seed=2, ppm_range=0.05, links=LINKS, cfg=cfg)
+    result = camp.run()
+    assert set(result.verdicts) <= VERDICTS
+    assert result.shrink().reproduces
+
+
+# ---------------------------------------------------- acceptance (slow)
+
+@pytest.mark.slow
+def test_campaign_acceptance_1024_draws():
+    """ISSUE acceptance: a 1024-draw campaign with per-draw randomized
+    FreqStep/DriftRamp/LatencyStep parameters compiles each engine
+    exactly once, matches per-draw single-scenario replays to <=1e-6 ppm
+    on all four lanes, classifies every draw, and the shrunk repro
+    reproduces its verdict standalone."""
+    camp = _campaign(num_draws=1024, steps=720, ppm_lo=0.05, ppm_hi=4.0)
+    scenario, ppm = camp.build()
+    rng = np.random.default_rng(11)
+    sample = sorted(rng.choice(1024, size=4, replace=False).tolist())
+
+    for engine in ("segment-sum", "fused", "tiled", "per-step"):
+        res = run_scenario(TOPO, LINKS, CTRL, ppm, scenario, camp.cfg,
+                           engine=engine, record_beta=True)
+        freq = np.asarray(res.freq_ppm)
+        assert freq.shape[0] == 1024
+        for b in sample:
+            single = run_scenario(TOPO, LINKS, CTRL, ppm[b],
+                                  scenario.draw(b), camp.cfg, engine=engine,
+                                  record_beta=True)
+            np.testing.assert_allclose(freq[b], np.asarray(single.freq_ppm),
+                                       atol=1e-6)
+
+    # exactly-once compile: the full 1024-draw batch, reseeded, adds
+    # nothing to any engine cache.
+    sizes = (_jitted_run_ensemble()._cache_size(),
+             _fused_engine._cache_size(), _perstep_engine._cache_size())
+    camp2 = _campaign(num_draws=1024, steps=720, seed=8, ppm_lo=0.05,
+                      ppm_hi=4.0)
+    sc2, ppm2 = camp2.build()
+    for engine in ("segment-sum", "fused", "tiled"):
+        run_scenario(TOPO, LINKS, CTRL, ppm2, sc2, camp2.cfg, engine=engine,
+                     record_beta=True)
+    assert (_jitted_run_ensemble()._cache_size(),
+            _fused_engine._cache_size(),
+            _perstep_engine._cache_size()) == sizes
+
+    result = camp.run()
+    assert result.num_draws == 1024
+    assert set(result.verdicts) <= VERDICTS
+    assert sum(result.counts().values()) == 1024
+    assert result.counts()[VERDICT_PASS] > 0
+    assert result.shrink().reproduces
