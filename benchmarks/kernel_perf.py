@@ -442,6 +442,45 @@ def bench_chaos_campaign():
             f"pass_one_compile={'PASS' if compiles == 0 else 'FAIL'}")
 
 
+def bench_sparse_scale():
+    """Sparse ELL lane at the tentpole scale: torus3d(100) — 1,000,000
+    nodes, 6,000,000 edges — advanced by the edge-major gather kernel
+    with β telemetry ON.
+
+    Per-period cost is O(N·K) (K = 6 slots) instead of the dense lanes'
+    O(N²); no (C, N, N) stack is ever materialized, so the node ceiling
+    moves from ~10⁴ (tiled) to 10⁶.  The timed call includes the host
+    ELL table build (part of the lane's cost).  Hard gate: pass_scale —
+    end-to-end throughput must exceed 10⁶ node-steps/s with β recording
+    on, the ISSUE acceptance bar.  On this CPU container the kernel runs
+    the Pallas interpreter with the whole node axis as one panel; the
+    VMEM panel budget applies on real TPUs, where this N needs node-axis
+    sharding (ROADMAP).
+    """
+    topo = torus3d(100)
+    links = make_links(topo, cable_m=2.0)
+    ppm = np.random.default_rng(0).uniform(-8, 8, topo.num_nodes)
+    steps, record_every = 8, 4
+
+    def run():
+        return simulate_fused(topo, links, ppm, steps=steps, kp=2e-9,
+                              record_every=record_every, engine="sparse",
+                              record_beta=True)
+
+    res = run()                            # compile + warm
+    assert res.engine == "sparse"
+    t0 = time.perf_counter()
+    res = run()
+    dt = time.perf_counter() - t0
+    node_steps_per_s = topo.num_nodes * steps / dt
+    finite = bool(np.isfinite(res[0]).all() and np.isfinite(res.beta).all())
+    return ("kernel_sparse_scale", dt * 1e6,
+            f"nodes={topo.num_nodes};edges={topo.num_edges};"
+            f"node_steps_per_s={node_steps_per_s:.3e};steps={steps};"
+            f"record_beta=True;finite={finite};"
+            f"pass_scale={'PASS' if node_steps_per_s > 1e6 and finite else 'FAIL'}")
+
+
 def bench_ensemble_xla_engine():
     """Production segment-sum simulator, vmapped: B=16 draws on FC8 in one
     compile (the frame_model.simulate_ensemble lane)."""
@@ -488,15 +527,18 @@ def bench_sim_engine_throughput():
 
 ALL = [bench_dense_step_oracle, bench_pallas_interpret_parity,
        bench_fused_vs_per_step, bench_tiled_vs_fused,
-       bench_gain_sweep_compile, bench_scenario_replay,
-       bench_beta_overhead, bench_reframe_overhead,
-       bench_chaos_campaign, bench_ensemble_throughput,
-       bench_ensemble_xla_engine, bench_sim_engine_throughput]
+       bench_sparse_scale, bench_gain_sweep_compile,
+       bench_scenario_replay, bench_beta_overhead,
+       bench_reframe_overhead, bench_chaos_campaign,
+       bench_ensemble_throughput, bench_ensemble_xla_engine,
+       bench_sim_engine_throughput]
 
 # Fast subset for CI smoke runs (scripts/ci.sh): the perf-trajectory
-# benches for the fused/tiled engines, skipping the 10k-node torus.
+# benches for the fused/tiled/sparse engines, skipping the dense
+# 10k-node torus (the sparse 1M-node lane runs a few short steps and
+# stays cheap — its pass_scale gate is the PR acceptance bar).
 SMOKE = [bench_fused_vs_per_step, bench_tiled_vs_fused,
-         bench_gain_sweep_compile, bench_scenario_replay,
-         bench_beta_overhead, bench_reframe_overhead,
-         bench_chaos_campaign, bench_ensemble_throughput,
-         bench_ensemble_xla_engine]
+         bench_sparse_scale, bench_gain_sweep_compile,
+         bench_scenario_replay, bench_beta_overhead,
+         bench_reframe_overhead, bench_chaos_campaign,
+         bench_ensemble_throughput, bench_ensemble_xla_engine]

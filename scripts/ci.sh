@@ -7,8 +7,9 @@
 #
 # --fast is the per-push quick gate (see .github/workflows/ci.yml): lint,
 # tier-1 tests minus the `slow` marker (heavy parity-matrix / envelope /
-# long-horizon suites), and the benchmark smoke lane.  The no-flag run is
-# the full PR gate.
+# long-horizon suites) and the `model_smoke` marker (the ModelZoo
+# per-architecture suite), and the benchmark smoke lane.  The no-flag run
+# is the full PR gate.
 #
 # Writes BENCH_kernels.json at the repo root (the fused/tiled-engine perf
 # trajectory; see benchmarks/README.md).  Exits nonzero if lint or tests
@@ -45,13 +46,24 @@ else
 fi
 
 if [ "$FAST" -eq 1 ]; then
-    python -m pytest -x -q -m "not slow" "$@"
+    # model_smoke (the ModelZoo per-architecture suite) is full-tier only:
+    # it exercises a different subsystem and dominates fast-gate wall time.
+    python -m pytest -x -q -m "not slow and not model_smoke" "$@"
 
     # Chaos smoke lane: a small randomized fault-injection campaign
     # end-to-end (samplers -> one-compile batch -> envelope/overflow
     # triage -> shrink-to-repro) — cheap enough for the per-push tier.
     python examples/chaos_campaign.py --smoke --no-plot > /dev/null
     echo "ci: chaos smoke (chaos_campaign --smoke) green"
+
+    # Sparse-lane smoke: the random-graph property matrix + ELL table
+    # unit tests must run even when the caller filtered the main pytest
+    # invocation down to a subset (the 1M-node scale gate itself runs in
+    # the bench smoke below via kernel_sparse_scale's pass_scale field).
+    if [ $# -gt 0 ]; then
+        python -m pytest -q tests/test_sparse_engine.py
+    fi
+    echo "ci: sparse smoke (test_sparse_engine) green"
 else
     python -m pytest -x -q "$@"
 
@@ -64,7 +76,7 @@ else
             tests/test_engine_dispatch.py tests/test_gain_sweep.py \
             tests/test_scenarios.py tests/test_ensemble_links.py \
             tests/test_beta_telemetry.py tests/test_reframing.py \
-            tests/test_chaos.py
+            tests/test_chaos.py tests/test_sparse_engine.py
     fi
 
     # Scenario smoke lanes: the §5.6 fiber-swap demo end-to-end (scenario

@@ -1,0 +1,376 @@
+"""Sparse edge-major Pallas engine: padded-neighbor (ELL) gather-scatter.
+
+Every dense lane pays O(N²) per control period through the (C, N, N)
+adjacency stack, but all paper topologies except the 8-node fully
+connected graph are bounded-degree — the abstract dynamics are a sum
+over *edges* (arXiv:2109.14111; the occupancy model of arXiv:2410.05432
+that ``repro.core.envelopes`` implements).  This module expresses one
+control period as K slot gathers over a **slot-major ELL table**:
+
+    nbr  (K, N) int32    nbr[k, i]  = source node of node i's k-th in-edge
+    latf (·, K, N) f32   per-slot physical latency in frames
+    w    (·, K, N) f32   per-slot edge weight (0 = padding / dropped link)
+
+    err_i = Σ_k w[k,i]·(ψ[nbr[k,i]] − ν[nbr[k,i]]·latf[k,i])
+            − (ψ_i + β_off)·deg_i + lamsum_i,      deg_i = Σ_k w[k,i]
+
+followed by the same cancellation-free controller update as the dense
+kernels.  Per-period cost is O(N·K) — for torus3d(100) (1M nodes, K=6)
+that is ~10⁵× less arithmetic than the dense formulation, lifting the
+node ceiling to 10⁵–10⁶.
+
+Layout: slot-major (K, N) rather than node-major (N, K), so every slot
+row is an N-vector aligned with the state's lane axis — the gather is K
+full-row ``jnp.take`` ops and the fold is K fused multiply-adds on
+(B, N) tiles, never a reduction across misaligned K lanes.  Padding
+slots self-index (``nbr[k, i] = i``) with weight 0, so they gather a
+valid address and contribute exactly nothing; padding *nodes* have all
+slots padded (degree 0) and stay inert like the dense lanes' padding.
+
+The kernel advances ``num_records × record_every`` periods in ONE
+``pallas_call`` with grid ``(num_records, record_every, i_panels)``:
+per-node state (ψ, ν) lives whole in VMEM scratch (the gather needs
+every source node), while the neighbor tables stream as (·, K, tile_i)
+node panels whose index map advances with the innermost grid axis —
+double-buffered from HBM like the tiled dense engine's column panels.
+Each panel computes the update for its own node rows into a *staging*
+scratch (gathers must read the pre-period state, so in-place writes
+would corrupt later panels); the last panel of each period commits
+staging → canonical.  With a single panel (tile_i = N) the staging hop
+is skipped and the update writes the canonical scratch directly.
+
+Everything the dense lanes trace is traced here too — state, per-draw
+gains, per-draw controller masks, per-draw λeff folds — plus the
+latency and weight *tables themselves*: per-draw (B, K, N) tables make
+per-draw LinkDrop victims (chaos campaigns) and fully heterogeneous
+per-draw cable draws run on ONE compiled kernel, which no dense lane
+can do (their (C, N, N) stacks are shared across draws).
+
+β telemetry (``record_beta=True``) follows the tiled engine's scheme:
+the period grid axis gains one trailing pass per record that re-streams
+the tables to aggregate the post-update state's per-node net occupancy
+β_i = Σ_k w·(ψ_src − ν_src·latf) − ψ_i·deg_i + lamsum_i, with ψ
+mean-centered (β is shift-invariant; centering keeps float32 partial
+sums O(ψ spread)).  The edge-major layout also makes a per-EDGE β
+record a natural follow-on — β_e is the k-th gather term per slot
+before the Σ_k fold — the record shape (K, N) is the table shape.
+
+On CPU the kernel runs the Pallas interpreter; the lane gathers lower
+through Mosaic's dynamic-gather support on TPU (TPU validation is a
+ROADMAP item, as for the dense lanes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.topology import Topology
+
+from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES, _check_shapes,
+                           _gain_col, _lamsum_rows, _mask_row,
+                           sparse_vmem_bytes)
+
+__all__ = ["bittide_sparse_pallas", "ellify", "max_in_degree"]
+
+
+def max_in_degree(topo: Topology) -> int:
+    """Padded slot count K the ELL tables of ``topo`` need (≥ 1)."""
+    if topo.num_edges == 0:
+        return 1
+    return max(1, int(topo.in_degree.max()))
+
+
+def ellify(topo: Topology, lat_frames, edge_w=None, tile: int = TILE,
+           n_pad: Optional[int] = None, max_deg: Optional[int] = None):
+    """Edge list → slot-major ELL tables for the sparse engine.
+
+    Args:
+      topo: the directed multigraph (duplicate edges land in distinct
+        slots, so multigraph weights are NOT merged — each parallel edge
+        keeps its own latency, exactly like the segment-sum simulator).
+      lat_frames: per-edge physical latency in frames — (E,) shared or
+        (B, E) per-draw.
+      edge_w: per-edge error weights — None (all 1), (E,) shared or
+        (B, E) per-draw (chaos LinkDrop victims).  Weight 0 removes the
+        edge from the aggregation; its slot stays allocated so dropping
+        / restoring links never changes the compiled table shape.
+      tile: lane quantum N pads to (TILE).
+      n_pad: explicit padded node count (defaults to tile-rounded N).
+      max_deg: explicit slot count K (defaults to the max in-degree;
+        larger values add always-padded slots — the max-degree-padding
+        edge case the property tests pin).
+
+    Returns:
+      (nbr (K, N_pad) int32, latf (R_l, K, N_pad) float32,
+      w (R_w, K, N_pad) float32) with R = 1 for shared inputs or B for
+      per-draw inputs (the two leading axes are independent).
+    """
+    n = topo.num_nodes
+    e = topo.num_edges
+    if n_pad is None:
+        n_pad = ((n + tile - 1) // tile) * tile
+    lat2 = np.atleast_2d(np.asarray(lat_frames, np.float64))
+    if lat2.shape[-1] != e:
+        raise ValueError(f"lat_frames must be (E,)=({e},) or (B, {e}), "
+                         f"got {np.shape(lat_frames)}")
+    if edge_w is None:
+        w2 = np.ones((1, e), np.float64)
+    else:
+        w2 = np.atleast_2d(np.asarray(edge_w, np.float64))
+        if w2.shape[-1] != e:
+            raise ValueError(f"edge_w must be (E,)=({e},) or (B, {e}), "
+                             f"got {np.shape(edge_w)}")
+
+    dst = np.asarray(topo.dst, np.int64)
+    src = np.asarray(topo.src, np.int64)
+    counts = np.bincount(dst, minlength=n) if e else np.zeros(n, np.int64)
+    k_need = max(1, int(counts.max())) if e else 1
+    k = k_need if max_deg is None else int(max_deg)
+    if k < k_need:
+        raise ValueError(f"max_deg={k} < the topology's max in-degree "
+                         f"{k_need}")
+
+    # Slot assignment: each node's in-edges take slots 0..deg-1 in edge
+    # order (vectorized cumcount — stable argsort groups edges by dst,
+    # each edge's slot is its rank within the group).
+    slot = np.zeros(e, np.int64)
+    if e:
+        starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+        perm = np.argsort(dst, kind="stable")
+        slot[perm] = np.arange(e) - np.repeat(starts, counts)
+
+    # Padding slots self-index with weight 0: a valid gather address that
+    # contributes nothing (padding NODES therefore stay inert: degree 0).
+    nbr = np.broadcast_to(np.arange(n_pad, dtype=np.int32),
+                          (k, n_pad)).copy()
+    latf = np.zeros((lat2.shape[0], k, n_pad), np.float32)
+    wt = np.zeros((w2.shape[0], k, n_pad), np.float32)
+    if e:
+        nbr[slot, dst] = src.astype(np.int32)
+        latf[:, slot, dst] = lat2
+        wt[:, slot, dst] = w2
+    return jnp.asarray(nbr), jnp.asarray(latf), jnp.asarray(wt)
+
+
+def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
+                   kp_ref, boff_ref, mask_ref, lamsum_ref, psi_out_ref,
+                   nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
+                   max_deg: int, multi_panel: bool, record_beta: bool):
+    t = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    i_panels = pl.num_programs(2)
+    # With β recording the period axis carries one extra trailing pass per
+    # record: p < periods advances the state, p == periods re-streams the
+    # table panels to aggregate the POST-update state's occupancy.
+    periods = pl.num_programs(1) - (1 if record_beta else 0)
+
+    refs = list(opt_refs)
+    brec_ref = refs.pop(0) if record_beta else None
+    psi_s, nu_s = refs.pop(0), refs.pop(0)
+    if multi_panel:
+        psi_ns, nu_ns = refs.pop(0), refs.pop(0)
+
+    first = jnp.logical_and(t == 0, jnp.logical_and(p == 0, i == 0))
+
+    @pl.when(first)
+    def _seed():
+        psi_s[...] = psi0_ref[...]
+        nu_s[...] = nu0_ref[...]
+
+    tile_i = nbr_ref.shape[-1]
+    cols = pl.ds(pl.multiple_of(i * tile_i, TILE), tile_i)
+    psi_full = psi_s[...]                                  # (B, N)
+    nu_full = nu_s[...]
+    if record_beta:
+        # β pass: center ψ by its full-row mean (β is exactly
+        # shift-invariant; centering keeps float32 partial sums O(ψ
+        # spread)).  The mean is over the whole scratch row, so every
+        # panel of the pass — and every engine — subtracts the same
+        # constant.
+        m = jnp.mean(psi_full, axis=1, keepdims=True)      # (B, 1)
+        psi_full = jnp.where(p == periods, psi_full - m, psi_full)
+
+    # K slot gathers over the streamed (·, K, tile_i) table panel: each
+    # slot row pulls its source nodes' state from the whole-row scratch
+    # and folds one weighted FMA into the panel's accumulation.
+    lat = latf_ref[...]                                    # (·, K, TI)
+    w = w_ref[...]
+    deg = jnp.sum(w, axis=1)                               # (·, TI)
+    acc = jnp.zeros((psi_full.shape[0], tile_i), jnp.float32)
+    for k in range(max_deg):
+        g_psi = jnp.take(psi_full, nbr_ref[k], axis=1)     # (B, TI)
+        g_nu = jnp.take(nu_full, nbr_ref[k], axis=1)
+        acc = acc + w[:, k, :] * (g_psi - g_nu * lat[:, k, :])
+
+    psi_i = psi_s[:, cols]                                 # (B, TI)
+    nu_i = nu_s[:, cols]
+    if record_beta:
+        psi_i = jnp.where(p == periods, psi_i - m, psi_i)
+
+    @pl.when(p < periods)
+    def _update():
+        err = acc - (psi_i + boff_ref[...]) * deg + lamsum_ref[...]
+        # ν' = (1+ν_u)(1+c) − 1 computed as ν_u + c + ν_u·c: never forms
+        # 1 + O(1e-6) (float32 eps(1.0) = 1.19e-7 would quantize it).
+        c_rel = kp_ref[...] * err
+        nu_u = nu_u_ref[...]
+        nu_next = nu_u + c_rel + nu_u * c_rel
+        # Holdover: masked-out nodes freeze ν at its previous value.
+        nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu_i)
+        psi_next = psi_i + nu_next * dt_frames
+        if multi_panel:
+            # Gathers must read the pre-period state, so panel updates
+            # stage until every panel of this period has aggregated.
+            psi_ns[:, cols] = psi_next
+            nu_ns[:, cols] = nu_next
+        else:
+            psi_s[:, cols] = psi_next
+            nu_s[:, cols] = nu_next
+        # Telemetry flushes to HBM when the record index advances, so
+        # overwriting every period within a record is decimation for free.
+        rec_ref[...] = nu_next[None]
+        psi_out_ref[...] = psi_next
+        nu_out_ref[...] = nu_next
+
+    if multi_panel:
+        @pl.when(jnp.logical_and(p < periods, i == i_panels - 1))
+        def _commit():
+            psi_s[...] = psi_ns[...]
+            nu_s[...] = nu_ns[...]
+
+    if record_beta:
+        @pl.when(p == periods)
+        def _record_beta():
+            # acc aggregated the centered post-update state this pass.
+            brec_ref[...] = (acc - psi_i * deg + lamsum_ref[...])[None]
+
+
+def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
+                          dt_frames: float, *, num_records: int,
+                          record_every: int, tile_i: Optional[int] = None,
+                          ctrl_mask=None, record_beta: bool = False,
+                          interpret: bool = False):
+    """Advance ``num_records × record_every`` periods on the ELL tables.
+
+    Args:
+      psi, nu, nu_u: (B, N) float32 state (B a multiple of SUBLANE, N a
+        multiple of TILE; pad via :func:`ellify` / the ops-layer padding).
+      nbr: (K, N) int32 slot-major neighbor table (see :func:`ellify`).
+      latf: (1, K, N) shared or (B, K, N) per-draw slot latencies, frames.
+      w: (1, K, N) shared or (B, K, N) per-draw slot weights — per-draw
+        rows give each draw its own dropped links on ONE compiled kernel.
+      lamsum: per-node λeff fold Σ_{e→i} w_e·λeff_e — (N,)/(1, N) shared
+        or (B, N) per-draw.
+      kp, beta_off: traced controller gains, scalar or per-draw length-B.
+      dt_frames: static integration constant (frames per control period).
+      num_records / record_every: telemetry grid (static).
+      tile_i: node-panel width for streaming the tables — a multiple of
+        TILE dividing N; defaults to N (single panel, tables resident).
+      ctrl_mask: optional (N,)/(1, N) shared or (B, N) per-draw
+        controller-enable mask (0 = clock holdover).  Traced.
+      record_beta: also decimate the per-node net occupancy (frames) to
+        every record — one extra table pass per record (compile-time
+        switch; the ν-only grid is unchanged when off).
+      interpret: run in interpret mode (CPU validation).
+
+    Returns:
+      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
+      beta_rec (num_records, B, N) or None) — the fused engines' contract.
+    """
+    b, n = psi.shape
+    _check_shapes(b, n, num_records, record_every)
+    k = nbr.shape[0]
+    if nbr.shape != (k, n):
+        raise ValueError(f"nbr must be (K, {n}), got {nbr.shape}")
+    for name, tbl in (("latf", latf), ("w", w)):
+        if tbl.ndim != 3 or tbl.shape[1:] != (k, n) \
+                or tbl.shape[0] not in (1, b):
+            raise ValueError(f"{name} must be (1, {k}, {n}) or "
+                             f"({b}, {k}, {n}), got {jnp.shape(tbl)}")
+    if tile_i is None:
+        tile_i = n
+    if tile_i < TILE or tile_i % TILE or n % tile_i:
+        raise ValueError(
+            f"tile_i={tile_i} must be a multiple of {TILE} dividing N={n}")
+    i_panels = n // tile_i
+    rows = max(latf.shape[0], w.shape[0])
+    vmem = sparse_vmem_bytes(b, n, k, tile_i, rows)
+    if vmem > VMEM_BUDGET_BYTES and not interpret:
+        raise ValueError(
+            f"sparse working set {vmem/2**20:.1f} MiB exceeds the "
+            f"{VMEM_BUDGET_BYTES/2**20:.0f} MiB VMEM budget (B={b}, N={n}, "
+            f"K={k}, tile_i={tile_i}); the O(B·N) state must stay resident "
+            "— shard the node axis or use the segment-sum simulator")
+
+    multi_panel = i_panels > 1
+    kern = functools.partial(
+        _sparse_kernel, dt_frames=float(dt_frames), max_deg=int(k),
+        multi_panel=multi_panel, record_beta=bool(record_beta))
+
+    mask = _mask_row(ctrl_mask, n, b)
+    full3 = lambda t, p, i: (0, 0)
+    panel2 = lambda t, p, i: (0, i)
+    out_specs = [
+        pl.BlockSpec((b, tile_i), panel2),                    # psi final
+        pl.BlockSpec((b, tile_i), panel2),                    # nu final
+        pl.BlockSpec((1, b, tile_i), lambda t, p, i: (t, 0, i)),  # ν rec
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((num_records, b, n), jnp.float32),
+    ]
+    if record_beta:
+        out_specs.append(
+            pl.BlockSpec((1, b, tile_i), lambda t, p, i: (t, 0, i)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    scratch = [
+        pltpu.VMEM((b, n), jnp.float32),                      # ψ carry
+        pltpu.VMEM((b, n), jnp.float32),                      # ν carry
+    ]
+    if multi_panel:
+        scratch += [
+            pltpu.VMEM((b, n), jnp.float32),                  # ψ staging
+            pltpu.VMEM((b, n), jnp.float32),                  # ν staging
+        ]
+    out = pl.pallas_call(
+        kern,
+        grid=(num_records, record_every + (1 if record_beta else 0),
+              i_panels),
+        in_specs=[
+            # Table panels: the index map advances with i, so the Pallas
+            # pipeline double-buffers the HBM fetch of panel i+1 behind
+            # the gathers on panel i.
+            pl.BlockSpec((k, tile_i), panel2),                # nbr
+            pl.BlockSpec((latf.shape[0], k, tile_i),
+                         lambda t, p, i: (0, 0, i)),          # latf
+            pl.BlockSpec((w.shape[0], k, tile_i),
+                         lambda t, p, i: (0, 0, i)),          # w
+            pl.BlockSpec((b, n), full3),                      # psi0
+            pl.BlockSpec((b, n), full3),                      # nu0
+            pl.BlockSpec((b, tile_i), panel2),                # nu_u
+            pl.BlockSpec((b, 1), full3),                      # kp per draw
+            pl.BlockSpec((b, 1), full3),                      # beta_off
+            pl.BlockSpec((mask.shape[0], tile_i), panel2),    # ctrl mask
+            pl.BlockSpec((b, tile_i), panel2),                # lamsum
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(nbr.astype(jnp.int32), latf.astype(jnp.float32),
+      w.astype(jnp.float32), psi.astype(jnp.float32),
+      nu.astype(jnp.float32), nu_u.astype(jnp.float32),
+      _gain_col(kp, b, "kp"), _gain_col(beta_off, b, "beta_off"), mask,
+      _lamsum_rows(lamsum, b, n))
+    if record_beta:
+        return out[0], out[1], out[2], out[3]
+    return out[0], out[1], out[2], None

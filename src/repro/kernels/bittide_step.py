@@ -108,8 +108,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["bittide_step_pallas", "bittide_fused_pallas",
            "bittide_tiled_fused_pallas", "select_engine", "fused_vmem_bytes",
-           "tiled_vmem_bytes", "TILE", "SUBLANE", "VMEM_BUDGET_BYTES",
-           "RESIDENT_N_MAX", "TILE_J_MAX"]
+           "tiled_vmem_bytes", "sparse_vmem_bytes", "TILE", "SUBLANE",
+           "VMEM_BUDGET_BYTES", "RESIDENT_N_MAX", "TILE_J_MAX"]
 
 TILE = 128     # MXU/VPU-aligned tile edge (lane axis)
 SUBLANE = 8    # float32 sublane quantum (batch axis of the fused kernel)
@@ -366,11 +366,29 @@ def tiled_vmem_bytes(b: int, n: int, c: int, tile_j: int) -> int:
                 + 2 * n)            # deg, ctrl mask
 
 
+def sparse_vmem_bytes(b: int, n: int, k: int, tile_i: int,
+                      table_rows: int = 1) -> int:
+    """Working-set estimate for the sparse ELL engine.
+
+    Per-node state (ψ/ν carries, staging, inputs, outputs) is fully
+    VMEM-resident — the gather needs every source node — while the
+    slot-major neighbor tables stream as (·, K, tile_i) row panels, ×2
+    for the pipeline's double buffering.  ``table_rows`` is the tables'
+    leading axis: 1 shared, B with per-draw latencies/weights.
+    """
+    return 4 * (6 * b * n               # ψ/ν carry + staging + psi0/nu0
+                + 2 * b * n             # psi/nu final outputs
+                + 2 * (1 + 2 * table_rows) * k * tile_i  # nbr+latf+w panels
+                + 4 * b * tile_i        # nu_u/lamsum/rec panels + mask
+                + 2 * b)                # kp, beta_off gain columns
+
+
 def select_engine(b: int, n: int, c: int,
-                  vmem_budget: int = VMEM_BUDGET_BYTES):
+                  vmem_budget: int = VMEM_BUDGET_BYTES,
+                  max_deg=None):
     """Tile-size dispatch heuristic: (engine, tile_j) for padded (B, N, C).
 
-    Replaces the old VMEM cliff (fused-or-per-step-fallback) with three
+    Replaces the old VMEM cliff (fused-or-per-step-fallback) with four
     regimes:
 
     - ``("fused", n)`` — the whole adjacency stays VMEM-resident and is
@@ -378,8 +396,17 @@ def select_engine(b: int, n: int, c: int,
     - ``("tiled", tj)`` — adjacency streamed as (C, N, tj) column panels,
       double-buffered from HBM; tj is the widest multiple of TILE that
       divides n, is at most TILE_J_MAX, and fits the budget.
-    - ``("per-step", 0)`` — nothing fits (huge C·N); the per-period tiled
-      2-D kernel is the only option left.
+    - ``("sparse", ti)`` — only reachable when the caller supplies
+      ``max_deg`` (the padded in-degree K of the ELL tables): per-period
+      cost drops from O(N²) to O(N·K) with the slot-major neighbor
+      tables streamed in (·, K, ti) node panels.  Chosen when every dense
+      working set is over budget but the O(B·N) resident state still
+      fits — the 10⁵–10⁶-node bounded-degree regime.
+    - ``("per-step", 0)`` — nothing fits (huge C·N, no degree bound);
+      the per-period tiled 2-D kernel is the only option left.
+
+    Callers without neighbor-table information omit ``max_deg`` and get
+    the historical three-regime behavior unchanged.
     """
     if n <= RESIDENT_N_MAX and fused_vmem_bytes(b, n, c) <= vmem_budget:
         return "fused", n
@@ -388,6 +415,14 @@ def select_engine(b: int, n: int, c: int,
         if n % tj == 0 and tiled_vmem_bytes(b, n, c, tj) <= vmem_budget:
             return "tiled", tj
         tj -= TILE
+    if max_deg is not None:
+        ti = min(n, TILE_J_MAX)
+        while ti >= TILE:
+            if (n % ti == 0
+                    and sparse_vmem_bytes(b, n, int(max_deg), ti)
+                    <= vmem_budget):
+                return "sparse", ti
+            ti -= TILE
     return "per-step", 0
 
 

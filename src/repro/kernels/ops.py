@@ -65,8 +65,11 @@ import numpy as np
 from repro.core.frame_model import LinkParams, OMEGA_NOM, broadcast_gain
 from repro.core.topology import Topology
 
-from .bittide_step import (SUBLANE, TILE, bittide_fused_pallas, bittide_step_pallas,
-                           bittide_tiled_fused_pallas, select_engine)
+from .bittide_sparse import bittide_sparse_pallas, ellify, max_in_degree
+from .bittide_step import (SUBLANE, TILE, TILE_J_MAX, VMEM_BUDGET_BYTES,
+                           bittide_fused_pallas, bittide_step_pallas,
+                           bittide_tiled_fused_pallas, select_engine,
+                           sparse_vmem_bytes)
 from .ref import (bittide_dense_multistep_ref, bittide_dense_step_ref,
                   node_occupancy_ref)
 
@@ -306,6 +309,37 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
         ctrl_mask=ctrl_mask, record_beta=record_beta, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
+                                             "record_every", "tile_i",
+                                             "interpret", "record_beta"))
+def _sparse_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, nbr, latf, w,
+                   lamsum, dt_frames, num_records, record_every, tile_i,
+                   interpret, record_beta: bool = False):
+    """jit entry for the sparse ELL engine; one compile per (B, N, K, statics).
+
+    Traced arguments (data, never compile keys — scenario segments AND
+    chaos draws swap them against ONE compiled kernel):
+      psi, nu, nu_u: (B_pad, N_pad) float32 state.
+      kp, beta_off: (B_pad,) per-draw controller gains.
+      ctrl_mask: (N_pad,) shared or (B_pad, N_pad) per-draw enables.
+      nbr: (K, N_pad) int32 slot-major neighbor table.
+      latf, w: (1 | B_pad, K, N_pad) slot latency (frames) / weight
+        tables — per-draw rows carry per-draw LinkDrop victims and
+        heterogeneous cable draws, which the dense lanes cannot trace.
+      lamsum: (B_pad, N_pad) per-node λeff fold.
+
+    Static compile keys: ``dt_frames``, ``num_records`` /
+    ``record_every``, ``tile_i`` (node-panel width), ``interpret``,
+    ``record_beta``.
+
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
+    """
+    return bittide_sparse_pallas(
+        psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off, dt_frames,
+        num_records=num_records, record_every=record_every, tile_i=tile_i,
+        ctrl_mask=ctrl_mask, record_beta=record_beta, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
                                              "num_records", "record_every",
                                              "interpret", "use_ref",
@@ -392,6 +426,44 @@ def _pad_state(state: np.ndarray, b_pad: int, n_pad: int) -> jnp.ndarray:
     return jnp.asarray(out)
 
 
+def _resolve_init(init, b: int, n: int, b_pad: int, n_pad: int, nu_u):
+    """Seed (psi0, nu0) from ``init`` (a prior result or a (ψ, ν) pair)."""
+    if init is None:
+        return jnp.zeros_like(nu_u), nu_u
+    init_psi = init[1] if isinstance(init, DenseResult) else init[0]
+    init_nu = init.nu if isinstance(init, DenseResult) else init[1]
+    if init_nu is None:
+        raise ValueError("init DenseResult lacks .nu (produced by a "
+                         "pre-chaining build?)")
+    init_psi = np.atleast_2d(init_psi)
+    init_nu = np.atleast_2d(init_nu)
+    for name, arr in (("psi", init_psi), ("nu", init_nu)):
+        if arr.shape != (b, n):
+            raise ValueError(
+                f"init {name} must be (B, N) = ({b}, {n}), got "
+                f"{arr.shape}")
+    return _pad_state(init_psi, b_pad, n_pad), _pad_state(init_nu, b_pad,
+                                                          n_pad)
+
+
+def _resolve_mask(ctrl_mask, b: int, n: int, b_pad: int, n_pad: int):
+    """Pad the controller-enable mask — (N,) shared or (B, N) per-draw —
+    to kernel layout (padding nodes/draws stay enabled; inert anyway)."""
+    mask_np = (None if ctrl_mask is None
+               else np.asarray(ctrl_mask, np.float32))
+    if mask_np is not None and mask_np.ndim == 2:
+        if mask_np.shape != (b, n):
+            raise ValueError(f"per-draw ctrl_mask must be ({b}, {n}), got "
+                             f"{mask_np.shape}")
+        mask_pad = np.ones((b_pad, n_pad), np.float32)
+        mask_pad[:b, :n] = mask_np
+    else:
+        mask_pad = np.ones((n_pad,), np.float32)
+        if mask_np is not None:
+            mask_pad[:n] = mask_np
+    return mask_pad
+
+
 def _link_rows(links: LinkParams, b: int, num_edges: int):
     """Normalize LinkParams to per-draw (B, E) latency/beta0 rows.
 
@@ -458,6 +530,84 @@ def _lamsum_host(topo: Topology, beta0: np.ndarray, edge_w, b_rows: int,
     return out.astype(np.float32)
 
 
+def _sparse_tile(b_pad: int, n_pad: int, k: int, rows: int,
+                 interp: bool) -> int:
+    """Default node-panel width for the sparse engine.
+
+    Single panel (tables resident alongside the state) whenever the
+    working set fits — or always under interpret, where VMEM is not
+    enforced; otherwise the widest multiple of TILE dividing N that
+    fits the budget (falling back to TILE and letting the kernel's own
+    VMEM check raise if even that cannot fit)."""
+    if interp or sparse_vmem_bytes(b_pad, n_pad, k, n_pad,
+                                   rows) <= VMEM_BUDGET_BYTES:
+        return n_pad
+    ti = min(n_pad, TILE_J_MAX)
+    while ti > TILE:
+        if n_pad % ti == 0 and sparse_vmem_bytes(
+                b_pad, n_pad, k, ti, rows) <= VMEM_BUDGET_BYTES:
+            return ti
+        ti -= TILE
+    return TILE
+
+
+def _pad_table_rows(tbl, b_pad: int):
+    """Pad a per-draw (B, K, N) ELL table to (B_pad, K, N) by repeating
+    draw 0 (padding draws are dead rows; shared (1, K, N) passes through)."""
+    if tbl.shape[0] in (1, b_pad):
+        return tbl
+    pad = jnp.broadcast_to(tbl[:1],
+                           (b_pad - tbl.shape[0],) + tbl.shape[1:])
+    return jnp.concatenate([tbl, pad], axis=0)
+
+
+def _run_sparse(topo: Topology, lat_be, beta0_be, beta0_batched: bool,
+                batched: bool, edge_w_np, ppm_u, b: int, n: int, kp,
+                beta_off, dt: float, omega_nom: float, num_records: int,
+                record_every: int, tile_j, init, ctrl_mask,
+                record_beta: bool, interp: bool) -> DenseResult:
+    """The sparse ELL lane of :func:`simulate_ensemble_dense`.
+
+    No densify, no latency classes: the slot tables carry every edge's
+    own latency (frames) directly, so fully heterogeneous per-draw links
+    AND per-draw edge weights (LinkDrop victims) are traced data here —
+    the regimes the dense lanes must reject.
+    """
+    per_draw_w = edge_w_np is not None and edge_w_np.ndim == 2
+    n_pad = ((n + TILE - 1) // TILE) * TILE
+    lat_tab = (lat_be if batched else lat_be[0]) * omega_nom
+    nbr, latf, w = ellify(topo, lat_tab, edge_w=edge_w_np, n_pad=n_pad)
+    rows_l = b if (beta0_batched or per_draw_w) else 1
+    beta0_arg = beta0_be if beta0_batched else beta0_be[0][None]
+    lamsum_rows = _lamsum_host(topo, beta0_arg, edge_w_np, rows_l, n_pad)
+    nu_u, b_pad = _pad_batch(ppm_u, n, n_pad)
+    psi0, nu0 = _resolve_init(init, b, n, b_pad, n_pad, nu_u)
+    mask_pad = _resolve_mask(ctrl_mask, b, n, b_pad, n_pad)
+    lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
+    lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
+    latf = _pad_table_rows(latf, b_pad)
+    w = _pad_table_rows(w, b_pad)
+    k = nbr.shape[0]
+    rows_t = max(latf.shape[0], w.shape[0])
+    ti = (int(tile_j) if tile_j is not None
+          else _sparse_tile(b_pad, n_pad, k, rows_t, interp))
+
+    psi_f, nu_f, rec, brec = _sparse_engine(
+        psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
+        jnp.asarray(mask_pad), nbr, latf, w, jnp.asarray(lamsum_pad),
+        float(omega_nom * dt), int(num_records), int(record_every),
+        int(ti), interp, bool(record_beta))
+
+    freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
+    beta = (np.ascontiguousarray(
+        np.transpose(np.asarray(brec)[:, :b, :n], (1, 0, 2)))
+        if record_beta else None)
+    return DenseResult(
+        np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
+        np.asarray(psi_f)[:b, :n], "sparse", ti,
+        nu=np.asarray(nu_f)[:b, :n], beta=beta)
+
+
 def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             steps: int, kp, dt: float = 1e-3,
                             beta_off=0.0, record_every: int = 1,
@@ -490,7 +640,10 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
       use_ref: run the jnp multistep oracle instead of the Pallas kernel.
       engine: "auto" (tile-size heuristic via ``select_engine``), or force
         "fused" (VMEM-resident adjacency), "tiled" (HBM-streamed j
-        panels), or "per-step" (scan-of-kernels fallback).
+        panels), "sparse" (edge-major ELL gather for bounded-degree
+        mega-scale graphs — also the only compiled lane accepting
+        per-draw (B, E) ``edge_w`` and fully heterogeneous per-draw
+        latencies), or "per-step" (scan-of-kernels fallback).
       tile_j: j-panel width for the tiled engine (defaults to the
         heuristic's choice; must be a multiple of TILE dividing padded N).
       init: optional ``(psi, nu)`` pair of (B, N) arrays (or a prior
@@ -505,7 +658,9 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         pinning the dense class axis (scenario segments share one global
         class set so every segment hits one compiled kernel).
       edge_w: optional (E,) edge weights; weight 0 removes a (dropped)
-        link from the error aggregation.
+        link from the error aggregation.  A (B, E) per-draw matrix (chaos
+        campaigns with per-draw LinkDrop victims) routes to the sparse
+        lane, where weights live in traced slot tables.
       record_beta: also record the per-node net occupancy β_i =
         Σ_{e→i} w_e·β_e (frames) in-kernel at every record point — the
         paper's central measured quantity (bounded buffer excursions,
@@ -532,6 +687,46 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
 
     batched, lat_be, beta0_be, beta0_batched = _link_rows(
         links, b, topo.num_edges)
+    interp = _auto_interpret(interpret)
+
+    # --- sparse ELL lane -------------------------------------------------
+    # Decided BEFORE densify: at the sparse regime's 10⁵–10⁶-node scale a
+    # (C, N, N) stack must never be materialized, and per-draw edge
+    # weights exist only as slot tables.
+    edge_w_np = None if edge_w is None else np.asarray(edge_w, np.float64)
+    per_draw_w = edge_w_np is not None and edge_w_np.ndim == 2
+    if per_draw_w and edge_w_np.shape != (b, topo.num_edges):
+        raise ValueError(
+            f"per-draw edge_w must be (B, E) = ({b}, {topo.num_edges}), "
+            f"got {edge_w_np.shape}")
+    sparse = engine == "sparse"
+    if engine == "auto" and not use_ref:
+        # Probe the dispatch heuristic with the degree bound: bounded-
+        # degree mega-scale topologies route to the sparse lane when no
+        # dense working set fits (same class count the dense path would
+        # compute, derived at edge-list cost).
+        classes_probe, _ = latency_classes(
+            lat_be[0] * omega_nom, lat_classes=lat_classes, warn=False)
+        b_probe = ((b + SUBLANE - 1) // SUBLANE) * SUBLANE
+        n_probe = ((n + TILE - 1) // TILE) * TILE
+        sparse = select_engine(b_probe, n_probe, len(classes_probe),
+                               max_deg=max_in_degree(topo))[0] == "sparse"
+    if per_draw_w and not sparse:
+        raise ValueError(
+            "per-draw (B, E) edge_w needs the sparse or segment-sum "
+            "engine (the dense (C, N, N) adjacency stacks are shared "
+            "across draws)")
+    if sparse:
+        if use_ref:
+            raise ValueError("use_ref does not support the sparse engine "
+                             "(validate against segment-sum instead)")
+        return _run_sparse(
+            topo, lat_be, beta0_be, beta0_batched, batched, edge_w_np,
+            ppm_u, b, n, kp, beta_off, dt, omega_nom, num_records,
+            record_every, tile_j, init, ctrl_mask, bool(record_beta),
+            interp)
+    # ---------------------------------------------------------------------
+
     if beta0_batched and use_ref:
         raise ValueError("use_ref does not support per-draw beta0 (the "
                          "oracle's lam_eff tensor is shared across draws)")
@@ -561,38 +756,8 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                                b if beta0_batched else 1, n_pad)
 
     nu_u, b_pad = _pad_batch(ppm_u, n, n_pad)
-    if init is None:
-        psi0, nu0 = jnp.zeros_like(nu_u), nu_u
-    else:
-        init_psi = init[1] if isinstance(init, DenseResult) else init[0]
-        init_nu = init.nu if isinstance(init, DenseResult) else init[1]
-        if init_nu is None:
-            raise ValueError("init DenseResult lacks .nu (produced by a "
-                             "pre-chaining build?)")
-        init_psi = np.atleast_2d(init_psi)
-        init_nu = np.atleast_2d(init_nu)
-        for name, arr in (("psi", init_psi), ("nu", init_nu)):
-            if arr.shape != (b, n):
-                raise ValueError(
-                    f"init {name} must be (B, N) = ({b}, {n}), got "
-                    f"{arr.shape}")
-        psi0 = _pad_state(init_psi, b_pad, n_pad)
-        nu0 = _pad_state(init_nu, b_pad, n_pad)
-    mask_np = (None if ctrl_mask is None
-               else np.asarray(ctrl_mask, np.float32))
-    if mask_np is not None and mask_np.ndim == 2:
-        # Per-draw holdover victims (chaos campaigns): padded draws and
-        # padded nodes stay enabled like the shared row's padding.
-        if mask_np.shape != (b, n):
-            raise ValueError(f"per-draw ctrl_mask must be ({b}, {n}), got "
-                             f"{mask_np.shape}")
-        mask_pad = np.ones((b_pad, n_pad), np.float32)
-        mask_pad[:b, :n] = mask_np
-    else:
-        mask_pad = np.ones((n_pad,), np.float32)
-        if mask_np is not None:
-            mask_pad[:n] = mask_np
-    interp = _auto_interpret(interpret)
+    psi0, nu0 = _resolve_init(init, b, n, b_pad, n_pad, nu_u)
+    mask_pad = _resolve_mask(ctrl_mask, b, n, b_pad, n_pad)
 
     if use_ref:
         chosen, tj = "ref", n_pad

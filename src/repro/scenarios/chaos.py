@@ -21,7 +21,8 @@ The pipeline:
 
 * **One compile, B scenarios**: the scenario compiler lowers the
   per-draw parameters to traced (B, ·) arrays, so the batch runs through
-  ONE compiled engine — segment-sum or any dense Pallas lane — exactly
+  ONE compiled engine — segment-sum, any dense Pallas lane, or the
+  sparse ELL lane — exactly
   like a homogeneous ensemble.  ``scenario.draw(b)`` recovers draw b as
   a standalone single-run scenario that replays bit-identically.
 
@@ -193,7 +194,9 @@ class LinkDropSampler:
     Each draw picks ``drops`` directed edges; the reverse edge of each is
     dropped too (a severed cable kills both directions).  Per-draw edge
     weights change the adjacency itself, so campaigns using this sampler
-    run on the segment-sum engine.
+    run on the segment-sum engine or the sparse ELL lane (whose slot
+    tables carry per-draw weights as traced data); the dense lanes
+    reject them.
     """
 
     t: float
@@ -597,7 +600,7 @@ class ChaosCampaign:
       seed: the single Generator seed — campaigns are reproducible.
       ppm_range: oscillator draws are uniform in ±ppm_range.
       engine: any scenario engine; per-draw LinkDrop victims require
-        "segment-sum".
+        "segment-sum" or "sparse".
       auto_reframe: forwarded to ``run_scenario`` — False, True, or a
         :class:`repro.core.reframing.ReframePolicy`; with it on, draws
         the guard rescues triage as RESCUED-BY-REFRAME.

@@ -48,8 +48,8 @@ compiles exactly once:
   table ``per_draw_classes`` (B, C) plus per-segment edge→class maps
   ``seg_inv`` — traced data, never shapes;
 * per-draw NodeHoldover/NodeReset → ``ctrl_mask`` (B, N);
-* per-draw LinkDrop/LinkRestore → ``edge_w`` (B, E) (segment-sum
-  engine only — dense adjacency stacks are shared across draws).
+* per-draw LinkDrop/LinkRestore → ``edge_w`` (B, E) (segment-sum or
+  sparse engine — dense adjacency stacks are shared across draws).
 
 ``CompiledScenario.num_draws`` records the campaign batch (None for
 plain shared scenarios — every shape then matches the pre-chaos

@@ -310,7 +310,8 @@ class LinkDrop:
     """Take directed ``edges`` down: weight 0 in the error aggregation.
 
     ``edges`` may be a sequence of B per-draw tuples (per-draw victims —
-    segment-sum engine only; the dense adjacency stacks are shared).
+    segment-sum or sparse engine; the dense adjacency stacks are shared
+    across draws).
     """
     t: float
     edges: Tuple[int, ...]
@@ -336,7 +337,7 @@ class LinkRestore:
     buffer at its β0 setpoint, like the hardware's link bring-up; False
     resumes with the occupancy the (virtual) DDC drifted to meanwhile.
     ``edges`` may be a sequence of B per-draw tuples (per-draw victims —
-    segment-sum engine only).
+    segment-sum or sparse engine).
     """
     t: float
     edges: Tuple[int, ...]

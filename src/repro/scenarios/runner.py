@@ -34,6 +34,19 @@ Engines:
                   the device a single time — the chunk loop then replays
                   the jitted engine with zero host rebuilds and zero
                   re-transfers.
+``sparse``        the edge-major ELL Pallas lane
+                  (``repro.kernels.bittide_sparse``) — same telemetry
+                  contract and proportional-controller restriction as the
+                  dense lanes, but O(N·deg) per period: bounded-degree
+                  scenario studies scale to 10⁵–10⁶ nodes.  No latency
+                  classes exist here (every slot carries its edge's own
+                  latency in frames), so fully heterogeneous per-draw
+                  (B, E) links AND per-draw (B, E) edge weights — chaos
+                  campaigns with per-draw LinkDrop victims — run
+                  compiled, the regimes the dense lanes must reject.
+                  Per-segment slot tables are deduped by byte content
+                  (:func:`_build_sparse_tables`), the sparse analogue of
+                  the dense stack builder.
 
 β splicing: occupancy is a pure function of the threaded (ψ, ν, λeff)
 state in relative coordinates, so dense β telemetry splices across
@@ -84,7 +97,8 @@ guard then trips and rotates draws INDIVIDUALLY: the per-chunk trigger
 is evaluated per draw, and only tripping rows receive a rotation
 (untripped rows keep their λeff bit-exactly and log a zero shift row).
 Per-draw LinkDrop/LinkRestore victims change the adjacency itself and
-stay segment-sum-only.
+run on the segment-sum or sparse engines (the dense (C, N, N) stacks
+are shared across draws).
 """
 from __future__ import annotations
 
@@ -104,9 +118,11 @@ from repro.core.frame_model import (EB_INIT, LinkParams, SimConfig,
 from repro.core.reframing import (ReframePolicy, edge_occupancy,
                                   node_net_occupancy, shift_assignment)
 from repro.core.topology import Topology
+from repro.kernels.bittide_sparse import ellify
 from repro.kernels.bittide_step import TILE, select_engine
 from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
-                               _pad_batch, _pad_gain, _perstep_engine,
+                               _pad_batch, _pad_gain, _pad_table_rows,
+                               _perstep_engine, _sparse_engine, _sparse_tile,
                                latency_classes)
 
 from .compiler import CompiledScenario, compile_scenario
@@ -145,10 +161,10 @@ class ScenarioResult:
     recording is off):
 
     * segment-sum engine — per-edge, (T, E) / (B, T, E);
-    * dense Pallas lanes with ``record_beta=True`` — in-kernel per-node
-      net occupancy Σ_{e→i} w_e·β_e, (T, N) / (B, T, N).  Dropped links
-      (weight 0) leave the aggregation, so the dense stream covers live
-      links only.
+    * dense/sparse Pallas lanes with ``record_beta=True`` — in-kernel
+      per-node net occupancy Σ_{e→i} w_e·β_e, (T, N) / (B, T, N).
+      Dropped links (weight 0) leave the aggregation, so the stream
+      covers live links only.
 
     ``lam`` is the (S, E) logical-latency table per segment —
     ``rint(EB_INIT + λeff + ω·l)`` with draw-0 values when λeff is
@@ -429,6 +445,89 @@ def _build_dense_stacks(topo: Topology, comp, cfg: SimConfig,
                         class_rows=per_draw, inv=inv_list)
 
 
+class _SparseTables:
+    """Per-segment ELL slot tables, built once per scenario run.
+
+    The (K, N_pad) neighbor table is topology-determined and shared by
+    every segment; ``latf[si]`` / ``w[si]`` are segment ``si``'s per-edge
+    latency (frames) and weight slot tables ((R, K, N_pad), R ∈ {1, B}),
+    deduped on byte content so swap-back segments reuse one device
+    buffer — the sparse analogue of :class:`_DenseStacks`.  Dropped
+    links keep their slot with weight 0, so K (and every traced shape)
+    is constant across the scenario: one compile serves all segments.
+    """
+
+    def __init__(self, nbr, latf: List, w: List, n_pad: int):
+        self.nbr = nbr
+        self.latf = latf
+        self.w = w
+        self.k = int(nbr.shape[0])
+        self.n_pad = n_pad
+        self.num_unique = len({id(x) for x in latf})
+
+
+def _build_sparse_tables(topo: Topology, comp, cfg: SimConfig,
+                         tile: int = TILE) -> _SparseTables:
+    """Build every segment's slot tables up front (deduped, one device
+    placement per unique (latency, weight) parameter set)."""
+    n_pad = ((topo.num_nodes + tile - 1) // tile) * tile
+    nbr = None
+    by_key, latf_list, w_list = {}, [], []
+    for seg in comp.segments:
+        lat_f = np.asarray(seg.latency_s, np.float64) * cfg.omega_nom
+        w_np = np.asarray(seg.edge_w, np.float64)
+        key = (lat_f.tobytes(), w_np.tobytes())
+        if key not in by_key:
+            nbr_j, latf_j, w_j = ellify(topo, lat_f, edge_w=w_np,
+                                        n_pad=n_pad)
+            if nbr is None:
+                nbr = jax.device_put(nbr_j)
+            by_key[key] = (jax.device_put(latf_j), jax.device_put(w_j))
+        latf_list.append(by_key[key][0])
+        w_list.append(by_key[key][1])
+    return _SparseTables(nbr, latf_list, w_list, n_pad)
+
+
+def _prep_sparse_segment(topo: Topology, links_seg: LinkParams, seg,
+                         ctrl: ControllerConfig, ppm2d: np.ndarray,
+                         cfg: SimConfig, tables: _SparseTables,
+                         seg_index: int, interp: bool):
+    """Host-side prep for one sparse-lane segment (once per segment).
+
+    Mirrors :func:`_prep_dense_segment`: picks up the precomputed slot
+    tables, folds λeff into traced (B_pad, N_pad) lamsum rows (per-draw
+    when re-establishment or per-draw edge weights made the fold
+    per-draw), pads gains/mask/ν_u, and fixes the node-panel width.
+    Every returned shape is scenario-constant, so the chunk loop replays
+    one compiled engine.
+    """
+    b, n = ppm2d.shape
+    n_pad = tables.n_pad
+    beta0 = np.asarray(links_seg.beta0, np.float64)
+    w_np = np.asarray(seg.edge_w, np.float64)
+    rows_l = b if (beta0.ndim == 2 or w_np.ndim == 2) else 1
+    lamsum_rows = _lamsum_host(topo, beta0 if beta0.ndim == 2
+                               else beta0[None], w_np, rows_l, n_pad)
+    nu_u, b_pad = _pad_batch(ppm2d, n, n_pad)
+    lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
+    lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
+    latf_j = _pad_table_rows(tables.latf[seg_index], b_pad)
+    w_j = _pad_table_rows(tables.w[seg_index], b_pad)
+    rows_t = max(latf_j.shape[0], w_j.shape[0])
+    ti = _sparse_tile(b_pad, n_pad, tables.k, rows_t, interp)
+    mask_np = np.asarray(seg.ctrl_mask, np.float32)
+    if mask_np.ndim == 2:
+        mask_pad = np.ones((b_pad, n_pad), np.float32)
+        mask_pad[:b, :n] = mask_np
+    else:
+        mask_pad = np.ones((n_pad,), np.float32)
+        mask_pad[:n] = mask_np
+    kp_j = _pad_gain(broadcast_gain(ctrl.kp, b), b_pad)
+    boff_j = _pad_gain(broadcast_gain(ctrl.beta_off, b, "beta_off"), b_pad)
+    return (latf_j, w_j, jnp.asarray(lamsum_pad), jnp.asarray(mask_pad),
+            nu_u, kp_j, boff_j, ti, b_pad, n_pad)
+
+
 def _lam_stack(topo: Topology, inv: np.ndarray, lam_eff_row, edge_w,
                c: int, n_pad: int):
     """(C, N_pad, N_pad) λeff tensor for one draw on the per-step lane.
@@ -555,8 +654,10 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         B must equal the scenario's ``num_draws`` and draw ``b`` sees
         exactly the events of ``scenario.draw(b)``.
       scenario: the event list (compiled here unless ``compiled`` given).
-      engine: "segment-sum" (default) or a dense Pallas lane
-        ("auto" | "fused" | "tiled" | "per-step").
+      engine: "segment-sum" (default), a dense Pallas lane
+        ("auto" | "fused" | "tiled" | "per-step"), or "sparse" (the
+        edge-major ELL lane — bounded-degree mega-scale topologies,
+        per-draw LinkDrop victims, heterogeneous per-draw links).
       chunk_records: kernel-launch granularity override; must divide
         every segment's record count.  Default: the compiler's GCD.
       compiled: reuse a previous :func:`compile_scenario` result.
@@ -602,7 +703,8 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 f"{s.records} records (compiler GCD: {comp.chunk_records})")
 
     dense = engine in _DENSE_ENGINES
-    if not dense and engine != "segment-sum":
+    sparse = engine == "sparse"
+    if not dense and not sparse and engine != "segment-sum":
         raise ValueError(f"unknown engine {engine!r}")
     if comp.num_draws is not None and (single
                                        or ppm_u.shape[0] != comp.num_draws):
@@ -621,11 +723,13 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         if any(np.asarray(s.edge_w).ndim == 2 for s in comp.segments):
             raise ValueError(
                 "per-draw LinkDrop/LinkRestore victims need the "
-                "segment-sum engine (the dense (C, N, N) adjacency "
-                "stacks are shared across draws)")
+                "segment-sum or sparse engine (the dense (C, N, N) "
+                "adjacency stacks are shared across draws)")
+    if dense or sparse:
+        kind = "dense" if dense else "sparse"
         if ctrl.kind != "proportional":
             raise ValueError(
-                f"dense engines implement the proportional controller; "
+                f"{kind} engines implement the proportional controller; "
                 f"{ctrl.kind!r} runs on the segment-sum engine")
         if cfg.quantize_beta or cfg.telemetry_noise_ppm:
             raise ValueError(
@@ -673,9 +777,11 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     guard_cache: dict = {}     # edge_w bytes -> (deg_w, Laplacian pinv)
     rec_done, total = 0, comp.total_records
     eng_label, tile_j = engine, 0
-    # All segments' dense adjacency stacks, built once with diff-updates
-    # (the fused/tiled/per-step chunk loops never re-densify A).
+    # All segments' dense adjacency stacks / sparse slot tables, built
+    # once (the chunk loops never re-densify A or re-scatter slots).
     stacks = _build_dense_stacks(topo, comp, cfg) if dense else None
+    tables = _build_sparse_tables(topo, comp, cfg) if sparse else None
+    interp = _auto_interpret(interpret)
 
     def live_state():
         """Exact threaded (ψ, ν) — (N,)/(B, N) float host views.  Every
@@ -684,7 +790,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         if state is None and psi_pad is None:
             return (np.zeros_like(ppm_u, np.float64),
                     ppm_u.astype(np.float64) * 1e-6)
-        if dense:
+        if dense or sparse:
             psi_now = np.asarray(psi_pad)[:b, :n]
             nu_now = np.asarray(nu_pad)[:b, :n]
             return (psi_now[0], nu_now[0]) if single else (psi_now, nu_now)
@@ -750,6 +856,59 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                     return np.array([est.max()])
                 return est.max(axis=tuple(range(1, est.ndim)))
 
+        if sparse:
+            # Sparse ELL lane: same once-per-segment prep / chunk-replay
+            # split as the dense lanes, but the traced tables are the
+            # precomputed slot tables — per-draw weights and fully
+            # heterogeneous per-draw latencies included.
+            (latf_j, w_j, lamsum_j, mask_j, nu_u_j, kp_j, boff_j, ti,
+             b_pad, n_pad) = _prep_sparse_segment(
+                topo, links_seg, seg, ctrl, np.atleast_2d(ppm_seg), cfg,
+                tables, si, interp)
+            eng_label, tile_j = "sparse", ti
+            if psi_pad is None:
+                psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
+            dt_frames = float(cfg.omega_nom * cfg.dt)
+            chunks_in_seg = seg.records // chunk
+            for ci in range(chunks_in_seg):
+                psi_pad, nu_pad, rec, brec = _sparse_engine(
+                    psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j,
+                    tables.nbr, latf_j, w_j, lamsum_j, dt_frames,
+                    int(chunk), int(cfg.record_every), int(ti), interp,
+                    rb_dense)
+                if rb_dense:
+                    beta_chunks.append(
+                        np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
+                freq_chunks.append(
+                    np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                launches += 1
+                rec_done += chunk
+                if policy is not None and rec_done < total:
+                    # Same per-draw guard trip + rotation as the dense
+                    # lanes (the in-kernel record is the identical
+                    # per-node net occupancy quantity).
+                    tripped = edge_estimates(beta_chunks[-1]) >= guard
+                    if tripped.any():
+                        psi_now, nu_now = live_state()
+                        lam_eff, shift = _rotation_shifts(
+                            topo, lam_eff, psi_now, nu_now, lat_frames,
+                            seg.edge_w, "graph", policy.target,
+                            lap_pinv=lap_pinv, rows_mask=tripped)
+                        reframes.append(AppliedReframe(
+                            record=rec_done, time=rec_done * rec_period,
+                            shift=shift, auto=True))
+                        if ci + 1 < chunks_in_seg:
+                            links_seg = LinkParams(
+                                latency_s=seg.latency_s,
+                                beta0=np.array(lam_eff, copy=True))
+                            (latf_j, w_j, lamsum_j, mask_j, nu_u_j, kp_j,
+                             boff_j, ti, b_pad, n_pad) = \
+                                _prep_sparse_segment(
+                                    topo, links_seg, seg, ctrl,
+                                    np.atleast_2d(ppm_seg), cfg, tables,
+                                    si, interp)
+            continue
+
         if dense:
             # Segment prep — λeff folds, padding, stack lookup — happens
             # ONCE per segment; the chunk loop below replays the jitted
@@ -763,7 +922,6 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             if psi_pad is None:
                 psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
             dt_frames = float(cfg.omega_nom * cfg.dt)
-            interp = _auto_interpret(interpret)
             kp_np = np.asarray(kp_j)
             boff_np = np.asarray(boff_j)
             chunks_in_seg = seg.records // chunk
@@ -871,9 +1029,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                     links_seg = LinkParams(latency_s=seg.latency_s,
                                            beta0=np.array(lam_eff, copy=True))
 
-    axis = 1 if (dense or not single) else 0
+    axis = 1 if (dense or sparse or not single) else 0
     freq = np.concatenate(freq_chunks, axis=axis)
-    if dense:
+    if dense or sparse:
         if single:
             freq = freq[0]
         psi_f = np.asarray(psi_pad)[:b, :n]

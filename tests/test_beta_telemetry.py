@@ -1,14 +1,15 @@
 """In-kernel β (buffer occupancy) telemetry: parity, oracles, envelopes.
 
-The dense Pallas engines record the per-node net occupancy
+The dense and sparse Pallas engines record the per-node net occupancy
 b_i = Σ_{e→i} w_e·β_e in-kernel at every record point
 (``record_beta=True``).  These tests pin the telemetry against three
 independent references:
 
   * the β parity matrix — the in-kernel record equals the segment-sum
     simulator's per-edge β reconstruction (scatter-add by destination)
-    to 1e-6 frames on all three engines × {FC8, torus3d(8)}, in the
-    converged bounded-occupancy regime the paper operates in;
+    to 1e-6 frames on all four engines × {FC8, torus3d(8)}, in the
+    converged bounded-occupancy regime the paper operates in
+    (``tests/engine_harness.py`` holds the cases + tolerance policy);
   * the exact frame-level oracle — with zero ppm offsets the discrete
     frame simulator's integer occupancies match the in-kernel float
     record EXACTLY (zero tolerance);
@@ -26,53 +27,32 @@ precomputed adjacency stacks dedupe swap-back segments.
 import numpy as np
 import pytest
 
+from engine_harness import (BETA_PARITY_CASES, KERNEL_ENGINES,
+                            node_recon as _node_recon,
+                            zero_mean_ppm as _zero_mean_ppm)
 from repro.core import (ControllerConfig, SimConfig, fully_connected,
                         make_links, simulate, torus3d)
 from repro.core.envelopes import (check_occupancy_envelope, default_slack,
                                   freq_step_envelope, latency_step_envelope)
 from repro.core.frame_level import simulate_frames
 from repro.kernels import simulate_ensemble_dense, simulate_fused
-from repro.kernels.ops import _fused_engine, _perstep_engine
+from repro.kernels.ops import (_fused_engine, _perstep_engine,
+                               _sparse_engine)
 from repro.scenarios import (FreqStep, LatencyStep, Mark, Scenario,
                              edges_between, run_scenario)
 from repro.scenarios.runner import _build_dense_stacks
 from repro.scenarios.compiler import compile_scenario
 
-ENGINES = ["fused", "tiled", "per-step"]
-
-
-def _zero_mean_ppm(n, scale, seed=7):
-    ppm = np.random.default_rng(seed).uniform(-scale, scale, n)
-    return (ppm - ppm.mean()).astype(np.float32)
-
-
-def _node_recon(topo, beta_edges):
-    """(T, N) float64 per-node net occupancy from per-edge (T, E) records."""
-    out = np.zeros(beta_edges.shape[:-1] + (topo.num_nodes,))
-    dst = np.asarray(topo.dst)
-    for t in range(beta_edges.shape[0]):
-        np.add.at(out[t], dst, beta_edges[t].astype(np.float64))
-    return out
+ENGINES = KERNEL_ENGINES
 
 
 # ------------------------------------------------------------ parity matrix
 
-# Converged bounded-occupancy regimes (the paper's operating point): the
-# gain is high enough that buffers settle within the run and |β| stays
-# O(1) frames — which is also what makes an absolute 1e-6-frame float32
-# comparison meaningful.  Δ·kp·λ_max stays below 1 on both topologies.
-PARITY_CASES = [
-    # (topo, kp, ppm_scale, steps, record_every)
-    (fully_connected(8), 2e-7, 0.5, 120, 12),
-    (torus3d(8), 6e-7, 0.25, 96, 12),
-]
-
-
 @pytest.mark.slow
 @pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize(
-    "topo,kp,ppm_scale,steps,rec", PARITY_CASES,
-    ids=[c[0].name for c in PARITY_CASES])
+    "topo,kp,ppm_scale,steps,rec", BETA_PARITY_CASES,
+    ids=[c[0].name for c in BETA_PARITY_CASES])
 def test_beta_parity_matrix_vs_segment_sum(topo, kp, ppm_scale, steps, rec,
                                            engine):
     """Acceptance: in-kernel β == segment-sum per-edge reconstruction to
@@ -298,7 +278,7 @@ def test_scenario_split_beta_bit_identical(engine):
 def test_scenario_beta_no_recompile_across_segments():
     """Acceptance: a multi-segment scenario with record_beta=True replays
     ONE compiled β-variant kernel — re-running against the warm cache
-    adds zero entries on the fused and per-step lanes."""
+    adds zero entries on the fused, per-step, and sparse lanes."""
     topo = fully_connected(8)
     links = make_links(topo, cable_m=2.0)
     ppm = _zero_mean_ppm(8, 2.0)
@@ -306,7 +286,8 @@ def test_scenario_beta_no_recompile_across_segments():
     sw = edges_between(topo, 0, 2)
     sc = Scenario(events=(LatencyStep(t=0.12, edges=sw, cable_m=1000.0),))
     for eng, cache in [("fused", _fused_engine),
-                       ("per-step", _perstep_engine)]:
+                       ("per-step", _perstep_engine),
+                       ("sparse", _sparse_engine)]:
         run_scenario(topo, links, ControllerConfig(kp=2e-8), ppm, sc, cfg,
                      engine=eng, record_beta=True)   # warm
         size0 = cache._cache_size()

@@ -23,10 +23,10 @@ scenarios simultaneously.  These tests pin:
 import numpy as np
 import pytest
 
+from engine_harness import SCENARIO_ENGINES, no_new_compiles
 from repro.core import (ControllerConfig, ReframePolicy, SimConfig,
                         fully_connected, make_links, torus3d)
-from repro.core.frame_model import _jitted_run, _jitted_run_ensemble
-from repro.kernels.ops import _fused_engine, _perstep_engine
+from repro.core.frame_model import _jitted_run
 from repro.scenarios import (VERDICT_ENVELOPE, VERDICT_OVERFLOW, VERDICT_PASS,
                              VERDICT_RESCUED, ChaosCampaign, DriftRampSampler,
                              FreqStep, FreqStepSampler, HoldoverSampler,
@@ -89,19 +89,52 @@ def test_campaign_build_shapes():
     assert np.abs(ppm).max() <= camp.ppm_range
 
 
-def test_linkdrop_sampler_requires_segment_sum():
+@pytest.mark.parametrize("engine", ["fused", "tiled", "per-step"])
+def test_linkdrop_sampler_rejected_on_dense_lanes(engine):
+    """Per-draw LinkDrop victims need per-draw (B, E) edge weights; the
+    dense lanes share one (C, N, N) adjacency stack across draws and
+    must keep rejecting them with the clear redirect."""
     camp = ChaosCampaign(
         topo=TOPO, ctrl=CTRL,
         samplers=(LinkDropSampler(t=0.12, t_restore=0.24),),
-        num_draws=4, links=LINKS, cfg=_cfg(), engine="fused")
-    with pytest.raises(ValueError, match="segment-sum"):
+        num_draws=4, links=LINKS, cfg=_cfg(), engine=engine)
+    with pytest.raises(ValueError, match="segment-sum or sparse"):
         camp.run()
+
+
+def test_linkdrop_campaign_runs_on_sparse_one_compile():
+    """Satellite regression: per-draw LinkDrop victim edges run COMPILED
+    on the sparse ELL lane (dropped links are slot weights = 0, traced
+    as data), matching the segment-sum batch, and a reseeded campaign
+    with different victims adds zero sparse cache entries."""
+    cfg = _cfg(steps=240, record_every=12)
+
+    def camp(seed):
+        return ChaosCampaign(
+            topo=TOPO, ctrl=CTRL,
+            samplers=(FreqStepSampler(t=0.06, ppm_range=(1.0, 4.0)),
+                      LinkDropSampler(t=0.1, t_restore=0.16)),
+            num_draws=4, seed=seed, ppm_range=8.0, links=LINKS, cfg=cfg)
+
+    scenario, ppm = camp(5).build()
+    res = run_scenario(TOPO, LINKS, CTRL, ppm, scenario, cfg,
+                       engine="sparse", record_beta=True)
+    assert res.engine == "sparse"
+    ref = run_scenario(TOPO, LINKS, CTRL, ppm, scenario, cfg,
+                       engine="segment-sum", record_beta=True)
+    # reestablish boundaries at kp=2e-8 set a ~2e-6-ppm float32 floor
+    np.testing.assert_allclose(np.asarray(res.freq_ppm),
+                               np.asarray(ref.freq_ppm), rtol=0, atol=2e-5)
+    # different victims + magnitudes are traced data: zero new compiles
+    sc2, ppm2 = camp(9).build()
+    with no_new_compiles():
+        run_scenario(TOPO, LINKS, CTRL, ppm2, sc2, cfg, engine="sparse",
+                     record_beta=True)
 
 
 # ------------------------------------- batch vs single replay, per lane
 
-@pytest.mark.parametrize("engine", ["segment-sum", "fused", "tiled",
-                                    "per-step"])
+@pytest.mark.parametrize("engine", SCENARIO_ENGINES)
 def test_campaign_rows_match_single_draw_replays(engine):
     """Each batch row reproduces its standalone single-scenario replay
     to <1e-6 ppm on every lane (per-draw magnitudes, victims, and cable
@@ -123,15 +156,11 @@ def test_campaign_rows_match_single_draw_replays(engine):
 def test_second_campaign_recompiles_nothing():
     """Different magnitudes, victims, and cable draws are traced DATA:
     a reseeded campaign adds zero cache entries on any engine."""
-    for engine in ("segment-sum", "fused", "tiled", "per-step"):
+    for engine in SCENARIO_ENGINES:
         _campaign(num_draws=4, seed=0, engine=engine).run()
-    sizes = (_jitted_run_ensemble()._cache_size(),
-             _fused_engine._cache_size(), _perstep_engine._cache_size())
-    for engine in ("segment-sum", "fused", "tiled", "per-step"):
-        _campaign(num_draws=4, seed=9, engine=engine).run()
-    assert (_jitted_run_ensemble()._cache_size(),
-            _fused_engine._cache_size(),
-            _perstep_engine._cache_size()) == sizes
+    with no_new_compiles():
+        for engine in SCENARIO_ENGINES:
+            _campaign(num_draws=4, seed=9, engine=engine).run()
 
 
 # ------------------------------------------------- per-draw guard (PR-5 fix)
@@ -287,14 +316,14 @@ def test_campaign_acceptance_1024_draws():
     """ISSUE acceptance: a 1024-draw campaign with per-draw randomized
     FreqStep/DriftRamp/LatencyStep parameters compiles each engine
     exactly once, matches per-draw single-scenario replays to <=1e-6 ppm
-    on all four lanes, classifies every draw, and the shrunk repro
+    on all five lanes, classifies every draw, and the shrunk repro
     reproduces its verdict standalone."""
     camp = _campaign(num_draws=1024, steps=720, ppm_lo=0.05, ppm_hi=4.0)
     scenario, ppm = camp.build()
     rng = np.random.default_rng(11)
     sample = sorted(rng.choice(1024, size=4, replace=False).tolist())
 
-    for engine in ("segment-sum", "fused", "tiled", "per-step"):
+    for engine in SCENARIO_ENGINES:
         res = run_scenario(TOPO, LINKS, CTRL, ppm, scenario, camp.cfg,
                            engine=engine, record_beta=True)
         freq = np.asarray(res.freq_ppm)
@@ -308,17 +337,13 @@ def test_campaign_acceptance_1024_draws():
 
     # exactly-once compile: the full 1024-draw batch, reseeded, adds
     # nothing to any engine cache.
-    sizes = (_jitted_run_ensemble()._cache_size(),
-             _fused_engine._cache_size(), _perstep_engine._cache_size())
     camp2 = _campaign(num_draws=1024, steps=720, seed=8, ppm_lo=0.05,
                       ppm_hi=4.0)
     sc2, ppm2 = camp2.build()
-    for engine in ("segment-sum", "fused", "tiled"):
-        run_scenario(TOPO, LINKS, CTRL, ppm2, sc2, camp2.cfg, engine=engine,
-                     record_beta=True)
-    assert (_jitted_run_ensemble()._cache_size(),
-            _fused_engine._cache_size(),
-            _perstep_engine._cache_size()) == sizes
+    with no_new_compiles():
+        for engine in ("segment-sum", "fused", "tiled", "sparse"):
+            run_scenario(TOPO, LINKS, CTRL, ppm2, sc2, camp2.cfg,
+                         engine=engine, record_beta=True)
 
     result = camp.run()
     assert result.num_draws == 1024

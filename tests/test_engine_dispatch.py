@@ -16,7 +16,8 @@ from repro.core import (ControllerConfig, SimConfig, fully_connected,
                         make_links, simulate, torus3d)
 from repro.kernels import (RESIDENT_N_MAX, TILE, TILE_J_MAX, fused_vmem_bytes,
                            select_engine, simulate_ensemble_dense,
-                           simulate_fused, tiled_vmem_bytes)
+                           simulate_fused, sparse_vmem_bytes,
+                           tiled_vmem_bytes)
 from repro.kernels.bittide_step import VMEM_BUDGET_BYTES
 
 
@@ -34,6 +35,58 @@ def test_select_engine_regimes():
     assert tiled_vmem_bytes(8, 10752, 1, tj) <= VMEM_BUDGET_BYTES
     # A giant batch at a class count where no panel fits -> per-step.
     assert select_engine(4096, 10752, 8)[0] == "per-step"
+
+
+def test_select_engine_sparse_regime_boundaries():
+    """The degree-aware fourth regime: explicit N/deg/VMEM-budget cases
+    pinning every boundary so future tuning can't silently reroute.
+
+    The sparse branch only activates when the caller supplies the ELL
+    slot count ``max_deg``; without it the historical three-regime
+    behavior is bit-for-bit unchanged (test_select_engine_regimes)."""
+    # A degree bound never reroutes a network a dense lane can hold.
+    assert select_engine(8, 128, 1, max_deg=6) == ("fused", 128)
+    assert select_engine(8, 256, 2, max_deg=6) == ("fused", 256)
+    assert select_engine(8, 512, 1, max_deg=6) == ("tiled", TILE_J_MAX)
+
+    # Mega-scale bounded degree: no (C, N, tj) dense panel fits, but the
+    # O(N·K) slot tables + resident O(B·N) state do -> sparse, widest
+    # node panel first.  Without the degree bound: per-step fallback.
+    assert select_engine(8, 49152, 1) == ("per-step", 0)
+    assert select_engine(8, 49152, 1, max_deg=6) == ("sparse", TILE_J_MAX)
+    assert sparse_vmem_bytes(8, 49152, 6, TILE_J_MAX) <= VMEM_BUDGET_BYTES
+
+    # Degree pressure narrows the node panel before giving up...
+    assert select_engine(8, 49152, 1, max_deg=512) == ("sparse", TILE)
+    assert sparse_vmem_bytes(8, 49152, 512, TILE) <= VMEM_BUDGET_BYTES
+    assert sparse_vmem_bytes(8, 49152, 512, TILE_J_MAX) > VMEM_BUDGET_BYTES
+    # ...and a degree no panel can stream falls through to per-step.
+    assert select_engine(8, 49152, 1, max_deg=4096) == ("per-step", 0)
+
+    # The resident (B, N) state itself must fit: past ~57k nodes at B=8
+    # (or under a tighter budget) even degree-6 graphs leave VMEM.
+    assert select_engine(8, 65536, 1, max_deg=6) == ("per-step", 0)
+    assert select_engine(8, 49152, 1, vmem_budget=8 * 2 ** 20,
+                         max_deg=6) == ("per-step", 0)
+    # Giant batches stay on per-step regardless of the degree bound.
+    assert select_engine(4096, 10752, 8, max_deg=6) == ("per-step", 0)
+
+
+def test_auto_dispatch_routes_bounded_degree_to_sparse():
+    """End-to-end: a 2k-node degree-4 graph with 8 latency classes (the
+    (8, 2048, 8) dense working set fits NO panel width) auto-routes to
+    the sparse lane and stamps the result metadata."""
+    from engine_harness import bounded_degree_topo
+    topo = bounded_degree_topo(2000, 4, 0)    # pads to 2048
+    rng = np.random.default_rng(5)
+    cable = rng.choice(np.linspace(2.0, 200.0, 8), size=topo.num_edges)
+    links = make_links(topo, cable_m=cable)
+    assert tiled_vmem_bytes(8, 2048, 8, TILE) > VMEM_BUDGET_BYTES
+    res = simulate_fused(topo, links, rng.uniform(-8, 8, topo.num_nodes),
+                         steps=2, kp=2e-9, record_every=1)
+    assert res.engine == "sparse"
+    assert res[0].shape == (2, topo.num_nodes)
+    assert np.isfinite(res[0]).all()
 
 
 def test_select_engine_tile_divides_padded_n():

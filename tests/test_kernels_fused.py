@@ -2,70 +2,45 @@
 
 The fused Pallas kernels (one ``pallas_call`` advancing many control
 periods with in-kernel telemetry decimation — adjacency VMEM-resident in
-the "fused" engine, HBM-streamed in j panels in the "tiled" engine) are
-validated against two independent implementations: the jnp multistep
-oracle (same dense math, no Pallas) and the production segment-sum
-simulator in ``repro.core.frame_model`` (edge-list math, scan-of-periods)
-— at every record point, over every paper topology, for every engine.
+the "fused" engine, HBM-streamed in j panels in the "tiled" engine,
+edge-major slot tables in the "sparse" engine) are validated against two
+independent implementations: the jnp multistep oracle (same dense math,
+no Pallas) and the production segment-sum simulator in
+``repro.core.frame_model`` (edge-list math, scan-of-periods) — at every
+record point, over every paper topology, for every engine.  The matrix
+itself (topologies, tolerance policy, reference cache) lives in
+``tests/engine_harness.py``, shared with the β-telemetry and chaos
+suites.
 """
 import numpy as np
 import pytest
 
-from repro.core import (ControllerConfig, SimConfig, cube, fully_connected,
-                        hourglass, make_links, random_regular, simulate,
-                        simulate_ensemble, torus3d)
+from engine_harness import (KERNEL_ENGINES, PARITY_REC, PARITY_STEPS,
+                            PARITY_TOPOS, assert_freq_parity, parity_ppm,
+                            run_kernel_engine, segment_sum_reference)
+from repro.core import (ControllerConfig, SimConfig, fully_connected,
+                        make_links, random_regular, simulate,
+                        simulate_ensemble)
 from repro.core.frame_model import OMEGA_NOM, _jitted_run
 from repro.kernels import (densify, simulate_dense, simulate_dense_perstep,
                            simulate_ensemble_dense, simulate_fused)
 from repro.kernels.ops import _fused_engine
 
 
-# The paper's evaluated topologies (§5.3–§5.5, Fig 18's torus family) plus
-# a tile-boundary-crossing random graph whose padded N forces real
-# multi-panel accumulation on the tiled engine (n_pad=384 -> 3 j tiles).
-PARITY_TOPOS = [fully_connected(8), hourglass(4), cube(), torus3d(4),
-                random_regular(300, 3, 0)]
-PARITY_STEPS, PARITY_REC = 120, 12
-_SEGSUM_CACHE = {}
-
-
-def _segment_sum_reference(topo, links, ppm):
-    """Segment-sum trajectory at the decimated record points (cached)."""
-    if topo.name not in _SEGSUM_CACHE:
-        res = simulate(topo, links, ControllerConfig(kp=2e-9),
-                       ppm.astype(np.float32),
-                       SimConfig(dt=1e-3, steps=PARITY_STEPS,
-                                 record_every=PARITY_REC))
-        assert res.engine == "segment-sum"
-        _SEGSUM_CACHE[topo.name] = res.freq_ppm
-    return _SEGSUM_CACHE[topo.name]
-
-
-def _parity_ppm(topo):
-    return np.random.default_rng(7).uniform(-8, 8, topo.num_nodes)
-
-
 @pytest.mark.slow
-@pytest.mark.parametrize("engine", ["fused", "tiled", "per-step"])
+@pytest.mark.parametrize("engine", KERNEL_ENGINES)
 @pytest.mark.parametrize("topo", PARITY_TOPOS, ids=lambda t: t.name)
 def test_parity_matrix_vs_segment_sum(topo, engine):
     """Cross-engine parity matrix: every kernel engine must match the
     segment-sum simulator at ALL record points (proportional controller,
     quantize off) to <= 1e-6 ppm on every paper topology."""
     links = make_links(topo, cable_m=2.0)
-    ppm = _parity_ppm(topo)
-    ref = _segment_sum_reference(topo, links, ppm)
-    if engine == "per-step":
-        res = simulate_dense_perstep(topo, links, ppm, steps=PARITY_STEPS,
-                                     kp=2e-9, dt=1e-3)
-        freq = res[0][PARITY_REC - 1::PARITY_REC]
-    else:
-        res = simulate_fused(topo, links, ppm, steps=PARITY_STEPS, kp=2e-9,
-                             dt=1e-3, record_every=PARITY_REC, engine=engine)
-        freq = res[0]
+    ppm = parity_ppm(topo)
+    ref = segment_sum_reference(topo, links, ppm).freq_ppm
+    res, freq = run_kernel_engine(topo, links, ppm, engine)
     assert res.engine == engine
     assert freq.shape == ref.shape
-    np.testing.assert_allclose(freq, ref, rtol=0, atol=1e-6)
+    assert_freq_parity(freq, ref)
 
 
 def test_parity_matrix_tiled_is_multi_panel_somewhere():

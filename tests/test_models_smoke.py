@@ -1,9 +1,15 @@
 """Per-architecture smoke tests: reduced config, one forward/train/decode
-step on CPU, asserting output shapes and finiteness (spec deliverable f)."""
+step on CPU, asserting output shapes and finiteness (spec deliverable f).
+
+Marked ``model_smoke``: the ModelZoo suite exercises a different subsystem
+than the clock-network engines and dominates the fast gate's wall time, so
+``scripts/ci.sh --fast`` deselects it (the full tier still runs it)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.model_smoke
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import ModelZoo
