@@ -12,7 +12,9 @@
 # is the full PR gate.
 #
 # Writes BENCH_kernels.json at the repo root (the fused/tiled-engine perf
-# trajectory; see benchmarks/README.md).  Exits nonzero if lint or tests
+# trajectory; see benchmarks/README.md) plus RUN_TRACE.jsonl, the bench
+# harness's flight-recorder record (render it with scripts/trace_report.py).
+# Exits nonzero if lint or tests
 # fail, any smoke bench reports FAIL, or the baseline comparison finds a
 # hard gate.
 set -euo pipefail
@@ -64,6 +66,12 @@ if [ "$FAST" -eq 1 ]; then
         python -m pytest -q tests/test_sparse_engine.py
     fi
     echo "ci: sparse smoke (test_sparse_engine) green"
+
+    # Flight-recorder smoke: trace a tiny run_scenario in-process, export
+    # JSONL, render the report, and hard-fail on any traced-run compile —
+    # the whole observability path (record -> export -> render) end to end.
+    python scripts/trace_report.py --selftest > /dev/null
+    echo "ci: trace smoke (trace_report --selftest) green"
 else
     python -m pytest -x -q "$@"
 
@@ -89,7 +97,8 @@ else
          "--smoke) green"
 fi
 
-python -m benchmarks.run --smoke --json BENCH_kernels.json
+python -m benchmarks.run --smoke --json BENCH_kernels.json \
+    --trace RUN_TRACE.jsonl
 python scripts/compare_bench.py BENCH_kernels.json \
     benchmarks/baselines/BENCH_kernels.json
 if [ "$FAST" -eq 1 ]; then

@@ -5,7 +5,13 @@
 
 Hard gates (exit 1):
   - any `pass_*` derived field reporting FAIL in the current run;
-  - a bench present in the baseline but missing (or errored) now.
+  - a bench present in the baseline but missing (or errored) now;
+  - a bench present in the run but MISSING from the baseline — a new
+    lane landed without regenerating the committed baseline, so its
+    trajectory would silently never be tracked;
+  - a `pass_*` gate field present in the baseline but absent from the
+    current run's derived string — a hard gate that silently vanished
+    is a gate that silently stopped gating.
 
 Soft gates (warn only): relative-throughput metrics regressing beyond
 REGRESSION_RATIO — baselines record one machine's CPU-interpret numbers,
@@ -41,6 +47,26 @@ def main(current_path: str, baseline_path: str) -> int:
     for bench in sorted(baseline):
         if bench not in current:
             failed.append(f"{bench}: present in baseline, missing from run")
+            continue
+        base_gates = {k for k in ((baseline[bench].get("derived") or {}))
+                      if k.startswith("pass_")}
+        cur_gates = set((current[bench].get("derived") or {}))
+        for gone in sorted(base_gates - cur_gates):
+            failed.append(f"{bench}: hard gate {gone} present in baseline "
+                          f"but gone from this run")
+
+    missing_baseline = sorted(b for b in current if b not in baseline)
+    if missing_baseline:
+        print("compare_bench: " + "=" * 58)
+        print("compare_bench: MISSING BASELINE LANE — the run produced "
+              "benches the committed baseline has never seen:")
+        for bench in missing_baseline:
+            print(f"compare_bench:   - {bench}")
+            failed.append(f"{bench}: no baseline entry (regenerate with "
+                          f"`python -m benchmarks.run --smoke --json "
+                          f"benchmarks/baselines/BENCH_kernels.json` and "
+                          f"commit it)")
+        print("compare_bench: " + "=" * 58)
 
     warned = 0
     for bench, row in sorted(current.items()):

@@ -391,14 +391,44 @@ def check_occupancy_envelope(times, beta, t0: float, env: EnvelopeSpec,
       env: the closed-form envelope.
       slack: additive slack in frames (see :func:`default_slack`).
       b_pre: (N,) converged pre-event occupancy; default: the last record
-        strictly before t0.
+        strictly before t0 (REQUIRED in watermark mode, which has no
+        record to baseline from).
+
+    ``beta`` may also be in-kernel watermarks
+    (:class:`repro.telemetry.Watermarks`, single-draw) instead of a full
+    record — the mode that makes envelope checks possible at the sparse
+    lane's 10⁶-node scale, where no (R, N) record exists.  The check is
+    then the NECESSARY condition at the peak only: each node's recorded
+    \\|β\\| maximum, evaluated against the bound at its time-of-peak
+    record.  It rejects any run whose peak breaks its node's envelope,
+    but — unlike the full-record check — cannot see a non-peak record
+    that breaks a tighter (earlier) bound, so a watermark pass is
+    one-sided.  Peaks attained before ``t0`` pass vacuously (the
+    envelope constrains the post-event transient).
 
     Returns:
-      (ok, margin) — ``margin`` is min over post-event records of
-      (bound − |b − b∞|); non-negative iff the transient stays inside the
-      envelope everywhere.
+      (ok, margin) — ``margin`` is min over post-event records (or over
+      nodes, in watermark mode) of (bound − |b − b∞|); non-negative iff
+      the checked deviations stay inside the envelope.
     """
     times = np.asarray(times, np.float64)
+    if hasattr(beta, "beta_abs_max"):        # Watermarks, duck-typed
+        wm = beta
+        if wm.beta_abs_max.ndim != 1:
+            raise ValueError("watermark envelope check is single-draw; "
+                             "slice a draw first (watermarks[b])")
+        if b_pre is None:
+            raise ValueError("watermark mode has no pre-event record; "
+                             "pass b_pre explicitly")
+        t_peak = times[np.asarray(wm.peak_record, np.int64)]
+        base = np.abs(np.asarray(b_pre, np.float64)
+                      + np.asarray(env.db_inf, np.float64))
+        post = t_peak >= t0
+        # |β| ≤ |b_pre + b∞| + |β − (b_pre + b∞)| — charge the baseline.
+        dev = wm.beta_abs_max[post] - base[post]
+        bound = env.bound(t_peak[post], t0, slack)
+        margin = float((bound - dev).min()) if post.any() else float(slack)
+        return margin >= 0.0, margin
     beta = np.asarray(beta, np.float64)
     if b_pre is None:
         pre = np.nonzero(times < t0)[0]

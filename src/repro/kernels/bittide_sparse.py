@@ -74,7 +74,7 @@ from repro.core.topology import Topology
 
 from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES, _check_shapes,
                            _gain_col, _lamsum_rows, _mask_row,
-                           sparse_vmem_bytes)
+                           _split_outputs, sparse_vmem_bytes)
 
 __all__ = ["bittide_sparse_pallas", "ellify", "max_in_degree"]
 
@@ -161,18 +161,24 @@ def ellify(topo: Topology, lat_frames, edge_w=None, tile: int = TILE,
 def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
                    kp_ref, boff_ref, mask_ref, lamsum_ref, psi_out_ref,
                    nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                   max_deg: int, multi_panel: bool, record_beta: bool):
+                   max_deg: int, multi_panel: bool, record_beta: bool,
+                   record_watermarks: bool):
     t = pl.program_id(0)
     p = pl.program_id(1)
     i = pl.program_id(2)
     i_panels = pl.num_programs(2)
-    # With β recording the period axis carries one extra trailing pass per
-    # record: p < periods advances the state, p == periods re-streams the
-    # table panels to aggregate the POST-update state's occupancy.
-    periods = pl.num_programs(1) - (1 if record_beta else 0)
+    # With β recording (or watermarks) the period axis carries one extra
+    # trailing pass per record: p < periods advances the state, p ==
+    # periods re-streams the table panels to aggregate the POST-update
+    # state's occupancy.
+    measure = record_beta or record_watermarks
+    periods = pl.num_programs(1) - (1 if measure else 0)
 
     refs = list(opt_refs)
     brec_ref = refs.pop(0) if record_beta else None
+    if record_watermarks:
+        wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
+        refs = refs[4:]
     psi_s, nu_s = refs.pop(0), refs.pop(0)
     if multi_panel:
         psi_ns, nu_ns = refs.pop(0), refs.pop(0)
@@ -188,7 +194,7 @@ def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
     cols = pl.ds(pl.multiple_of(i * tile_i, TILE), tile_i)
     psi_full = psi_s[...]                                  # (B, N)
     nu_full = nu_s[...]
-    if record_beta:
+    if measure:
         # β pass: center ψ by its full-row mean (β is exactly
         # shift-invariant; centering keeps float32 partial sums O(ψ
         # spread)).  The mean is over the whole scratch row, so every
@@ -211,7 +217,7 @@ def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
 
     psi_i = psi_s[:, cols]                                 # (B, TI)
     nu_i = nu_s[:, cols]
-    if record_beta:
+    if measure:
         psi_i = jnp.where(p == periods, psi_i - m, psi_i)
 
     @pl.when(p < periods)
@@ -245,17 +251,45 @@ def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
             psi_s[...] = psi_ns[...]
             nu_s[...] = nu_ns[...]
 
-    if record_beta:
+    if measure:
         @pl.when(p == periods)
         def _record_beta():
             # acc aggregated the centered post-update state this pass.
-            brec_ref[...] = (acc - psi_i * deg + lamsum_ref[...])[None]
+            bnode = acc - psi_i * deg + lamsum_ref[...]
+            if record_beta:
+                brec_ref[...] = bnode[None]
+            if record_watermarks:
+                # Watermark accumulators are whole (B, N) output blocks
+                # with CONSTANT index maps (VMEM-resident for the whole
+                # grid, read-modify-write safe); each panel updates only
+                # its own node columns.  Strict > keeps the FIRST record
+                # attaining the max.
+                babs = jnp.abs(bnode)
+
+                @pl.when(t == 0)
+                def _wm_seed():
+                    wm_beta_ref[:, cols] = babs
+                    wm_idx_ref[:, cols] = jnp.zeros_like(babs, jnp.int32)
+                    wm_lo_ref[:, cols] = nu_i
+                    wm_hi_ref[:, cols] = nu_i
+
+                @pl.when(t > 0)
+                def _wm_update():
+                    prev = wm_beta_ref[:, cols]
+                    wm_idx_ref[:, cols] = jnp.where(babs > prev, t,
+                                                    wm_idx_ref[:, cols])
+                    wm_beta_ref[:, cols] = jnp.maximum(prev, babs)
+                    wm_lo_ref[:, cols] = jnp.minimum(wm_lo_ref[:, cols],
+                                                     nu_i)
+                    wm_hi_ref[:, cols] = jnp.maximum(wm_hi_ref[:, cols],
+                                                     nu_i)
 
 
 def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
                           dt_frames: float, *, num_records: int,
                           record_every: int, tile_i: Optional[int] = None,
                           ctrl_mask=None, record_beta: bool = False,
+                          record_watermarks: bool = False,
                           interpret: bool = False):
     """Advance ``num_records × record_every`` periods on the ELL tables.
 
@@ -278,11 +312,18 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
       record_beta: also decimate the per-node net occupancy (frames) to
         every record — one extra table pass per record (compile-time
         switch; the ν-only grid is unchanged when off).
+      record_watermarks: carry O(B·N) excursion watermarks in-kernel —
+        per-node max |β|, its record index, and the ν min/max — updated
+        at every record from the same β aggregation pass, so a 1M-node
+        run reports its peak excursion with NO (R, B, N) record.  Shares
+        the extra table pass with ``record_beta`` when both are on.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
       (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
-      beta_rec (num_records, B, N) or None) — the fused engines' contract.
+      beta_rec (num_records, B, N) or None, watermarks or None) — the
+      fused engines' contract; watermarks = (beta_abs_max (B, N) f32,
+      peak_record (B, N) i32, nu_min (B, N) f32, nu_max (B, N) f32).
     """
     b, n = psi.shape
     _check_shapes(b, n, num_records, record_every)
@@ -312,7 +353,8 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
     multi_panel = i_panels > 1
     kern = functools.partial(
         _sparse_kernel, dt_frames=float(dt_frames), max_deg=int(k),
-        multi_panel=multi_panel, record_beta=bool(record_beta))
+        multi_panel=multi_panel, record_beta=bool(record_beta),
+        record_watermarks=bool(record_watermarks))
 
     mask = _mask_row(ctrl_mask, n, b)
     full3 = lambda t, p, i: (0, 0)
@@ -332,6 +374,13 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
             pl.BlockSpec((1, b, tile_i), lambda t, p, i: (t, 0, i)))
         out_shape.append(
             jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    if record_watermarks:
+        # Whole-row (B, N) accumulators with constant index maps: they
+        # stay VMEM-resident across the grid (like the ψ/ν carries) and
+        # each panel read-modify-writes its own columns.
+        for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
+            out_specs.append(pl.BlockSpec((b, n), full3))
+            out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
     scratch = [
         pltpu.VMEM((b, n), jnp.float32),                      # ψ carry
         pltpu.VMEM((b, n), jnp.float32),                      # ν carry
@@ -341,9 +390,10 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
             pltpu.VMEM((b, n), jnp.float32),                  # ψ staging
             pltpu.VMEM((b, n), jnp.float32),                  # ν staging
         ]
+    measure = record_beta or record_watermarks
     out = pl.pallas_call(
         kern,
-        grid=(num_records, record_every + (1 if record_beta else 0),
+        grid=(num_records, record_every + (1 if measure else 0),
               i_panels),
         in_specs=[
             # Table panels: the index map advances with i, so the Pallas
@@ -371,6 +421,4 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
       nu.astype(jnp.float32), nu_u.astype(jnp.float32),
       _gain_col(kp, b, "kp"), _gain_col(beta_off, b, "beta_off"), mask,
       _lamsum_rows(lamsum, b, n))
-    if record_beta:
-        return out[0], out[1], out[2], out[3]
-    return out[0], out[1], out[2], None
+    return _split_outputs(out, record_beta, record_watermarks)

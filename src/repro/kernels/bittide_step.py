@@ -269,15 +269,19 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
 def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
                   boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
                   nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                  record_every: int, num_classes: int, record_beta: bool):
+                  record_every: int, num_classes: int, record_beta: bool,
+                  record_watermarks: bool):
     t = pl.program_id(0)
 
-    # Optional β record output is spliced between the fixed outputs and the
-    # scratch refs (pallas_call passes outputs before scratch).
-    if record_beta:
-        brec_ref, psi_s, nu_s = opt_refs
-    else:
-        psi_s, nu_s = opt_refs
+    # Optional outputs are spliced between the fixed outputs and the
+    # scratch refs (pallas_call passes outputs before scratch): β record
+    # first, then the four (B, N) watermark accumulators.
+    refs = list(opt_refs)
+    brec_ref = refs.pop(0) if record_beta else None
+    if record_watermarks:
+        wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
+        refs = refs[4:]
+    psi_s, nu_s = refs
 
     # First grid step: load initial state into the persistent VMEM scratch.
     @pl.when(t == 0)
@@ -318,7 +322,7 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
 
     # Decimated telemetry: ν once per record, not once per period.
     rec_ref[...] = nu[None]
-    if record_beta:
+    if record_beta or record_watermarks:
         # Per-node net occupancy of the POST-update state (the segment-sum
         # recording convention).  β is invariant under a uniform ψ shift,
         # so center ψ by its row mean first: the matmul partial sums then
@@ -326,6 +330,8 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         # the float32 record within 1e-6 frames of the edge-list math.
         # Cost: one extra C-class aggregation per RECORD on the resident
         # adjacency — ~1/record_every of the period loop's matmul work.
+        # The watermarks reuse the SAME aggregation, so the in-kernel peak
+        # is bit-identical to a reduction of the full β record.
         psi_c = psi - jnp.mean(psi, axis=1, keepdims=True)
         bacc = jnp.zeros_like(psi)
         for c in range(num_classes):
@@ -334,7 +340,30 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
                 x, a_ref[c],
                 dimension_numbers=(((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
-        brec_ref[...] = (bacc - psi_c * deg + lamsum)[None]
+        bnode = bacc - psi_c * deg + lamsum
+        if record_beta:
+            brec_ref[...] = bnode[None]
+        if record_watermarks:
+            # O(B·N) running aggregates in the revisited output blocks
+            # (constant index maps: the blocks stay in VMEM across the
+            # whole grid and flush once at the end).  Strict > keeps the
+            # FIRST record attaining the max — np.argmax semantics.
+            babs = jnp.abs(bnode)
+
+            @pl.when(t == 0)
+            def _wm_seed():
+                wm_beta_ref[...] = babs
+                wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
+                wm_lo_ref[...] = nu
+                wm_hi_ref[...] = nu
+
+            @pl.when(t > 0)
+            def _wm_update():
+                wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...], t,
+                                            wm_idx_ref[...])
+                wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...], babs)
+                wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
+                wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
     psi_out_ref[...] = psi
     nu_out_ref[...] = nu
 
@@ -488,6 +517,7 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                          kp, beta_off, dt_frames: float,
                          *, num_records: int, record_every: int,
                          ctrl_mask=None, record_beta: bool = False,
+                         record_watermarks: bool = False,
                          interpret: bool = False):
     """Advance ``num_records * record_every`` control periods in ONE kernel.
 
@@ -512,11 +542,19 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         every record — a fourth output, computed in-kernel from the
         post-update state against the resident adjacency.  Compile-time
         switch; the ν-only fast path is unchanged when off.
+      record_watermarks: carry O(B·N) excursion watermarks in-kernel —
+        per-node max |β|, its record index, and the ν min/max — updated
+        at every record point from the SAME β aggregation and emitted
+        once at the end, so peak excursions are available with no
+        (R, B, N) record.  Compile-time switch, composable with
+        ``record_beta``.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
       (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
-      beta_rec (num_records, B, N) or None).
+      beta_rec (num_records, B, N) or None, watermarks or None) where
+      watermarks = (beta_abs_max (B, N) f32, peak_record (B, N) i32,
+      nu_min (B, N) f32, nu_max (B, N) f32).
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -532,7 +570,8 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     kern = functools.partial(
         _fused_kernel, dt_frames=float(dt_frames),
         record_every=int(record_every), num_classes=int(c),
-        record_beta=bool(record_beta))
+        record_beta=bool(record_beta),
+        record_watermarks=bool(record_watermarks))
 
     mask = _mask_row(ctrl_mask, n, b)
     full2 = lambda t: (0, 0)
@@ -550,6 +589,12 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         out_specs.append(pl.BlockSpec((1, b, n), lambda t: (t, 0, 0)))
         out_shape.append(
             jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    if record_watermarks:
+        # Four (B, N) watermark accumulators with constant index maps:
+        # |β| max, its record index, ν min, ν max.
+        for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
+            out_specs.append(pl.BlockSpec((b, n), full2))
+            out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
     out = pl.pallas_call(
         kern,
         grid=(num_records,),
@@ -577,28 +622,39 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
       _gain_col(beta_off, b, "beta_off"), mask,
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    if record_beta:
-        return out[0], out[1], out[2], out[3]
-    return out[0], out[1], out[2], None
+    return _split_outputs(out, record_beta, record_watermarks)
+
+
+def _split_outputs(out, record_beta: bool, record_watermarks: bool):
+    """(psi, nu, rec, beta_rec|None, watermarks|None) from the flat
+    pallas_call output list — shared by every fused-engine wrapper."""
+    brec = out[3] if record_beta else None
+    wm = tuple(out[3 + int(record_beta):][:4]) if record_watermarks else None
+    return out[0], out[1], out[2], brec, wm
 
 
 def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
                   boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
                   nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                  tile_j: int, num_classes: int, record_beta: bool):
+                  tile_j: int, num_classes: int, record_beta: bool,
+                  record_watermarks: bool):
     t = pl.program_id(0)
     p = pl.program_id(1)
     j = pl.program_id(2)
     j_tiles = pl.num_programs(2)
-    # With β recording the period axis carries one extra trailing pass per
-    # record: p < periods advances the state, p == periods re-streams the
-    # panels once more to aggregate the POST-update state's occupancy.
-    periods = pl.num_programs(1) - (1 if record_beta else 0)
+    # With β recording (or watermarks) the period axis carries one extra
+    # trailing pass per record: p < periods advances the state, p ==
+    # periods re-streams the panels once more to aggregate the POST-update
+    # state's occupancy.
+    measure = record_beta or record_watermarks
+    periods = pl.num_programs(1) - (1 if measure else 0)
 
-    if record_beta:
-        brec_ref, psi_s, nu_s, acc_s = opt_refs
-    else:
-        psi_s, nu_s, acc_s = opt_refs
+    refs = list(opt_refs)
+    brec_ref = refs.pop(0) if record_beta else None
+    if record_watermarks:
+        wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
+        refs = refs[4:]
+    psi_s, nu_s, acc_s = refs
 
     first = jnp.logical_and(t == 0, jnp.logical_and(p == 0, j == 0))
 
@@ -614,7 +670,7 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     psi_j = psi_s[:, cols]                                    # (B, TJ)
     nu_j = nu_s[:, cols]
     lat = lat_ref[...]                                        # (B, C)
-    if record_beta:
+    if measure:
         # β pass: center ψ by its mean (β is exactly shift-invariant; the
         # centering keeps float32 partial sums O(ψ spread)).  The mean is
         # over the full scratch row, so every panel of the pass — and every
@@ -659,14 +715,36 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         psi_out_ref[...] = psi_next
         nu_out_ref[...] = nu_next
 
-    if record_beta:
+    if measure:
         # Last panel of the β pass: the accumulator now holds the full
         # aggregation of the record's post-update state.
-        @pl.when(jnp.logical_and(j == j_tiles - 1, p == periods))
+        last_beta_panel = jnp.logical_and(j == j_tiles - 1, p == periods)
+
+        @pl.when(last_beta_panel)
         def _record_beta():
-            brec_ref[...] = (acc_s[...]
-                             - (psi_s[...] - m) * deg_ref[...]
-                             + lamsum_ref[...])[None]
+            bnode = (acc_s[...]
+                     - (psi_s[...] - m) * deg_ref[...]
+                     + lamsum_ref[...])
+            if record_beta:
+                brec_ref[...] = bnode[None]
+            if record_watermarks:
+                babs = jnp.abs(bnode)
+                nu = nu_s[...]
+
+                @pl.when(t == 0)
+                def _wm_seed():
+                    wm_beta_ref[...] = babs
+                    wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
+                    wm_lo_ref[...] = nu
+                    wm_hi_ref[...] = nu
+
+                @pl.when(t > 0)
+                def _wm_update():
+                    wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...],
+                                                t, wm_idx_ref[...])
+                    wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...], babs)
+                    wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
+                    wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
 
 
 def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
@@ -674,6 +752,7 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                                *, num_records: int, record_every: int,
                                tile_j: int, ctrl_mask=None,
                                record_beta: bool = False,
+                               record_watermarks: bool = False,
                                interpret: bool = False):
     """Tiled fused engine: adjacency streamed in (C, N, tile_j) panels.
 
@@ -684,13 +763,15 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     one ``pallas_call`` without the per-step fallback.  ``tile_j`` must be
     a multiple of TILE dividing N (use :func:`select_engine` to pick it).
 
-    With ``record_beta`` the period grid axis grows by ONE extra pass per
-    record — ``(num_records, record_every + 1, N // tile_j)`` — that
-    re-streams the panels to aggregate the post-update state's per-node
-    net occupancy (the state advances only on the first ``record_every``
+    With ``record_beta`` (or ``record_watermarks``) the period grid axis
+    grows by ONE extra pass per record —
+    ``(num_records, record_every + 1, N // tile_j)`` — that re-streams
+    the panels to aggregate the post-update state's per-node net
+    occupancy (the state advances only on the first ``record_every``
     passes).  Streaming overhead is therefore (record_every+1)/record_every;
-    the flag is a compile-time switch and the ν-only grid is unchanged
-    when off.
+    the flags are compile-time switches and the ν-only grid is unchanged
+    when both are off.  Watermarks share the extra pass with β recording
+    when both are on, so the combination costs no additional streaming.
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -709,7 +790,8 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
 
     kern = functools.partial(
         _tiled_kernel, dt_frames=float(dt_frames), tile_j=int(tile_j),
-        num_classes=int(c), record_beta=bool(record_beta))
+        num_classes=int(c), record_beta=bool(record_beta),
+        record_watermarks=bool(record_watermarks))
 
     mask = _mask_row(ctrl_mask, n, b)
     full3 = lambda t, p, j: (0, 0)
@@ -727,9 +809,14 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         out_specs.append(pl.BlockSpec((1, b, n), lambda t, p, j: (t, 0, 0)))
         out_shape.append(
             jax.ShapeDtypeStruct((num_records, b, n), jnp.float32))
+    if record_watermarks:
+        for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
+            out_specs.append(pl.BlockSpec((b, n), full3))
+            out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
+    measure = record_beta or record_watermarks
     out = pl.pallas_call(
         kern,
-        grid=(num_records, record_every + (1 if record_beta else 0),
+        grid=(num_records, record_every + (1 if measure else 0),
               j_tiles),
         in_specs=[
             pl.BlockSpec((b, c), full3),                   # lat per draw
@@ -759,6 +846,4 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
       nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
       _gain_col(beta_off, b, "beta_off"), mask,
       deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    if record_beta:
-        return out[0], out[1], out[2], out[3]
-    return out[0], out[1], out[2], None
+    return _split_outputs(out, record_beta, record_watermarks)

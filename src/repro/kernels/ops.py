@@ -64,6 +64,7 @@ import numpy as np
 
 from repro.core.frame_model import LinkParams, OMEGA_NOM, broadcast_gain
 from repro.core.topology import Topology
+from repro.telemetry.watermarks import Watermarks
 
 from .bittide_sparse import bittide_sparse_pallas, ellify, max_in_degree
 from .bittide_step import (SUBLANE, TILE, TILE_J_MAX, VMEM_BUDGET_BYTES,
@@ -109,20 +110,28 @@ class DenseResult(tuple):
     kernel values, so ``.beta[..., -1, :]`` (see :meth:`beta_final`) IS
     the exact final occupancy: a chained (split) run with β recording
     reproduces the unsplit run's β stream bit-for-bit.
+
+    ``.watermarks`` is the O(N) in-kernel excursion summary
+    (:class:`repro.telemetry.Watermarks`: per-node max |β|, its record
+    index, ν min/max in ppm) when the run did ``record_watermarks`` —
+    available with or without a full ``.beta`` record, which is what
+    lets 1M-node sparse runs report peak excursions at all.
     """
 
     engine: str
     tile_j: int
     nu: Optional[np.ndarray]
     beta: Optional[np.ndarray]
+    watermarks: Optional[Watermarks]
 
     def __new__(cls, freq_ppm, psi, engine: str, tile_j: int, nu=None,
-                beta=None):
+                beta=None, watermarks=None):
         self = tuple.__new__(cls, (freq_ppm, psi))
         self.engine = engine
         self.tile_j = int(tile_j)
         self.nu = nu
         self.beta = beta
+        self.watermarks = watermarks
         return self
 
     @property
@@ -265,10 +274,12 @@ def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
 @functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
                                              "record_every", "engine",
                                              "tile_j", "interpret",
-                                             "use_ref", "record_beta"))
+                                             "use_ref", "record_beta",
+                                             "record_watermarks"))
 def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
                   lamsum, lat, dt_frames, num_records, record_every, engine,
-                  tile_j, interpret, use_ref, record_beta: bool = False):
+                  tile_j, interpret, use_ref, record_beta: bool = False,
+                  record_watermarks: bool = False):
     """jit entry for the fused engines; one compile per (B, N, C, statics).
 
     Traced arguments (data, never compile keys — the scenario runner swaps
@@ -285,16 +296,31 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
     Static compile keys: ``dt_frames`` (frames per control period),
     ``num_records`` / ``record_every`` (telemetry grid), ``engine`` /
     ``tile_j`` (from :func:`repro.kernels.bittide_step.select_engine`),
-    ``interpret``, ``use_ref``, and ``record_beta`` — the β switch is a
-    kernel *variant* (extra output + extra work), so ν-only runs keep
-    their exact previous executable.
+    ``interpret``, ``use_ref``, ``record_beta``, and
+    ``record_watermarks`` — the telemetry switches are kernel *variants*
+    (extra outputs + extra work), so ν-only runs keep their exact
+    previous executable.
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None)
+    with watermarks = (beta_abs_max, peak_record, nu_min, nu_max).
     """
     if use_ref:
-        return bittide_dense_multistep_ref(
+        psi_f, nu_f, rec, brec = bittide_dense_multistep_ref(
             psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
-            num_records, record_every, ctrl_mask, record_beta=record_beta)
+            num_records, record_every, ctrl_mask,
+            record_beta=record_beta or record_watermarks)
+        wm = None
+        if record_watermarks:
+            # The oracle has no scratch to carry aggregates in; reduce its
+            # full record inside the same jit (identical values, so the
+            # in-kernel parity contract holds on this lane too).
+            babs = jnp.abs(brec)
+            wm = (jnp.max(babs, axis=0),
+                  jnp.argmax(babs, axis=0).astype(jnp.int32),
+                  jnp.min(rec, axis=0), jnp.max(rec, axis=0))
+            if not record_beta:
+                brec = None
+        return psi_f, nu_f, rec, brec, wm
     # Step-invariant per-node degree fold, hoisted out of the record grid.
     deg = a.sum(axis=(0, 2))
     if engine == "tiled":
@@ -302,19 +328,22 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
             psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
             num_records=num_records, record_every=record_every,
             tile_j=tile_j, ctrl_mask=ctrl_mask, record_beta=record_beta,
-            interpret=interpret)
+            record_watermarks=record_watermarks, interpret=interpret)
     return bittide_fused_pallas(
         psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every,
-        ctrl_mask=ctrl_mask, record_beta=record_beta, interpret=interpret)
+        ctrl_mask=ctrl_mask, record_beta=record_beta,
+        record_watermarks=record_watermarks, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
                                              "record_every", "tile_i",
-                                             "interpret", "record_beta"))
+                                             "interpret", "record_beta",
+                                             "record_watermarks"))
 def _sparse_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, nbr, latf, w,
                    lamsum, dt_frames, num_records, record_every, tile_i,
-                   interpret, record_beta: bool = False):
+                   interpret, record_beta: bool = False,
+                   record_watermarks: bool = False):
     """jit entry for the sparse ELL engine; one compile per (B, N, K, statics).
 
     Traced arguments (data, never compile keys — scenario segments AND
@@ -330,23 +359,26 @@ def _sparse_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, nbr, latf, w,
 
     Static compile keys: ``dt_frames``, ``num_records`` /
     ``record_every``, ``tile_i`` (node-panel width), ``interpret``,
-    ``record_beta``.
+    ``record_beta``, ``record_watermarks``.
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None).
     """
     return bittide_sparse_pallas(
         psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every, tile_i=tile_i,
-        ctrl_mask=ctrl_mask, record_beta=record_beta, interpret=interpret)
+        ctrl_mask=ctrl_mask, record_beta=record_beta,
+        record_watermarks=record_watermarks, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
                                              "num_records", "record_every",
                                              "interpret", "use_ref",
-                                             "record_beta"))
+                                             "record_beta",
+                                             "record_watermarks"))
 def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
                     dt_frames, num_records, record_every, interpret,
-                    use_ref, record_beta: bool = False):
+                    use_ref, record_beta: bool = False,
+                    record_watermarks: bool = False):
     """Capability-fallback engine with the fused engines' record contract.
 
     A scan of per-period 2-D kernels (one ``pallas_call`` per control
@@ -361,9 +393,11 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
     class latencies in frames.  With ``record_beta`` each record issues
     ONE extra measurement launch of the 2-D kernel (``emit_beta=True``) on
     the post-update state — β stays an in-kernel quantity on this lane too
-    — at (record_every+1)/record_every launch overhead.
+    — at (record_every+1)/record_every launch overhead.  With
+    ``record_watermarks`` the running aggregates live in the scan carry,
+    fed by the same in-kernel β measurements.
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None).
+    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None).
     """
 
     def period(carry, _):
@@ -389,17 +423,36 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
             psi_c, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
             ctrl_mask=ctrl_mask, emit_beta=True, interpret=interpret)[2]
 
-    def record(carry, _):
-        carry, _ = jax.lax.scan(period, carry, None, length=record_every)
-        if record_beta:
-            return carry, (carry[1], measure(*carry))
-        return carry, carry[1]
+    def record(carry, t_idx):
+        state, wm = carry
+        state, _ = jax.lax.scan(period, state, None, length=record_every)
+        psi_t, nu_t = state
+        bnode = (measure(psi_t, nu_t)
+                 if record_beta or record_watermarks else None)
+        if record_watermarks:
+            # Running aggregates in the scan carry, from the SAME
+            # in-kernel β measurement the record lane emits.  Strict >
+            # (seeded at -inf) keeps the FIRST record attaining the max.
+            babs = jnp.abs(bnode)
+            bmax, idx, lo, hi = wm
+            wm = (jnp.maximum(bmax, babs),
+                  jnp.where(babs > bmax, t_idx, idx),
+                  jnp.minimum(lo, nu_t), jnp.maximum(hi, nu_t))
+        out = (nu_t, bnode) if record_beta else nu_t
+        return (state, wm), out
 
-    (psi, nu), rec = jax.lax.scan(record, (psi, nu), None,
-                                  length=num_records)
+    n_p = psi.shape[-1]
+    wm0 = ((jnp.full((n_p,), -jnp.inf, jnp.float32),
+            jnp.zeros((n_p,), jnp.int32),
+            jnp.full((n_p,), jnp.inf, jnp.float32),
+            jnp.full((n_p,), -jnp.inf, jnp.float32))
+           if record_watermarks else ())
+    ((psi, nu), wm), rec = jax.lax.scan(
+        record, ((psi, nu), wm0), jnp.arange(num_records, dtype=jnp.int32))
+    wm = wm if record_watermarks else None
     if record_beta:
-        return psi, nu, rec[0], rec[1]
-    return psi, nu, rec, None
+        return psi, nu, rec[0], rec[1], wm
+    return psi, nu, rec, None, wm
 
 
 def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]:
@@ -551,6 +604,24 @@ def _sparse_tile(b_pad: int, n_pad: int, k: int, rows: int,
     return TILE
 
 
+def _host_watermarks(wm_dev, num_records: int, b: Optional[int],
+                     n: int) -> Watermarks:
+    """Device watermark tuple -> host :class:`Watermarks`.
+
+    Slices away kernel padding ((b, n) rows for batched lanes, (n,) for
+    the per-step single-draw lane when ``b`` is None) and converts the
+    ν extremes to ppm, matching ``freq_ppm``'s units."""
+    bmax, idx, lo, hi = wm_dev
+
+    def cut(x):
+        x = np.asarray(x)
+        return x[:b, :n] if b is not None else x[:n]
+
+    return Watermarks(beta_abs_max=cut(bmax), peak_record=cut(idx),
+                      nu_min_ppm=cut(lo) * 1e6, nu_max_ppm=cut(hi) * 1e6,
+                      num_records=num_records)
+
+
 def _pad_table_rows(tbl, b_pad: int):
     """Pad a per-draw (B, K, N) ELL table to (B_pad, K, N) by repeating
     draw 0 (padding draws are dead rows; shared (1, K, N) passes through)."""
@@ -565,7 +636,8 @@ def _run_sparse(topo: Topology, lat_be, beta0_be, beta0_batched: bool,
                 batched: bool, edge_w_np, ppm_u, b: int, n: int, kp,
                 beta_off, dt: float, omega_nom: float, num_records: int,
                 record_every: int, tile_j, init, ctrl_mask,
-                record_beta: bool, interp: bool) -> DenseResult:
+                record_beta: bool, record_watermarks: bool,
+                interp: bool) -> DenseResult:
     """The sparse ELL lane of :func:`simulate_ensemble_dense`.
 
     No densify, no latency classes: the slot tables carry every edge's
@@ -592,11 +664,11 @@ def _run_sparse(topo: Topology, lat_be, beta0_be, beta0_batched: bool,
     ti = (int(tile_j) if tile_j is not None
           else _sparse_tile(b_pad, n_pad, k, rows_t, interp))
 
-    psi_f, nu_f, rec, brec = _sparse_engine(
+    psi_f, nu_f, rec, brec, wm = _sparse_engine(
         psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
         jnp.asarray(mask_pad), nbr, latf, w, jnp.asarray(lamsum_pad),
         float(omega_nom * dt), int(num_records), int(record_every),
-        int(ti), interp, bool(record_beta))
+        int(ti), interp, bool(record_beta), bool(record_watermarks))
 
     freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
     beta = (np.ascontiguousarray(
@@ -605,7 +677,9 @@ def _run_sparse(topo: Topology, lat_be, beta0_be, beta0_batched: bool,
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
         np.asarray(psi_f)[:b, :n], "sparse", ti,
-        nu=np.asarray(nu_f)[:b, :n], beta=beta)
+        nu=np.asarray(nu_f)[:b, :n], beta=beta,
+        watermarks=(_host_watermarks(wm, num_records, b, n)
+                    if record_watermarks else None))
 
 
 def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
@@ -619,7 +693,8 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             init=None, ctrl_mask=None,
                             lat_classes: Optional[np.ndarray] = None,
                             edge_w: Optional[np.ndarray] = None,
-                            record_beta: bool = False) -> DenseResult:
+                            record_beta: bool = False,
+                            record_watermarks: bool = False) -> DenseResult:
     """Batched fused synchronization: B draws in one compiled call.
 
     Args:
@@ -666,12 +741,19 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         paper's central measured quantity (bounded buffer excursions,
         Figs. 12–14, 17–19).  A compile-time kernel variant: the ν-only
         fast path is byte-identical when off.
+      record_watermarks: carry O(B·N) excursion watermarks in-kernel —
+        per-node max |β| with its record index plus ν min/max — so the
+        run's peak excursion and frequency spread are available WITHOUT
+        materializing any (R, B, N) record (the only way a 1M-node
+        sparse run can report them).  Also a compile-time kernel
+        variant, independent of (and composable with) ``record_beta``.
 
     Returns:
       DenseResult ``(freq_ppm (B, R, N), psi (B, N))`` with
       R = steps // record_every, ``.engine`` / ``.tile_j`` metadata,
-      ``.nu`` — the exact final frequencies for chaining — and ``.beta``
-      ((B, R, N) frames, or None without ``record_beta``).
+      ``.nu`` — the exact final frequencies for chaining — ``.beta``
+      ((B, R, N) frames, or None without ``record_beta``) and
+      ``.watermarks`` (:class:`repro.telemetry.Watermarks` or None).
     """
     ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
     if ppm_u.shape[1] != topo.num_nodes:
@@ -724,7 +806,7 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
             topo, lat_be, beta0_be, beta0_batched, batched, edge_w_np,
             ppm_u, b, n, kp, beta_off, dt, omega_nom, num_records,
             record_every, tile_j, init, ctrl_mask, bool(record_beta),
-            interp)
+            bool(record_watermarks), interp)
     # ---------------------------------------------------------------------
 
     if beta0_batched and use_ref:
@@ -784,7 +866,7 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                 f"no fused/tiled working set fits the VMEM budget for "
                 f"B={b_pad}, N={n_pad}, C={c}; falling back to the per-step "
                 "kernel", stacklevel=2)
-        freqs, psis, nus, betas = [], [], [], []
+        freqs, psis, nus, betas, wms = [], [], [], [], []
         mask_j = jnp.asarray(mask_pad)
         mask_row = (lambda bi: mask_j[bi]) if mask_j.ndim == 2 \
             else (lambda bi: mask_j)
@@ -796,19 +878,24 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                     omega_nom, lat_classes=classes_np, edge_w=edge_w)
             else:
                 lam_bi = lam_eff
-            psi_f, nu_f, rec, brec = _perstep_engine(
+            psi_f, nu_f, rec, brec, wm = _perstep_engine(
                 psi0[bi], nu0[bi], nu_u[bi], mask_row(bi), a, lam_bi,
                 jnp.asarray(latv[bi]), float(kp[bi]), float(beta_off[bi]),
                 float(omega_nom * dt), int(num_records), int(record_every),
-                interp, bool(use_ref), bool(record_beta))
+                interp, bool(use_ref), bool(record_beta),
+                bool(record_watermarks))
             freqs.append(np.asarray(rec)[:, :n] * 1e6)
             psis.append(np.asarray(psi_f)[:n])
             nus.append(np.asarray(nu_f)[:n])
             if record_beta:
                 betas.append(np.asarray(brec)[:, :n])
+            if record_watermarks:
+                wms.append(_host_watermarks(wm, num_records, None, n))
+        wm_res = Watermarks.stack(wms) if record_watermarks else None
         return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0,
                            nu=np.stack(nus),
-                           beta=np.stack(betas) if record_beta else None)
+                           beta=np.stack(betas) if record_beta else None,
+                           watermarks=wm_res)
 
     lat_pad = np.zeros((b_pad, c), np.float32)
     lat_pad[:b] = latv
@@ -816,12 +903,12 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
     lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
 
-    psi_f, nu_f, rec, brec = _fused_engine(
+    psi_f, nu_f, rec, brec, wm = _fused_engine(
         psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
         jnp.asarray(mask_pad), a, lam_eff, jnp.asarray(lamsum_pad),
         jnp.asarray(lat_pad), float(omega_nom * dt), int(num_records),
         int(record_every), str(chosen), int(tj), interp, bool(use_ref),
-        bool(record_beta))
+        bool(record_beta), bool(record_watermarks))
 
     freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
     beta = (np.ascontiguousarray(
@@ -830,7 +917,9 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
         np.asarray(psi_f)[:b, :n], chosen, tj,
-        nu=np.asarray(nu_f)[:b, :n], beta=beta)
+        nu=np.asarray(nu_f)[:b, :n], beta=beta,
+        watermarks=(_host_watermarks(wm, num_records, b, n)
+                    if record_watermarks else None))
 
 
 def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
@@ -840,13 +929,15 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    use_ref: bool = False, engine: str = "auto",
                    tile_j: Optional[int] = None, init=None,
                    ctrl_mask=None, lat_classes=None,
-                   edge_w=None, record_beta: bool = False) -> DenseResult:
+                   edge_w=None, record_beta: bool = False,
+                   record_watermarks: bool = False) -> DenseResult:
     """Single-draw fused run; returns (freq_ppm (R, N), psi (N,)).
 
     ``init`` takes (psi (N,), nu (N,)) for segment chaining; the scenario
     kwargs (``ctrl_mask``, ``lat_classes``, ``edge_w``) pass through to
-    :func:`simulate_ensemble_dense`, as does ``record_beta`` (the result's
-    ``.beta`` is then (R, N) per-node net occupancy in frames).
+    :func:`simulate_ensemble_dense`, as do ``record_beta`` (the result's
+    ``.beta`` is then (R, N) per-node net occupancy in frames) and
+    ``record_watermarks`` (``.watermarks`` holds per-node (N,) aggregates).
     """
     if init is not None and not isinstance(init, DenseResult):
         init = (np.atleast_2d(init[0]), np.atleast_2d(init[1]))
@@ -855,11 +946,14 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
         dt=dt, beta_off=beta_off, record_every=record_every,
         omega_nom=omega_nom, interpret=interpret, use_ref=use_ref,
         engine=engine, tile_j=tile_j, init=init, ctrl_mask=ctrl_mask,
-        lat_classes=lat_classes, edge_w=edge_w, record_beta=record_beta)
+        lat_classes=lat_classes, edge_w=edge_w, record_beta=record_beta,
+        record_watermarks=record_watermarks)
     freq, psi = res
     return DenseResult(freq[0], psi[0], res.engine, res.tile_j,
                        nu=None if res.nu is None else res.nu[0],
-                       beta=None if res.beta is None else res.beta[0])
+                       beta=None if res.beta is None else res.beta[0],
+                       watermarks=None if res.watermarks is None
+                       else res.watermarks[0])
 
 
 def simulate_dense(topo: Topology, links: LinkParams, ppm_u, steps: int,

@@ -643,14 +643,32 @@ class ChaosCampaign:
                 f"has {self.num_draws}")
         return scenario, ppm
 
-    def run(self) -> CampaignResult:
-        """Build, simulate (one compile per engine), and triage."""
-        scenario, ppm = self.build()
+    def run(self, record_watermarks: bool = False,
+            trace=False) -> CampaignResult:
+        """Build, simulate (one compile per engine), and triage.
+
+        ``trace`` threads a flight recorder through the whole campaign
+        (same contract as ``run_scenario``): the build, the batched run
+        (with its engine spans), and one ``chaos_draw`` verdict event
+        per draw land in a single :class:`repro.telemetry.RunTrace`,
+        available as ``CampaignResult.result.trace``.
+        ``record_watermarks`` additionally carries the in-kernel O(N)
+        excursion watermarks (per-draw: ``result.watermarks[b]``).
+        """
+        from repro.telemetry import coerce_trace
+        tr = coerce_trace(trace, name=f"chaos:{self.name}")
+        with tr.span("segment", name="chaos-build", draws=self.num_draws):
+            scenario, ppm = self.build()
         res = run_scenario(self.topo, self.links, self.ctrl, ppm, scenario,
                            self.cfg, engine=self.engine, record_beta=True,
-                           auto_reframe=self.auto_reframe)
+                           record_watermarks=record_watermarks,
+                           auto_reframe=self.auto_reframe, trace=tr)
         verdicts, margins, peaks, reframed = triage_result(
             res, depth=self.depth)
+        for b in range(self.num_draws):
+            tr.event("chaos_draw", draw=int(b), verdict=str(verdicts[b]),
+                     margin=float(margins[b]), peak=float(peaks[b]),
+                     reframed=bool(reframed[b]))
         return CampaignResult(
             campaign=self, scenario=scenario, ppm_u=ppm, result=res,
             verdicts=verdicts, margins=margins, peaks=peaks,

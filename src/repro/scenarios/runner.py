@@ -120,10 +120,11 @@ from repro.core.reframing import (ReframePolicy, edge_occupancy,
 from repro.core.topology import Topology
 from repro.kernels.bittide_sparse import ellify
 from repro.kernels.bittide_step import TILE, select_engine
-from repro.kernels.ops import (_auto_interpret, _fused_engine, _lamsum_host,
-                               _pad_batch, _pad_gain, _pad_table_rows,
-                               _perstep_engine, _sparse_engine, _sparse_tile,
-                               latency_classes)
+from repro.kernels.ops import (_auto_interpret, _fused_engine,
+                               _host_watermarks, _lamsum_host, _pad_batch,
+                               _pad_gain, _pad_table_rows, _perstep_engine,
+                               _sparse_engine, _sparse_tile, latency_classes)
+from repro.telemetry import Watermarks, coerce_trace, compile_stats
 
 from .compiler import CompiledScenario, compile_scenario
 from .events import Scenario
@@ -197,6 +198,11 @@ class ScenarioResult:
     # Pointer rotations spliced into the run (explicit Reframe events and
     # auto_reframe guard trips), in record order.
     reframes: List[AppliedReframe] = dataclasses.field(default_factory=list)
+    # In-kernel O(N) excursion aggregates (``record_watermarks=True``) —
+    # chunk-merged across the whole run, (N,)/(B, N) — else None.
+    watermarks: Optional[Watermarks] = None
+    # The flight-recorder RunTrace when the run was traced, else None.
+    trace: object = None
 
     @property
     def scenario(self) -> Scenario:
@@ -640,7 +646,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                  chunk_records: Optional[int] = None,
                  compiled: Optional[CompiledScenario] = None,
                  record_beta: Optional[bool] = None,
+                 record_watermarks: bool = False,
                  auto_reframe=False,
+                 trace=False,
                  interpret: Optional[bool] = None) -> ScenarioResult:
     """Run a dynamic-event scenario, chaining one engine across segments.
 
@@ -668,6 +676,13 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         ``cfg.record_beta`` and the dense lanes stay on their ν-only
         fast path.  The flag is constant across a scenario, so a
         multi-segment run still compiles each engine exactly once.
+      record_watermarks: O(N) in-kernel excursion aggregates.  ``True``
+        makes the kernel lanes carry per-node max |β| / time-of-peak /
+        ν min-max watermarks in VMEM scratch (the segment-sum lane
+        derives the identical quantities host-side from its per-edge
+        record), chunk-merged into ``ScenarioResult.watermarks`` —
+        available with or without a full ``record_beta`` record, which
+        is how 10⁶-node sparse runs report peak excursions at all.
       auto_reframe: closed-loop buffer re-centering.  ``True`` (or a
         :class:`repro.core.reframing.ReframePolicy`) makes the runner
         inspect each chunk's β record — the in-kernel per-node net
@@ -687,6 +702,14 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         ``chunk_records`` (and the policy margin) such that one chunk of
         occupancy slew cannot cross from the guard band to the buffer
         wall.
+      trace: flight recorder.  ``True`` attaches a fresh
+        :class:`repro.telemetry.RunTrace`; an existing ``RunTrace``
+        threads this run's events into it (a chaos campaign shares one
+        recorder across its phases).  The runner records engine
+        dispatches (with the select_engine regime and a VMEM footprint
+        estimate), per-chunk engine-launch spans, guard evaluations,
+        reframe splices, and the jit-cache delta over the run — all
+        host-side bookkeeping, so tracing compiles nothing.
 
     Returns:
       ScenarioResult with concatenated telemetry, threaded final state,
@@ -739,6 +762,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     # cfg.record_beta default and the dense lanes on the ν-only fast path.
     rb_seg = cfg.record_beta if record_beta is None else bool(record_beta)
     rb_dense = False if record_beta is None else bool(record_beta)
+    rw = bool(record_watermarks)
+    tr = coerce_trace(trace, name="run_scenario")
+    cs0 = dict(compile_stats()) if tr else None
 
     policy: Optional[ReframePolicy] = None
     guard = 0.0
@@ -772,6 +798,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     state = None                 # segment-sum: result object with .psi/.nu
     psi_pad = nu_pad = None      # dense lanes: padded (B_pad, N_pad) state
     freq_chunks, beta_chunks = [], []
+    wm_acc: Optional[Watermarks] = None
     lam_rows, launches = [], 0
     reframes: List[AppliedReframe] = []
     guard_cache: dict = {}     # edge_w bytes -> (deg_w, Laplacian pinv)
@@ -814,6 +841,8 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             reframes.append(AppliedReframe(
                 record=seg.start_record, time=seg.start_record * rec_period,
                 shift=shift, auto=False))
+            tr.event("reframe", record=int(seg.start_record), auto=False,
+                     segment=si, max_shift=int(np.abs(shift).max()))
         dppm32 = np.asarray(seg.dppm, np.float32)
         ppm_seg = (ppm_u + dppm32 if (single or dppm32.ndim == 2)
                    else ppm_u + dppm32[None])
@@ -866,21 +895,31 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 topo, links_seg, seg, ctrl, np.atleast_2d(ppm_seg), cfg,
                 tables, si, interp)
             eng_label, tile_j = "sparse", ti
+            tr.event("engine_dispatch", segment=si, engine="sparse",
+                     tile_i=int(ti), b_pad=int(b_pad), n_pad=int(n_pad),
+                     k=int(tables.k),
+                     vmem_est_bytes=int(4 * tables.k * ti
+                                        * (2 * b_pad + 1) + 12 * b_pad * ti))
             if psi_pad is None:
                 psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
             dt_frames = float(cfg.omega_nom * cfg.dt)
             chunks_in_seg = seg.records // chunk
             for ci in range(chunks_in_seg):
-                psi_pad, nu_pad, rec, brec = _sparse_engine(
-                    psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j,
-                    tables.nbr, latf_j, w_j, lamsum_j, dt_frames,
-                    int(chunk), int(cfg.record_every), int(ti), interp,
-                    rb_dense)
-                if rb_dense:
-                    beta_chunks.append(
-                        np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
-                freq_chunks.append(
-                    np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                with tr.span("chunk", engine="sparse", segment=si,
+                             launch=launches, records=int(chunk)):
+                    psi_pad, nu_pad, rec, brec, wm = _sparse_engine(
+                        psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j,
+                        tables.nbr, latf_j, w_j, lamsum_j, dt_frames,
+                        int(chunk), int(cfg.record_every), int(ti), interp,
+                        rb_dense, rw)
+                    if rb_dense:
+                        beta_chunks.append(
+                            np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
+                    freq_chunks.append(
+                        np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                if rw:
+                    wm_c = _host_watermarks(wm, chunk, b, n)
+                    wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
                 launches += 1
                 rec_done += chunk
                 if policy is not None and rec_done < total:
@@ -888,6 +927,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                     # lanes (the in-kernel record is the identical
                     # per-node net occupancy quantity).
                     tripped = edge_estimates(beta_chunks[-1]) >= guard
+                    tr.event("guard_eval", record=int(rec_done),
+                             guard=float(guard),
+                             tripped=int(np.count_nonzero(tripped)))
                     if tripped.any():
                         psi_now, nu_now = live_state()
                         lam_eff, shift = _rotation_shifts(
@@ -897,6 +939,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                         reframes.append(AppliedReframe(
                             record=rec_done, time=rec_done * rec_period,
                             shift=shift, auto=True))
+                        tr.event("reframe", record=int(rec_done), auto=True,
+                                 segment=si,
+                                 max_shift=int(np.abs(shift).max()))
                         if ci + 1 < chunks_in_seg:
                             links_seg = LinkParams(
                                 latency_s=seg.latency_s,
@@ -919,6 +964,13 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 topo, links_seg, seg, comp, ctrl, np.atleast_2d(ppm_seg),
                 cfg, engine, stacks, si)
             eng_label, tile_j = chosen, tj
+            c_stack = int(a.shape[0])
+            tr.event("engine_dispatch", segment=si, engine=chosen,
+                     tile_j=int(tj), b_pad=int(b_pad), n_pad=int(n_pad),
+                     c=c_stack,
+                     vmem_est_bytes=int(
+                         4 * c_stack * n_pad
+                         * (n_pad if chosen == "fused" else max(tj, 1))))
             if psi_pad is None:
                 psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
             dt_frames = float(cfg.omega_nom * cfg.dt)
@@ -926,33 +978,45 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             boff_np = np.asarray(boff_j)
             chunks_in_seg = seg.records // chunk
             for ci in range(chunks_in_seg):
-                if chosen == "per-step":
-                    rows = [_perstep_engine(
-                        psi_pad[bi], nu_pad[bi], nu_u_j[bi],
-                        mask_j[bi] if mask_j.ndim == 2 else mask_j, a,
-                        lam_list[bi], lat_j[bi], float(kp_np[bi]),
-                        float(boff_np[bi]), dt_frames, int(chunk),
-                        int(cfg.record_every), interp, False, rb_dense)
-                        for bi in range(b)]
-                    psi_pad = psi_pad.at[:b].set(
-                        jnp.stack([r[0] for r in rows]))
-                    nu_pad = nu_pad.at[:b].set(
-                        jnp.stack([r[1] for r in rows]))
-                    rec = jnp.stack([r[2] for r in rows], axis=1)
-                    if rb_dense:
-                        beta_chunks.append(np.stack(
-                            [np.asarray(r[3])[:, :n] for r in rows]))
-                else:
-                    psi_pad, nu_pad, rec, brec = _fused_engine(
-                        psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j, a,
-                        lam_list[0], lamsum_j, lat_j, dt_frames,
-                        int(chunk), int(cfg.record_every), chosen, int(tj),
-                        interp, False, rb_dense)
-                    if rb_dense:
-                        beta_chunks.append(
-                            np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
-                freq_chunks.append(
-                    np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                with tr.span("chunk", engine=chosen, segment=si,
+                             launch=launches, records=int(chunk)):
+                    if chosen == "per-step":
+                        rows = [_perstep_engine(
+                            psi_pad[bi], nu_pad[bi], nu_u_j[bi],
+                            mask_j[bi] if mask_j.ndim == 2 else mask_j, a,
+                            lam_list[bi], lat_j[bi], float(kp_np[bi]),
+                            float(boff_np[bi]), dt_frames, int(chunk),
+                            int(cfg.record_every), interp, False, rb_dense,
+                            rw)
+                            for bi in range(b)]
+                        psi_pad = psi_pad.at[:b].set(
+                            jnp.stack([r[0] for r in rows]))
+                        nu_pad = nu_pad.at[:b].set(
+                            jnp.stack([r[1] for r in rows]))
+                        rec = jnp.stack([r[2] for r in rows], axis=1)
+                        if rb_dense:
+                            beta_chunks.append(np.stack(
+                                [np.asarray(r[3])[:, :n] for r in rows]))
+                        if rw:
+                            wm_c = Watermarks.stack(
+                                [_host_watermarks(r[4], chunk, None, n)
+                                 for r in rows])
+                    else:
+                        psi_pad, nu_pad, rec, brec, wm = _fused_engine(
+                            psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j, a,
+                            lam_list[0], lamsum_j, lat_j, dt_frames,
+                            int(chunk), int(cfg.record_every), chosen,
+                            int(tj), interp, False, rb_dense, rw)
+                        if rb_dense:
+                            beta_chunks.append(
+                                np.asarray(brec)[:, :b, :n]
+                                .transpose(1, 0, 2))
+                        if rw:
+                            wm_c = _host_watermarks(wm, chunk, b, n)
+                    freq_chunks.append(
+                        np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                if rw:
+                    wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
                 launches += 1
                 rec_done += chunk
                 if policy is not None and rec_done < total:
@@ -961,6 +1025,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                     # Only tripping draws rotate — a drifting draw must
                     # not perturb its well-behaved batchmates.
                     tripped = edge_estimates(beta_chunks[-1]) >= guard
+                    tr.event("guard_eval", record=int(rec_done),
+                             guard=float(guard),
+                             tripped=int(np.count_nonzero(tripped)))
                     if tripped.any():
                         psi_now, nu_now = live_state()
                         lam_eff, shift = _rotation_shifts(
@@ -970,6 +1037,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                         reframes.append(AppliedReframe(
                             record=rec_done, time=rec_done * rec_period,
                             shift=shift, auto=True))
+                        tr.event("reframe", record=int(rec_done), auto=True,
+                                 segment=si,
+                                 max_shift=int(np.abs(shift).max()))
                         # The rotation rewrites only traced inputs (the
                         # lamsum fold / per-step λeff tensors), so the
                         # re-prepped segment replays the SAME compiled
@@ -991,33 +1061,51 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                             boff_np = np.asarray(boff_j)
             continue
 
+        tr.event("engine_dispatch", segment=si, engine="segment-sum",
+                 records=int(seg.records))
         for _ in range(seg.records // chunk):
             # Per-launch derived seed: telemetry-noise keys must differ
             # across chunks (exact zeros when noise is off, so splitting
-            # stays bit-identical).
+            # stays bit-identical).  Watermarks need the β record even
+            # when the caller did not ask for one (rb_seg stays in charge
+            # of what the RESULT carries).
             cfg_chunk = dataclasses.replace(
                 cfg, steps=chunk * cfg.record_every,
-                seed=cfg.seed + 104729 * launches, record_beta=rb_seg)
-            if single:
-                res = simulate(topo, links_seg, ctrl, ppm_seg, cfg_chunk,
-                               init=state, edge_w=seg.edge_w,
-                               ctrl_mask=seg.ctrl_mask)
-            else:
-                res = simulate_ensemble(topo, links_seg, ctrl, ppm_seg,
-                                        cfg_chunk, init=state,
-                                        edge_w=seg.edge_w,
-                                        ctrl_mask=seg.ctrl_mask)
+                seed=cfg.seed + 104729 * launches,
+                record_beta=rb_seg or rw)
+            with tr.span("chunk", engine="segment-sum", segment=si,
+                         launch=launches, records=int(chunk)):
+                if single:
+                    res = simulate(topo, links_seg, ctrl, ppm_seg, cfg_chunk,
+                                   init=state, edge_w=seg.edge_w,
+                                   ctrl_mask=seg.ctrl_mask)
+                else:
+                    res = simulate_ensemble(topo, links_seg, ctrl, ppm_seg,
+                                            cfg_chunk, init=state,
+                                            edge_w=seg.edge_w,
+                                            ctrl_mask=seg.ctrl_mask)
             state = res
             freq_chunks.append(res.freq_ppm)
             beta_chunks.append(res.beta)
             launches += 1
             rec_done += chunk
+            if rw:
+                # Host-side watermark fold: the per-edge record's
+                # destination aggregation is the same per-node net
+                # occupancy the kernel lanes watermark in VMEM.
+                net_wm = node_net_occupancy(topo, res.beta, seg.edge_w)
+                wm_c = Watermarks.from_record(np.asarray(net_wm),
+                                              res.freq_ppm)
+                wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
             if policy is not None and rec_done < total:
                 # Same trigger quantity as the dense lanes: the per-edge
                 # record folded by destination, then edge-estimated per
                 # draw — only tripping draws rotate.
                 net = node_net_occupancy(topo, res.beta, seg.edge_w)
                 tripped = edge_estimates(net) >= guard
+                tr.event("guard_eval", record=int(rec_done),
+                         guard=float(guard),
+                         tripped=int(np.count_nonzero(tripped)))
                 if tripped.any():
                     lam_eff, shift = _rotation_shifts(
                         topo, lam_eff, res.psi, res.nu, lat_frames,
@@ -1026,6 +1114,9 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                     reframes.append(AppliedReframe(
                         record=rec_done, time=rec_done * rec_period,
                         shift=shift, auto=True))
+                    tr.event("reframe", record=int(rec_done), auto=True,
+                             segment=si,
+                             max_shift=int(np.abs(shift).max()))
                     links_seg = LinkParams(latency_s=seg.latency_s,
                                            beta0=np.array(lam_eff, copy=True))
 
@@ -1050,6 +1141,14 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                 else np.zeros(freq.shape[:-1] + (0,), np.float32))
         psi_f, nu_f, c_state = state.psi, state.nu, state.c_state
 
+    wm_res = wm_acc
+    if wm_res is not None and single and (dense or sparse):
+        wm_res = wm_res[0]
+    if tr:
+        cs1 = compile_stats()
+        tr.event("compile_stats", before=cs0, after=cs1,
+                 delta={k: cs1[k] - cs0[k] for k in cs1})
+
     total = comp.total_records
     times = (np.arange(1, total + 1)) * rec_period
     return ScenarioResult(
@@ -1060,4 +1159,5 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                                 for s in comp.segments]),
         topo=topo, links=links, ctrl=ctrl, cfg=cfg, compiled=comp,
         engine=eng_label, tile_j=tile_j, chunk_records=chunk,
-        num_launches=launches, reframes=reframes)
+        num_launches=launches, reframes=reframes,
+        watermarks=wm_res, trace=(tr if tr else None))

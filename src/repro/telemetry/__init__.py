@@ -1,0 +1,29 @@
+"""Run observability: in-kernel excursion watermarks + flight recorder.
+
+Two halves (see the module docstrings):
+
+* :mod:`repro.telemetry.watermarks` — O(N) running aggregates the
+  engines carry in VMEM scratch (peak |β|, time-of-peak, ν min/max) so
+  1M-node runs report their health without an (R, B, N) record.
+* :mod:`repro.telemetry.trace` — :class:`RunTrace`, the host-side
+  flight recorder of typed wall-clock span/event records threaded
+  through ``run_scenario`` / ``ChaosCampaign`` / the bench harness,
+  with JSONL export and ``scripts/trace_report.py`` rendering.
+* :mod:`repro.telemetry.compile_stats` — jit-cache introspection
+  (promoted from the test harness) backing the zero-recompile events.
+"""
+from repro.telemetry.compile_stats import (compile_stats, engine_cache_sizes,
+                                           no_new_compiles)
+from repro.telemetry.trace import NULL_TRACE, RunTrace, TraceEvent, coerce_trace
+from repro.telemetry.watermarks import Watermarks
+
+__all__ = [
+    "Watermarks",
+    "RunTrace",
+    "TraceEvent",
+    "NULL_TRACE",
+    "coerce_trace",
+    "compile_stats",
+    "engine_cache_sizes",
+    "no_new_compiles",
+]

@@ -31,11 +31,12 @@ import numpy as np
 from repro.core import (ControllerConfig, SimConfig, Topology, cube,
                         fully_connected, hourglass, make_links,
                         random_regular, simulate, torus3d)
-from repro.core.frame_model import (LinkParams, _jitted_run,
-                                    _jitted_run_ensemble)
+from repro.core.frame_model import LinkParams
 from repro.kernels import simulate_dense_perstep, simulate_fused
-from repro.kernels.ops import (_fused_engine, _perstep_engine,
-                               _sparse_engine)
+# Promoted to the production telemetry package (PR 8) so examples and CLI
+# tooling can assert the zero-recompile guarantee outside pytest;
+# re-exported here so existing test imports keep working.
+from repro.telemetry import engine_cache_sizes, no_new_compiles  # noqa: F401
 
 # ------------------------------------------------------- tolerance policy
 
@@ -177,55 +178,9 @@ def assert_beta_parity(beta, ref, atol: float = BETA_ATOL_FRAMES):
 
 
 # ----------------------------------------------------- compile-count guard
-
-def engine_cache_sizes() -> dict:
-    """Jit-cache entry counts of every lane, for no-recompile assertions.
-
-    fused and tiled share one jitted wrapper (the engine choice is a
-    static argument of ``_fused_engine``), so they share a key here.
-    """
-    return {
-        "fused/tiled": _fused_engine._cache_size(),
-        "per-step": _perstep_engine._cache_size(),
-        "sparse": _sparse_engine._cache_size(),
-        "segment-sum": _jitted_run()._cache_size(),
-        "segment-sum-ensemble": _jitted_run_ensemble()._cache_size(),
-    }
-
-
-class no_new_compiles:
-    """Context manager pinning the compile budget of a block::
-
-        with no_new_compiles():            # zero new executables
-            run_scenario(...)              # (warm-cache replay)
-
-        with no_new_compiles(sparse=1):    # exactly-once compile budget
-            run_scenario(..., engine="sparse")
-
-    Keys are :func:`engine_cache_sizes` keys; unnamed lanes must stay
-    exactly flat.
-    """
-
-    def __init__(self, **budget: int):
-        unknown = set(budget) - set(engine_cache_sizes())
-        if unknown:
-            raise KeyError(f"unknown engine cache keys: {sorted(unknown)}")
-        self.budget = budget
-
-    def __enter__(self):
-        self.before = engine_cache_sizes()
-        return self
-
-    def __exit__(self, exc_type, exc, tb):
-        if exc_type is not None:
-            return False
-        after = engine_cache_sizes()
-        for k, n0 in self.before.items():
-            allowed = self.budget.get(k, 0)
-            grew = after[k] - n0
-            assert grew <= allowed, (
-                f"{k} compiled {grew} new executable(s), budget {allowed}")
-        return False
+#
+# engine_cache_sizes / no_new_compiles live in repro.telemetry.compile_stats
+# now (imported above).
 
 
 # ------------------------------------------- property-test graph builders
