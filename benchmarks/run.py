@@ -5,8 +5,9 @@ benches. Prints ``name,us_per_call,derived`` CSV (stdout), one row each.
                                            [--smoke] [--json PATH]
                                            [--trace PATH]
 
-``--smoke`` runs only the fast kernel-engine subset (kernel_perf.SMOKE) —
-the per-PR perf-trajectory gate scripts/ci.sh uses.  ``--json PATH`` also
+``--smoke`` runs the fast CI subset (kernel_perf.SMOKE plus the
+serving_goodput gate) — the per-PR perf-trajectory gate scripts/ci.sh
+uses.  ``--json PATH`` also
 writes the rows as a JSON baseline (see benchmarks/README.md for how the
 fields are meant to be read).  ``--trace PATH`` records the whole harness
 run as a flight-recorder JSONL (one ``bench`` span per lane, one
@@ -45,15 +46,16 @@ def main() -> None:
                     help="write a flight-recorder JSONL of the run to PATH")
     args = ap.parse_args()
 
-    from benchmarks import kernel_perf
+    from benchmarks import kernel_perf, serving_bench
 
     if args.smoke:
-        benches = list(kernel_perf.SMOKE)
+        benches = list(kernel_perf.SMOKE) + list(serving_bench.SMOKE)
     else:
         from benchmarks import (paper_experiments, roofline_report,
                                 straggler_bench)
         benches = (paper_experiments.ALL + kernel_perf.ALL
-                   + straggler_bench.ALL + roofline_report.ALL)
+                   + straggler_bench.ALL + serving_bench.ALL
+                   + roofline_report.ALL)
 
     from repro.telemetry import compile_stats, coerce_trace
     tr = coerce_trace(bool(args.trace), name="bench-harness")

@@ -1,0 +1,67 @@
+"""Serving-goodput bench lane: the §8 claim as a hard CI gate.
+
+One bittide ensemble run (controlled + free-running draws, one compile)
+paces a continuous-batching serving cluster through a straggler onset
+and mid-serve faults; the same workload is served under all three pacing
+disciplines and the lane FAILs if logically-synchronous pacing ever
+yields less goodput than the global barrier — the inequality the paper's
+closing argument rests on.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ring
+from repro.scenarios import (DriftRamp, FreqStep, NodeHoldover, NodeReset,
+                             Scenario)
+from repro.serve import (DISCIPLINES, ArrivalConfig, DisciplineConfig,
+                         ServeConfig, StepCostModel, generate_requests,
+                         pace_workers, serve)
+
+
+def bench_serving_goodput():
+    workers, duration = 8, 30.0
+    rng = np.random.default_rng(7)
+    speed = rng.uniform(-50_000, 50_000, workers)
+    scenario = Scenario(events=(
+        FreqStep(t=5.0, nodes=(3,), delta_ppm=-80_000.0),
+        DriftRamp(t=10.0, t_end=18.0, nodes=(5,), rate_ppm_per_s=4_000.0),
+        NodeHoldover(t=14.0, nodes=(1,)),
+        NodeReset(t=22.0, nodes=(1,)),
+    ), name="bench-serve-straggler")
+
+    t0 = time.perf_counter()
+    pe = pace_workers(ring(workers), speed, scenario, kp=5e-3,
+                      steps_per_second=10.0, duration_s=duration,
+                      record_every=5)
+    reqs = generate_requests(ArrivalConfig(
+        rate_rps=6.0, duration_s=duration, diurnal_amp=0.4,
+        diurnal_period_s=duration, burst_rate_mult=3.0,
+        burst_duration_s=2.0, num_bursts=1, prompt_mean=48.0,
+        output_mean=24.0, seed=0))
+    cost = StepCostModel.from_zoo("smollm-135m", decode_slots=8,
+                                  hw_flops=1e12)
+    cfg = ServeConfig(decode_slots=8, prefill_chunk=64,
+                      slo_s=duration / 2)
+    res = {d: serve(reqs, pe.schedule(d, DisciplineConfig(queue_depth=16)),
+                    cost, cfg) for d in DISCIPLINES}
+    us = (time.perf_counter() - t0) * 1e6
+
+    bt, bar, asy = res["bittide"], res["barrier"], res["async"]
+    ok = (bt.goodput_tps >= bar.goodput_tps
+          and bt.completed == reqs.num_requests)
+    return ("serving_goodput", us,
+            f"goodput_bittide={bt.goodput_tps:.1f};"
+            f"goodput_barrier={bar.goodput_tps:.1f};"
+            f"goodput_async={asy.goodput_tps:.1f};"
+            f"p99_bittide={bt.p99_s:.2f};"
+            f"p99_barrier={bar.p99_s:.2f};"
+            f"p99_async={asy.p99_s:.2f};"
+            f"offered={reqs.offered_load_tps:.1f};"
+            f"pass_bittide_goodput={'PASS' if ok else 'FAIL'}")
+
+
+ALL = [bench_serving_goodput]
+SMOKE = [bench_serving_goodput]

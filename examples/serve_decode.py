@@ -4,6 +4,9 @@ Runs a reduced config on CPU; the same `ModelZoo.prefill/decode` pair is
 what the decode_32k / long_500k dry-run cells lower at production scale.
 
     PYTHONPATH=src python examples/serve_decode.py --arch mamba2-370m
+
+`--smoke` shrinks batch/prompt/new-tokens to a seconds-scale config; the
+`model_smoke`-marked test drives that path and checks the output shape.
 """
 import argparse
 import time
@@ -17,13 +20,17 @@ from repro.models import ModelZoo
 from repro.models.layers import materialize
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batch/prompt/decode for CI")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batch, args.prompt_len, args.new_tokens = 2, 8, 4
 
     cfg = get_config(args.arch).reduced()
     zoo = ModelZoo(cfg)
@@ -73,6 +80,7 @@ def main():
     print(f"[decode] {args.new_tokens} tokens x {args.batch} seqs in "
           f"{dt*1e3:.0f} ms ({args.new_tokens*args.batch/max(dt,1e-9):.0f} tok/s)")
     print("[decode] sample:", out[0][:16], "...")
+    return out
 
 
 if __name__ == "__main__":

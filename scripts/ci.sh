@@ -72,6 +72,12 @@ if [ "$FAST" -eq 1 ]; then
     # the whole observability path (record -> export -> render) end to end.
     python scripts/trace_report.py --selftest > /dev/null
     echo "ci: trace smoke (trace_report --selftest) green"
+
+    # Serving smoke lane: one paced ensemble (controlled + free draws)
+    # drives the continuous-batching engine under all three disciplines;
+    # the driver exits nonzero if bittide goodput falls below barrier.
+    python examples/serve_bittide.py --smoke --no-plot > /dev/null
+    echo "ci: serving smoke (serve_bittide --smoke) green"
 else
     python -m pytest -x -q "$@"
 
@@ -93,8 +99,9 @@ else
     python examples/cable_swap.py --smoke --no-plot > /dev/null
     python examples/auto_reframe.py --smoke --no-plot > /dev/null
     python examples/chaos_campaign.py --smoke --no-plot > /dev/null
-    echo "ci: scenario smoke (cable_swap, auto_reframe, chaos_campaign" \
-         "--smoke) green"
+    python examples/serve_bittide.py --smoke --no-plot > /dev/null
+    echo "ci: scenario smoke (cable_swap, auto_reframe, chaos_campaign," \
+         "serve_bittide --smoke) green"
 fi
 
 python -m benchmarks.run --smoke --json BENCH_kernels.json \

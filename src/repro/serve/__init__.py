@@ -1,0 +1,40 @@
+"""repro.serve — bittide-paced continuous-batching serving simulator.
+
+The paper's closing argument (§1.4/§8) made quantitative: a serving
+cluster whose workers are the nodes of a bittide ensemble.  Four layers,
+each its own module:
+
+* :mod:`repro.serve.arrival` — seeded open-loop request arrival
+  processes (Poisson base rate, diurnal modulation, flash bursts) with
+  heavy-tailed prompt/output length draws;
+* :mod:`repro.serve.costmodel` — analytic prefill/decode tick prices
+  from the ``ModelZoo`` FLOP accounting (real architectures' arithmetic,
+  no per-tick forward passes);
+* :mod:`repro.serve.pacing` — ONE compiled ``run_scenario`` ensemble
+  (draw 0 controlled, draw 1 free-running, gains traced per draw)
+  lowered to three pacing disciplines: logically-synchronous
+  ``bittide``, per-step global ``barrier``, bounded-queue ``async``;
+* :mod:`repro.serve.engine` — the continuous-batching slot scheduler
+  (admission queue, chunked prefill, one token per occupied slot per
+  tick) whose wall clock is advanced by the chosen discipline, emitting
+  p50/p99/p999 latency, goodput, and slot-occupancy telemetry through
+  the shared ``RunTrace``/``Watermarks`` layer.
+
+Mid-serve ``Scenario`` events — straggler FreqStep, DriftRamp, holdover,
+LinkDrop — flow from the frame model into the serving numbers with zero
+recompiles; ``tests/test_serve_properties.py`` pins the serving
+invariants and the compile contract.
+"""
+from .arrival import ArrivalConfig, RequestTable, generate_requests
+from .costmodel import StepCostModel
+from .engine import ServeConfig, ServeResult, TickTrace, serve
+from .pacing import (DISCIPLINES, DisciplineConfig, PacedEnsemble,
+                     PacingSchedule, pace_workers)
+
+__all__ = [
+    "ArrivalConfig", "RequestTable", "generate_requests",
+    "StepCostModel",
+    "ServeConfig", "ServeResult", "TickTrace", "serve",
+    "DISCIPLINES", "DisciplineConfig", "PacedEnsemble", "PacingSchedule",
+    "pace_workers",
+]

@@ -1,0 +1,76 @@
+"""Backfill unit tests for ``repro.ft.straggler``.
+
+The report fields are checked against a hand-computed case: with worker
+step-rate offsets ±50 000 ppm on adjacent ring nodes and NO control, the
+inter-worker queue grows at the relative rate difference —
+
+    Δν = 0.1 (relative) × 10 steps/s × 100 s = 100 microbatches
+
+— while the controlled run holds the same queue to a few microbatches,
+drives the rate spread to ~0, and settles at the consensus (mean) rate.
+Both controller branches (pi with ki>0, pure proportional with ki=0)
+are exercised, plus the queue-depth boundedness flag in both directions.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ring
+from repro.ft.straggler import StragglerReport, simulate_stragglers
+
+SPEED = np.array([50_000.0, -50_000.0, 0.0, 0.0])  # ±5% on neighbors
+SPS = 10.0
+DURATION = 100.0
+
+
+@pytest.fixture(scope="module", params=[5e-5, 0.0], ids=["pi", "prop"])
+def report(request):
+    return request.param, simulate_stragglers(
+        ring(4), SPEED, queue_depth=512, steps_per_second=SPS,
+        duration_s=DURATION, kp=5e-3, ki=request.param)
+
+
+def test_uncontrolled_peak_matches_hand_computation(report):
+    """kp=0 queue growth = Δν_rel · steps_per_second · duration."""
+    _, rep = report
+    expected = 0.1 * SPS * DURATION  # 100 microbatches
+    assert rep.uncontrolled_queue_peak == pytest.approx(expected, rel=0.02)
+
+
+def test_controlled_queue_stays_small_and_bounded(report):
+    _, rep = report
+    assert isinstance(rep, StragglerReport)
+    assert rep.controlled_queue_peak < 10.0  # vs ~100 uncontrolled
+    assert rep.controlled_queue_peak < rep.uncontrolled_queue_peak / 5
+    assert rep.bounded  # peak well within depth/2 = 256
+
+
+def test_rate_spread_collapses(report):
+    """Controlled workers agree on a common step rate (±5% at t=0)."""
+    _, rep = report
+    assert rep.rate_spread_final < 1e-3  # relative; started at 1e-1
+
+
+def test_throughput_ratio_is_consensus_over_mean(report):
+    """Symmetric offsets ⇒ consensus ≈ mean ⇒ ratio ≈ 1 (no slowest-
+    worker penalty — the §8 contrast with barrier synchronization)."""
+    _, rep = report
+    assert rep.throughput_ratio == pytest.approx(1.0, abs=5e-3)
+
+
+def test_integral_term_tightens_queue_peak():
+    """Beyond-paper PI branch: ki>0 drives queues back toward the
+    setpoint, so its peak is no worse than pure proportional."""
+    kw = dict(queue_depth=512, steps_per_second=SPS, duration_s=DURATION,
+              kp=5e-3)
+    pi = simulate_stragglers(ring(4), SPEED, ki=5e-5, **kw)
+    prop = simulate_stragglers(ring(4), SPEED, ki=0.0, **kw)
+    assert pi.controlled_queue_peak <= prop.controlled_queue_peak
+
+
+def test_bounded_flag_respects_queue_depth():
+    """Same dynamics, tiny buffers: the bound must report False."""
+    rep = simulate_stragglers(ring(4), SPEED, queue_depth=8,
+                              steps_per_second=SPS, duration_s=DURATION,
+                              kp=5e-3, ki=0.0)
+    assert rep.controlled_queue_peak > 8 / 2
+    assert not rep.bounded

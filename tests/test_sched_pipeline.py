@@ -1,0 +1,78 @@
+"""Backfill unit tests for ``repro.sched.pipeline`` plan arithmetic.
+
+``bubble_fraction`` and ``makespan_ticks`` are pinned on hand-computed
+timetables over a line topology with unit logical latency, including the
+two edge cases the formulas are easiest to get wrong on: a single stage
+(no transfers, no bubble) and fewer microbatches than stages (fill/drain
+dominated).
+"""
+import numpy as np
+import pytest
+
+from repro.core.schedule import LogicalSynchronyNetwork
+from repro.core.topology import line
+from repro.sched.pipeline import plan
+
+
+def lsn_line(n, lam_ticks=1):
+    topo = line(n)
+    return LogicalSynchronyNetwork(
+        topo, np.full(topo.num_edges, lam_ticks, np.int64))
+
+
+def test_single_stage_plan():
+    """S=1: no transfers, zero bubble; makespan is the serial fwd fill
+    followed by the bwd chain: fwd_ticks + M·bwd_ticks."""
+    p = plan(lsn_line(1), stages=(0,), num_microbatches=3,
+             fwd_ticks=2, bwd_ticks=3, activation_frames=0)
+    assert p.bubble_fraction == 0.0
+    assert p.schedule.events == []
+    # fwd done at 2,4,6; bwd chains 2→5→8→11
+    assert p.makespan_ticks == 11
+    assert p.bounded
+
+
+def test_fewer_microbatches_than_stages():
+    """S=4, M=2, λ=1, fwd=bwd=1, zero activation frames — every tick of
+    the timetable hand-checked: fwd drains at tick 8, bwd at tick 15."""
+    p = plan(lsn_line(4), stages=(0, 1, 2, 3), num_microbatches=2,
+             fwd_ticks=1, bwd_ticks=1, activation_frames=0)
+    assert p.bubble_fraction == pytest.approx(3 / 5)
+    assert p.makespan_ticks == 15
+    # (S-1) transfers per microbatch, each direction
+    assert len(p.schedule.events) == 2 * (4 - 1) * 2
+    tags = {e.tag for e in p.schedule.events}
+    assert tags == {"fwd0", "fwd1", "bwd0", "bwd1"}
+
+
+def test_bubble_fraction_shrinks_with_more_microbatches():
+    """GPipe (S-1)/(S-1+M): monotone in M, → 0 as M → ∞."""
+    fracs = [plan(lsn_line(2), stages=(0, 1), num_microbatches=m,
+                  fwd_ticks=1, bwd_ticks=1, activation_frames=0
+                  ).bubble_fraction for m in (1, 2, 8, 30)]
+    assert fracs[0] == pytest.approx(1 / 2)
+    assert fracs[-1] == pytest.approx(1 / 31)
+    assert all(a > b for a, b in zip(fracs, fracs[1:]))
+
+
+def test_makespan_grows_with_logical_latency():
+    """λ enters every hop of the timetable: scaling λ must lengthen the
+    makespan, and never shorten it."""
+    kw = dict(stages=(0, 1, 2), num_microbatches=4, fwd_ticks=2,
+              bwd_ticks=2, activation_frames=1)
+    fast = plan(lsn_line(3, lam_ticks=1), **kw)
+    slow = plan(lsn_line(3, lam_ticks=7), **kw)
+    assert slow.makespan_ticks > fast.makespan_ticks
+
+
+def test_bounded_flag_tracks_queue_depth():
+    """The same timetable is schedulable with deep buffers and not with
+    buffers smaller than one activation transfer."""
+    kw = dict(stages=(0, 1, 2, 3), num_microbatches=3, fwd_ticks=1,
+              bwd_ticks=1, activation_frames=4)
+    deep = plan(lsn_line(4), queue_depth_frames=1 << 16, **kw)
+    shallow = plan(lsn_line(4), queue_depth_frames=3, **kw)
+    assert deep.bounded
+    assert not shallow.bounded
+    # depth never changes the timetable itself, only schedulability
+    assert deep.makespan_ticks == shallow.makespan_ticks

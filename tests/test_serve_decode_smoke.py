@@ -1,0 +1,25 @@
+"""Smoke test for ``examples/serve_decode.py --smoke``.
+
+Marked ``model_smoke`` (full tier only): it materializes real ModelZoo
+params and jits prefill+decode, which is seconds even at the smoke size.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.model_smoke
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "examples"))
+
+import serve_decode  # noqa: E402
+
+
+def test_serve_decode_smoke_shapes():
+    out = serve_decode.main(["--smoke"])
+    # --smoke pins batch=2, new_tokens=4
+    assert out.shape == (2, 4)
+    assert out.dtype == np.int32
+    assert out.min() >= 0

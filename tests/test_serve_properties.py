@@ -1,0 +1,217 @@
+"""Serving-invariant property suite for ``repro.serve``.
+
+The continuous-batching scheduler is pinned by conservation-style
+invariants rather than golden outputs (the scheduler is allowed to get
+smarter; the invariants are not allowed to break):
+
+* request conservation — every admitted request is exactly one of
+  completed / in-flight / queued at every tick;
+* no decode-slot double-booking;
+* per-request token monotonicity (never decreasing, at most one per
+  tick, never past the budget);
+* goodput ≤ offered load, for every discipline;
+* seeded reproducibility — same seed ⇒ bit-identical arrival table and
+  bit-identical serve trace;
+
+plus the pacing compile contract: ONE compiled ensemble run paces all
+workers across mid-serve event segments, and warm replays with different
+event magnitudes add zero cache entries (``no_new_compiles``).
+
+Runs under real hypothesis when installed, else the deterministic
+``hypcompat`` fallback.
+"""
+import numpy as np
+from hypcompat import given, settings, st
+
+from repro.core import ring
+from repro.scenarios import (DriftRamp, FreqStep, LinkDrop, LinkRestore,
+                             NodeHoldover, NodeReset, Scenario)
+from repro.serve import (DISCIPLINES, ArrivalConfig, DisciplineConfig,
+                         ServeConfig, StepCostModel, generate_requests,
+                         pace_workers, serve)
+from repro.serve.engine import FREE
+from repro.telemetry import no_new_compiles
+
+WORKERS = 8
+SPEED_PPM = np.random.default_rng(7).uniform(-50_000, 50_000, WORKERS)
+
+# A mid-serve fault sequence touching every event family the serving
+# story cares about: a straggler onset, a thermal drift, a holdover and
+# rejoin, a link outage and restore.
+EVENTS = Scenario(events=(
+    FreqStep(t=6.0, nodes=(3,), delta_ppm=-60_000.0),
+    DriftRamp(t=10.0, t_end=16.0, nodes=(5,), rate_ppm_per_s=2_000.0),
+    NodeHoldover(t=12.0, nodes=(1,)),
+    NodeReset(t=18.0, nodes=(1,)),
+    LinkDrop(t=14.0, edges=(0,)),
+    LinkRestore(t=20.0, edges=(0,)),
+), name="serve-faults")
+
+# One paced ensemble shared by the scheduler-invariant properties: the
+# engine under test is host-side and fast, the pacing run is the only
+# jitted piece — pay for it once.
+_PACED = {}
+
+
+def paced():
+    if "pe" not in _PACED:
+        _PACED["pe"] = pace_workers(ring(WORKERS), SPEED_PPM, EVENTS,
+                                    kp=5e-3, steps_per_second=10.0,
+                                    duration_s=24.0, record_every=5)
+    return _PACED["pe"]
+
+
+def cost_model():
+    if "cost" not in _PACED:
+        _PACED["cost"] = StepCostModel.from_zoo(
+            "smollm-135m", decode_slots=8, hw_flops=1e12)
+    return _PACED["cost"]
+
+
+def run_one(seed, rate, slots, chunk, discipline="bittide",
+            record_ticks=True):
+    reqs = generate_requests(ArrivalConfig(
+        rate_rps=rate, duration_s=10.0, diurnal_amp=0.4,
+        burst_rate_mult=3.0, burst_duration_s=1.0, num_bursts=1,
+        prompt_mean=32.0, prompt_max=128, output_mean=16.0,
+        output_max=64, seed=seed))
+    cfg = ServeConfig(decode_slots=slots, prefill_chunk=chunk,
+                      slo_s=20.0, record_ticks=record_ticks)
+    sched = paced().schedule(discipline, DisciplineConfig(queue_depth=16))
+    return reqs, serve(reqs, sched, cost_model(), cfg)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(0.5, 6.0),
+       slots=st.integers(1, 8), chunk=st.integers(1, 96))
+def test_property_request_conservation(seed, rate, slots, chunk):
+    """admitted == queued + in-flight + completed at every tick."""
+    _, res = run_one(seed, rate, slots, chunk)
+    tt = res.ticks
+    assert tt is not None and len(tt.t_end)
+    np.testing.assert_array_equal(
+        tt.admitted, tt.queued + tt.in_flight + tt.completed)
+    # and at the end everything admitted was completed (no lost requests)
+    assert res.completed == res.num_requests == tt.admitted[-1]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), slots=st.integers(2, 8),
+       chunk=st.integers(8, 96))
+def test_property_no_slot_double_booking(seed, slots, chunk):
+    """A live request holds exactly one slot; a slot one request."""
+    _, res = run_one(seed, 4.0, slots, chunk)
+    for row in res.ticks.slot_req:
+        live = row[row != FREE]
+        assert len(live) == len(np.unique(live))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), slots=st.integers(1, 8),
+       chunk=st.integers(1, 96))
+def test_property_token_monotonicity(seed, slots, chunk):
+    """Per-request token counts: nondecreasing, ≤ 1/tick, ≤ budget."""
+    reqs, res = run_one(seed, 3.0, slots, chunk)
+    gen = res.ticks.gen_tokens
+    steps = np.diff(gen, axis=0, prepend=np.zeros((1, gen.shape[1]),
+                                                  gen.dtype))
+    assert steps.min() >= 0
+    assert steps.max() <= 1
+    assert np.all(gen[-1] <= reqs.output_tokens)
+    np.testing.assert_array_equal(res.generated_tokens, gen[-1])
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(1.0, 12.0),
+       disc=st.sampled_from(DISCIPLINES))
+def test_property_goodput_le_offered(seed, rate, disc):
+    """Goodput can never exceed offered load — even under overload."""
+    _, res = run_one(seed, rate, 4, 32, discipline=disc,
+                     record_ticks=False)
+    assert res.goodput_tps <= res.offered_tps + 1e-9
+    assert 0.0 <= res.slot_occupancy_mean <= 1.0 + 1e-12
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_seeded_reproducibility(seed):
+    """Same seed ⇒ bit-identical workload AND bit-identical serve trace."""
+    cfg = ArrivalConfig(rate_rps=3.0, duration_s=8.0, diurnal_amp=0.5,
+                        num_bursts=2, burst_rate_mult=2.0,
+                        burst_duration_s=1.0, seed=seed)
+    a, b = generate_requests(cfg), generate_requests(cfg)
+    assert a.fingerprint() == b.fingerprint()
+    other = generate_requests(
+        ArrivalConfig(rate_rps=3.0, duration_s=8.0, seed=seed + 1))
+    assert a.fingerprint() != other.fingerprint()
+
+    sched = paced().schedule("bittide")
+    scfg = ServeConfig(decode_slots=4, prefill_chunk=32)
+    r1 = serve(a, sched, cost_model(), scfg)
+    r2 = serve(b, sched, cost_model(), scfg)
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+def test_one_compile_paces_all_segments():
+    """The pacing ensemble replays one compiled engine across every
+    mid-serve event segment, and a warm re-pace with different event
+    magnitudes (same shapes) adds ZERO cache entries."""
+    pe = paced()  # cold run may compile; it spans all segments already
+    assert pe.result.freq_ppm.shape[0] == 2
+    assert len(pe.result.compiled.segments) > 3
+    assert pe.result.num_launches >= len(pe.result.compiled.segments)
+
+    hotter = Scenario(events=(
+        FreqStep(t=6.0, nodes=(3,), delta_ppm=-90_000.0),
+        DriftRamp(t=10.0, t_end=16.0, nodes=(5,), rate_ppm_per_s=3_000.0),
+        NodeHoldover(t=12.0, nodes=(1,)),
+        NodeReset(t=18.0, nodes=(1,)),
+        LinkDrop(t=14.0, edges=(0,)),
+        LinkRestore(t=20.0, edges=(0,)),
+    ), name="serve-faults-hot")
+    with no_new_compiles():
+        pe2 = pace_workers(ring(WORKERS), SPEED_PPM, hotter, kp=5e-3,
+                           steps_per_second=10.0, duration_s=24.0,
+                           record_every=5)
+    assert pe2.result.freq_ppm.shape == pe.result.freq_ppm.shape
+
+
+def test_disciplines_have_expected_shape_and_overheads():
+    pe = paced()
+    t_len = len(pe.times)
+    for d in DISCIPLINES:
+        sched = pe.schedule(d)
+        assert sched.rate.shape == (t_len,)
+        assert np.all(sched.rate > 0)
+        assert np.all(np.diff(sched.stall_cum_s) >= 0)
+    assert pe.schedule("bittide").step_overhead_s == 0.0
+    assert pe.schedule("barrier").step_overhead_s > 0.0
+
+
+def test_bittide_goodput_beats_barrier_under_straggler():
+    """The §8 claim at serving granularity: with a straggler onset, the
+    logically-synchronous cluster settles at consensus (≈ mean) rate
+    while the barrier'd cluster is pinned to the slowest worker AND pays
+    the per-step barrier — strictly worse goodput and p99."""
+    reqs = generate_requests(ArrivalConfig(
+        rate_rps=4.0, duration_s=12.0, prompt_mean=32.0, output_mean=16.0,
+        seed=3))
+    cfg = ServeConfig(decode_slots=8, prefill_chunk=64, slo_s=20.0)
+    res = {d: serve(reqs, paced().schedule(d), cost_model(), cfg)
+           for d in DISCIPLINES}
+    assert res["bittide"].goodput_tps >= res["barrier"].goodput_tps
+    assert res["bittide"].p99_s <= res["barrier"].p99_s + 1e-9
+
+
+def test_serve_watermarks_and_trace():
+    """Slot-occupancy/rate excursions ride the shared telemetry layer."""
+    reqs = generate_requests(ArrivalConfig(rate_rps=3.0, duration_s=8.0,
+                                           seed=11))
+    res = serve(reqs, paced().schedule("bittide"), cost_model(),
+                ServeConfig(decode_slots=4), trace=True)
+    wm = res.watermarks
+    assert wm is not None
+    assert 0.0 < float(wm.beta_abs_max.max()) <= 1.0  # occupied fraction
+    assert wm.num_records == res.num_ticks
+    kinds = {e.kind for e in res.trace.events}
+    assert {"serve_start", "serve_done"} <= kinds
