@@ -318,8 +318,11 @@ def bench_beta_overhead():
                               record_beta=record_beta)
 
     res_on = run(True)
-    us_off = _bench(lambda: run(False), iters=3)
-    us_on = _bench(lambda: run(True), iters=3)
+    # Interleaved min-of-3: the ratio gate rides on a CPU-interpret box
+    # whose single-shot timings swing ±30%; min-of-K on both sides keeps
+    # the gate about the kernel variant, not scheduler noise.
+    us_off = min(_bench(lambda: run(False), iters=3) for _ in range(3))
+    us_on = min(_bench(lambda: run(True), iters=3) for _ in range(3))
     ratio = us_on / us_off
     beta_max = float(np.abs(res_on.beta).max())
 
@@ -403,15 +406,26 @@ def bench_reframe_overhead():
     inspection + rotation splices: the per-chunk edge-estimate matmul, the
     host Laplacian solves, and the λeff/lamsum re-preps).
 
-    Hard gate: pass_one_compile — replaying the WHOLE auto-reframed
-    scenario (including every rotation splice) against a warm cache must
-    add ZERO compile entries, because a rotation rewrites only traced
-    inputs (lamsum rows / λeff tensors), never a shape.  The overhead
-    ratio rides along informationally, as does the splice count and the
-    occupancy the loop reclaimed (max |β| with vs without reframing).
+    Hard gates (PR 10, in-kernel guard):
+
+    * pass_one_compile — replaying the WHOLE auto-reframed scenario
+      (including every rotation splice and every partial-chunk resume)
+      against a warm cache must add ZERO compile entries, because the
+      guard band, the stop cap, and a rotation's rewrites (lamsum rows /
+      λeff tensors) are all traced inputs, never shapes.
+    * pass_guard_latency — guard_latency_records (the worst splice's
+      trip-to-rotation exposure, in record periods) must be ≤ 1 on the
+      fused lane: the in-kernel guard freezes the chunk at the trip
+      record, so the host splices one record period after the crossing,
+      not one chunk.
+    * pass_overhead — the guarded replay must stay within 1.25x of the
+      guard-off replay (the band compare rides the measure pass; the
+      splice cost is the host Laplacian solves + re-preps).
     """
     from repro.core.reframing import ReframePolicy
+    from repro.kernels import EngineOptions
     from repro.scenarios import DriftRamp, Scenario, run_scenario
+    from repro.telemetry import Telemetry
 
     topo = fully_connected(8)
     links = make_links(topo, cable_m=2.0)
@@ -421,28 +435,38 @@ def bench_reframe_overhead():
     cfg = SimConfig(dt=1e-3, steps=720, record_every=12)
     sc = Scenario(events=(DriftRamp(t=0.06, t_end=0.54, nodes=(0, 1, 2),
                                     rate_ppm_per_s=7.5),), name="reframe")
-    pol = ReframePolicy(depth=16, margin=4.0)
+    # The paper's hardware operating point: 32-deep elastic buffers.
+    # (Shallower depths turn this scenario into a splice storm — a trip
+    # nearly every chunk — which measures splice frequency, not the
+    # guard machinery the ratio gate is for.)
+    pol = ReframePolicy(depth=32, margin=4.0)
 
     def run(auto):
-        return run_scenario(topo, links, ctrl, ppm, sc, cfg, engine="fused",
-                            record_beta=True,
-                            auto_reframe=pol if auto else False)
+        return run_scenario(topo, links, ctrl, ppm, sc, cfg,
+                            options=EngineOptions(engine="fused"),
+                            telemetry=Telemetry(beta=True,
+                                                guard=pol if auto else False))
 
     res_off = run(False)
     res_on = run(True)                    # warm compile (same executable)
     size0 = _fused_engine._cache_size()
-    us_on = _bench(lambda: run(True), iters=3)
+    us_on = min(_bench(lambda: run(True), iters=3) for _ in range(3))
     splice_compiles = _fused_engine._cache_size() - size0
-    us_off = _bench(lambda: run(False), iters=3)
+    us_off = min(_bench(lambda: run(False), iters=3) for _ in range(3))
     beta_off_max = float(np.abs(res_off.beta).max())
     beta_on_max = float(np.abs(res_on.beta).max())
+    ratio = us_on / us_off
+    guard_lat = max(r.guard_latency for r in res_on.reframes)
     return ("kernel_reframe_overhead", us_on,
-            f"ratio_vs_no_reframe={us_on / us_off:.2f};"
+            f"ratio_vs_no_reframe={ratio:.2f};"
             f"reframes={len(res_on.reframes)};"
+            f"guard_latency_records={guard_lat};"
             f"beta_abs_max_off={beta_off_max:.1f};"
             f"beta_abs_max_on={beta_on_max:.1f};"
             f"splice_compiles={splice_compiles};"
-            f"pass_one_compile={'PASS' if splice_compiles == 0 else 'FAIL'}")
+            f"pass_one_compile={'PASS' if splice_compiles == 0 else 'FAIL'};"
+            f"pass_guard_latency={'PASS' if guard_lat <= 1 else 'FAIL'};"
+            f"pass_overhead={'PASS' if ratio <= 1.25 else 'FAIL'}")
 
 
 def bench_chaos_campaign():

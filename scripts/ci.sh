@@ -67,6 +67,34 @@ if [ "$FAST" -eq 1 ]; then
     fi
     echo "ci: sparse smoke (test_sparse_engine) green"
 
+    # Deprecation-shim smoke: the legacy boolean kwargs must keep working
+    # for one release and warn EXACTLY once per process — a regression
+    # here (silent kwarg drop, or a warning storm) breaks every
+    # not-yet-migrated caller.
+    python - <<'EOF'
+import warnings
+import numpy as np
+from repro.core import ControllerConfig, SimConfig, fully_connected, make_links
+from repro.scenarios import FreqStep, Scenario, run_scenario
+
+topo = fully_connected(4)
+links = make_links(topo, cable_m=2.0)
+cfg = SimConfig(dt=1e-3, steps=48, record_every=12)
+sc = Scenario(events=(FreqStep(t=0.02, nodes=(0,), delta_ppm=1.0),))
+ppm = np.zeros(4, np.float32)
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    r1 = run_scenario(topo, links, ControllerConfig(kp=2e-7), ppm, sc, cfg,
+                      engine="fused", record_beta=True)
+    run_scenario(topo, links, ControllerConfig(kp=2e-7), ppm, sc, cfg,
+                 engine="fused", record_beta=True)
+dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+assert r1.beta.size > 0, "legacy record_beta= kwarg stopped working"
+assert len(dep) == 1, f"expected exactly 1 DeprecationWarning, got {len(dep)}"
+assert "record_beta" in str(dep[0].message)
+EOF
+    echo "ci: deprecation-shim smoke (legacy kwargs work, warn once) green"
+
     # Flight-recorder smoke: trace a tiny run_scenario in-process, export
     # JSONL, render the report, and hard-fail on any traced-run compile —
     # the whole observability path (record -> export -> render) end to end.

@@ -78,7 +78,7 @@ __all__ = ["EnvelopeSpec", "BatchedEnvelope", "laplacian", "spectral_gap",
            "freq_step_envelope", "latency_step_envelope",
            "freq_step_envelopes", "latency_step_envelopes",
            "check_occupancy_envelope", "check_occupancy_envelopes",
-           "default_slack", "reframe_guard_margin"]
+           "default_slack", "reframe_guard_margin", "reframe_guard_margins"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -376,6 +376,35 @@ def reframe_guard_margin(topo: Topology, kp: float, dt: float,
                              omega_nom=omega_nom, edge_w=edge_w)
     return max(1.0, default_slack(env, nu_bound, lat_frames_max, dt,
                                   record_every, omega_nom))
+
+
+def reframe_guard_margins(topo: Topology, kp, dt: float, record_every: int,
+                          nu_bound, lat_frames_max: float,
+                          omega_nom: float = OMEGA_NOM,
+                          edge_w=None) -> np.ndarray:
+    """Per-draw guard-band margins (frames) — the batched
+    :func:`reframe_guard_margin`.
+
+    ``kp`` and ``nu_bound`` broadcast to a common (B,) length; each
+    draw's margin derives from its OWN gain and disturbance bound, so a
+    gain-sweep batch is no longer guarded by one margin computed from
+    its stiffest draw (which under-guards the soft draws' larger ν·ω·l
+    coupling and over-guards the stiff ones).  Repeated (kp, ν) pairs
+    pay the spectral envelope solve once.
+    """
+    kp_b, nu_b = np.broadcast_arrays(
+        np.atleast_1d(np.asarray(kp, np.float64)),
+        np.atleast_1d(np.asarray(nu_bound, np.float64)))
+    cache: dict = {}
+    out = np.empty(kp_b.shape[0], np.float64)
+    for i, (k, nu) in enumerate(zip(kp_b, nu_b)):
+        key = (float(k), float(nu))
+        if key not in cache:
+            cache[key] = reframe_guard_margin(
+                topo, float(k), dt, record_every, float(nu),
+                lat_frames_max, omega_nom, edge_w=edge_w)
+        out[i] = cache[key]
+    return out
 
 
 def check_occupancy_envelope(times, beta, t0: float, env: EnvelopeSpec,

@@ -88,18 +88,24 @@ class BittideNetwork:
 
     def run_scenario(self, scenario, ctrl: Optional[ControllerConfig] = None,
                      cfg: Optional[SimConfig] = None,
-                     engine: str = "segment-sum", auto_reframe=False, **kw):
+                     engine: Optional[str] = None, auto_reframe=None,
+                     options=None, telemetry=None, **kw):
         """Run a dynamic-event scenario (cable swaps, drift ramps, holdover,
         link outages, pointer rotations) against this network — the
         paper's §5.6 live fiber-insertion experiment generalized to any
         event sequence.
 
-        ``auto_reframe=True`` (or a
+        ``telemetry=Telemetry(guard=True)`` (or a
         :class:`repro.core.reframing.ReframePolicy`) enables closed-loop
-        buffer re-centering: the runner watches the in-kernel β record
-        and splices RTT-conserving pointer rotations whenever occupancy
-        approaches the elastic-buffer depth, so long disturbance
-        scenarios stay inside the hardware's 32-deep buffers.
+        buffer re-centering: the kernel lanes run the guard in-kernel
+        (freezing the chunk one record after a crossing), segment-sum
+        inspects each chunk's β record, and the runner splices
+        RTT-conserving pointer rotations whenever occupancy approaches
+        the elastic-buffer depth, so long disturbance scenarios stay
+        inside the hardware's 32-deep buffers.  ``options=`` takes a
+        :class:`repro.kernels.EngineOptions`; the legacy ``engine=`` /
+        ``auto_reframe=`` kwargs keep working (``auto_reframe`` with a
+        one-per-process deprecation warning).
 
         Delegates to :func:`repro.scenarios.run_scenario`; returns its
         ScenarioResult (``.lam`` holds the per-segment logical-latency
@@ -112,4 +118,5 @@ class BittideNetwork:
         cfg = cfg or SimConfig(dt=1e-4, steps=20_000, record_every=20)
         return _run_scenario(self.topo, self.links, ctrl, self.ppm_u,
                              scenario, cfg, engine=engine,
-                             auto_reframe=auto_reframe, **kw)
+                             auto_reframe=auto_reframe, options=options,
+                             telemetry=telemetry, **kw)

@@ -105,16 +105,22 @@ class ReframePolicy:
         if self.margin is not None and self.margin < 0:
             raise ValueError("ReframePolicy.margin must be >= 0")
 
-    def guard(self, margin: Optional[float] = None) -> float:
-        """The trip threshold ``depth/2 − margin`` (frames, must be > 0)."""
+    def guard(self, margin=None):
+        """The trip threshold ``depth/2 − margin`` (frames, must be > 0).
+
+        ``margin`` may be a scalar or a per-draw (B,) array (from
+        :func:`repro.core.envelopes.reframe_guard_margins`); the return
+        matches — a float for scalar input, an ndarray otherwise.
+        """
         m = self.margin if margin is None else margin
-        g = self.depth / 2.0 - float(m)
-        if g <= 0:
+        g = self.depth / 2.0 - np.asarray(m, np.float64)
+        if np.any(g <= 0):
+            bad = float(np.min(g))
             raise ValueError(
-                f"reframe guard band depth/2 − margin = {g:.3g} <= 0 "
-                f"(depth={self.depth}, margin={m:.3g}); pass a smaller "
-                "margin or a deeper buffer")
-        return g
+                f"reframe guard band depth/2 − margin = {bad:.3g} <= 0 "
+                f"(depth={self.depth}, margin={np.max(np.asarray(m)):.3g});"
+                " pass a smaller margin or a deeper buffer")
+        return float(g) if g.ndim == 0 else g
 
 
 def edge_occupancy(topo: Topology, psi, nu, lat_frames, lam_eff) -> np.ndarray:

@@ -18,7 +18,11 @@ ops             jit wrappers + topology densification (fixed-class, weighted)
                 + fused/ensemble runners (init-state chaining, per-draw link
                 parameters; DenseResult path metadata + exact .nu)
 ref             pure-jnp oracles the kernels are validated against
+api             EngineOptions (typed engine knobs, accepted as ``options=``)
+                and EngineOutputs (the named engine-lane return replacing
+                the positional 5-tuple)
 """
+from .api import EngineOptions, EngineOutputs, resolve_options
 from .bittide_sparse import bittide_sparse_pallas, ellify, max_in_degree
 from .bittide_step import (RESIDENT_N_MAX, SUBLANE, TILE, TILE_J_MAX,
                            bittide_fused_pallas, bittide_step_pallas,

@@ -73,7 +73,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.topology import Topology
 
 from .bittide_step import (SUBLANE, TILE, VMEM_BUDGET_BYTES, _check_shapes,
-                           _gain_col, _lamsum_rows, _mask_row,
+                           _gain_col, _guard_cols, _lamsum_rows, _mask_row,
                            _split_outputs, sparse_vmem_bytes)
 
 __all__ = ["bittide_sparse_pallas", "ellify", "max_in_degree"]
@@ -159,26 +159,32 @@ def ellify(topo: Topology, lat_frames, edge_w=None, tile: int = TILE,
 
 
 def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
-                   kp_ref, boff_ref, mask_ref, lamsum_ref, psi_out_ref,
-                   nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                   max_deg: int, multi_panel: bool, record_beta: bool,
-                   record_watermarks: bool):
+                   kp_ref, boff_ref, mask_ref, lamsum_ref, *rest,
+                   dt_frames: float, max_deg: int, multi_panel: bool,
+                   record_beta: bool, record_watermarks: bool,
+                   record_guard: bool):
     t = pl.program_id(0)
     p = pl.program_id(1)
     i = pl.program_id(2)
     i_panels = pl.num_programs(2)
-    # With β recording (or watermarks) the period axis carries one extra
-    # trailing pass per record: p < periods advances the state, p ==
-    # periods re-streams the table panels to aggregate the POST-update
-    # state's occupancy.
-    measure = record_beta or record_watermarks
+    # With β recording (watermarks, or the in-kernel guard) the period
+    # axis carries one extra trailing pass per record: p < periods
+    # advances the state, p == periods re-streams the table panels to
+    # aggregate the POST-update state's occupancy.
+    measure = record_beta or record_watermarks or record_guard
     periods = pl.num_programs(1) - (1 if measure else 0)
 
-    refs = list(opt_refs)
+    refs = list(rest)
+    if record_guard:
+        glo_ref, ghi_ref, stop_ref = refs[:3]
+        refs = refs[3:]
+    psi_out_ref, nu_out_ref, rec_ref = refs[:3]
+    refs = refs[3:]
     brec_ref = refs.pop(0) if record_beta else None
     if record_watermarks:
         wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
         refs = refs[4:]
+    trip_ref = refs.pop(0) if record_guard else None
     psi_s, nu_s = refs.pop(0), refs.pop(0)
     if multi_panel:
         psi_ns, nu_ns = refs.pop(0), refs.pop(0)
@@ -189,100 +195,133 @@ def _sparse_kernel(nbr_ref, latf_ref, w_ref, psi0_ref, nu0_ref, nu_u_ref,
     def _seed():
         psi_s[...] = psi0_ref[...]
         nu_s[...] = nu0_ref[...]
+        if record_guard:
+            # "Never tripped" sentinel: num_records, one past any record.
+            trip_ref[...] = jnp.full(trip_ref.shape, pl.num_programs(0),
+                                     jnp.int32)
 
-    tile_i = nbr_ref.shape[-1]
-    cols = pl.ds(pl.multiple_of(i * tile_i, TILE), tile_i)
-    psi_full = psi_s[...]                                  # (B, N)
-    nu_full = nu_s[...]
-    if measure:
-        # β pass: center ψ by its full-row mean (β is exactly
-        # shift-invariant; centering keeps float32 partial sums O(ψ
-        # spread)).  The mean is over the whole scratch row, so every
-        # panel of the pass — and every engine — subtracts the same
-        # constant.
-        m = jnp.mean(psi_full, axis=1, keepdims=True)      # (B, 1)
-        psi_full = jnp.where(p == periods, psi_full - m, psi_full)
+    def _step():
+        tile_i = nbr_ref.shape[-1]
+        cols = pl.ds(pl.multiple_of(i * tile_i, TILE), tile_i)
+        psi_full = psi_s[...]                              # (B, N)
+        nu_full = nu_s[...]
+        if measure:
+            # β pass: center ψ by its full-row mean (β is exactly
+            # shift-invariant; centering keeps float32 partial sums O(ψ
+            # spread)).  The mean is over the whole scratch row, so every
+            # panel of the pass — and every engine — subtracts the same
+            # constant.
+            m = jnp.mean(psi_full, axis=1, keepdims=True)  # (B, 1)
+            psi_full = jnp.where(p == periods, psi_full - m, psi_full)
 
-    # K slot gathers over the streamed (·, K, tile_i) table panel: each
-    # slot row pulls its source nodes' state from the whole-row scratch
-    # and folds one weighted FMA into the panel's accumulation.
-    lat = latf_ref[...]                                    # (·, K, TI)
-    w = w_ref[...]
-    deg = jnp.sum(w, axis=1)                               # (·, TI)
-    acc = jnp.zeros((psi_full.shape[0], tile_i), jnp.float32)
-    for k in range(max_deg):
-        g_psi = jnp.take(psi_full, nbr_ref[k], axis=1)     # (B, TI)
-        g_nu = jnp.take(nu_full, nbr_ref[k], axis=1)
-        acc = acc + w[:, k, :] * (g_psi - g_nu * lat[:, k, :])
+        # K slot gathers over the streamed (·, K, tile_i) table panel:
+        # each slot row pulls its source nodes' state from the whole-row
+        # scratch and folds one weighted FMA into the panel's
+        # accumulation.
+        lat = latf_ref[...]                                # (·, K, TI)
+        w = w_ref[...]
+        deg = jnp.sum(w, axis=1)                           # (·, TI)
+        acc = jnp.zeros((psi_full.shape[0], tile_i), jnp.float32)
+        for k in range(max_deg):
+            g_psi = jnp.take(psi_full, nbr_ref[k], axis=1)  # (B, TI)
+            g_nu = jnp.take(nu_full, nbr_ref[k], axis=1)
+            acc = acc + w[:, k, :] * (g_psi - g_nu * lat[:, k, :])
 
-    psi_i = psi_s[:, cols]                                 # (B, TI)
-    nu_i = nu_s[:, cols]
-    if measure:
-        psi_i = jnp.where(p == periods, psi_i - m, psi_i)
+        psi_i = psi_s[:, cols]                             # (B, TI)
+        nu_i = nu_s[:, cols]
+        if measure:
+            psi_i = jnp.where(p == periods, psi_i - m, psi_i)
 
-    @pl.when(p < periods)
-    def _update():
-        err = acc - (psi_i + boff_ref[...]) * deg + lamsum_ref[...]
-        # ν' = (1+ν_u)(1+c) − 1 computed as ν_u + c + ν_u·c: never forms
-        # 1 + O(1e-6) (float32 eps(1.0) = 1.19e-7 would quantize it).
-        c_rel = kp_ref[...] * err
-        nu_u = nu_u_ref[...]
-        nu_next = nu_u + c_rel + nu_u * c_rel
-        # Holdover: masked-out nodes freeze ν at its previous value.
-        nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu_i)
-        psi_next = psi_i + nu_next * dt_frames
+        @pl.when(p < periods)
+        def _update():
+            err = acc - (psi_i + boff_ref[...]) * deg + lamsum_ref[...]
+            # ν' = (1+ν_u)(1+c) − 1 computed as ν_u + c + ν_u·c: never
+            # forms 1 + O(1e-6) (float32 eps(1.0) = 1.19e-7 would
+            # quantize it).
+            c_rel = kp_ref[...] * err
+            nu_u = nu_u_ref[...]
+            nu_next = nu_u + c_rel + nu_u * c_rel
+            # Holdover: masked-out nodes freeze ν at its previous value.
+            nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu_i)
+            psi_next = psi_i + nu_next * dt_frames
+            if multi_panel:
+                # Gathers must read the pre-period state, so panel
+                # updates stage until every panel of this period has
+                # aggregated.
+                psi_ns[:, cols] = psi_next
+                nu_ns[:, cols] = nu_next
+            else:
+                psi_s[:, cols] = psi_next
+                nu_s[:, cols] = nu_next
+            # Telemetry flushes to HBM when the record index advances, so
+            # overwriting every period within a record is decimation for
+            # free.
+            rec_ref[...] = nu_next[None]
+            psi_out_ref[...] = psi_next
+            nu_out_ref[...] = nu_next
+
         if multi_panel:
-            # Gathers must read the pre-period state, so panel updates
-            # stage until every panel of this period has aggregated.
-            psi_ns[:, cols] = psi_next
-            nu_ns[:, cols] = nu_next
-        else:
-            psi_s[:, cols] = psi_next
-            nu_s[:, cols] = nu_next
-        # Telemetry flushes to HBM when the record index advances, so
-        # overwriting every period within a record is decimation for free.
-        rec_ref[...] = nu_next[None]
-        psi_out_ref[...] = psi_next
-        nu_out_ref[...] = nu_next
+            @pl.when(jnp.logical_and(p < periods, i == i_panels - 1))
+            def _commit():
+                psi_s[...] = psi_ns[...]
+                nu_s[...] = nu_ns[...]
 
-    if multi_panel:
-        @pl.when(jnp.logical_and(p < periods, i == i_panels - 1))
-        def _commit():
-            psi_s[...] = psi_ns[...]
-            nu_s[...] = nu_ns[...]
+        if measure:
+            @pl.when(p == periods)
+            def _record_beta():
+                # acc aggregated the centered post-update state this pass.
+                bnode = acc - psi_i * deg + lamsum_ref[...]
+                if record_beta:
+                    brec_ref[...] = bnode[None]
+                if record_watermarks:
+                    # Watermark accumulators are whole (B, N) output
+                    # blocks with CONSTANT index maps (VMEM-resident for
+                    # the whole grid, read-modify-write safe); each panel
+                    # updates only its own node columns.  Strict > keeps
+                    # the FIRST record attaining the max.
+                    babs = jnp.abs(bnode)
 
-    if measure:
-        @pl.when(p == periods)
-        def _record_beta():
-            # acc aggregated the centered post-update state this pass.
-            bnode = acc - psi_i * deg + lamsum_ref[...]
-            if record_beta:
-                brec_ref[...] = bnode[None]
-            if record_watermarks:
-                # Watermark accumulators are whole (B, N) output blocks
-                # with CONSTANT index maps (VMEM-resident for the whole
-                # grid, read-modify-write safe); each panel updates only
-                # its own node columns.  Strict > keeps the FIRST record
-                # attaining the max.
-                babs = jnp.abs(bnode)
+                    @pl.when(t == 0)
+                    def _wm_seed():
+                        wm_beta_ref[:, cols] = babs
+                        wm_idx_ref[:, cols] = jnp.zeros_like(babs,
+                                                             jnp.int32)
+                        wm_lo_ref[:, cols] = nu_i
+                        wm_hi_ref[:, cols] = nu_i
 
-                @pl.when(t == 0)
-                def _wm_seed():
-                    wm_beta_ref[:, cols] = babs
-                    wm_idx_ref[:, cols] = jnp.zeros_like(babs, jnp.int32)
-                    wm_lo_ref[:, cols] = nu_i
-                    wm_hi_ref[:, cols] = nu_i
+                    @pl.when(t > 0)
+                    def _wm_update():
+                        prev = wm_beta_ref[:, cols]
+                        wm_idx_ref[:, cols] = jnp.where(babs > prev, t,
+                                                        wm_idx_ref[:, cols])
+                        wm_beta_ref[:, cols] = jnp.maximum(prev, babs)
+                        wm_lo_ref[:, cols] = jnp.minimum(
+                            wm_lo_ref[:, cols], nu_i)
+                        wm_hi_ref[:, cols] = jnp.maximum(
+                            wm_hi_ref[:, cols], nu_i)
+                if record_guard:
+                    # Degree-scaled band check for THIS panel's node
+                    # columns; the (B, 1) trip block is shared across
+                    # panels (constant index map), so a violation in any
+                    # panel of record t lands t in the draw's slot.
+                    viol = jnp.logical_or(bnode > ghi_ref[...] * deg,
+                                          bnode < glo_ref[...] * deg)
+                    row_viol = jnp.any(viol, axis=1, keepdims=True)
+                    trip_ref[...] = jnp.where(row_viol, t, trip_ref[...])
 
-                @pl.when(t > 0)
-                def _wm_update():
-                    prev = wm_beta_ref[:, cols]
-                    wm_idx_ref[:, cols] = jnp.where(babs > prev, t,
-                                                    wm_idx_ref[:, cols])
-                    wm_beta_ref[:, cols] = jnp.maximum(prev, babs)
-                    wm_lo_ref[:, cols] = jnp.minimum(wm_lo_ref[:, cols],
-                                                     nu_i)
-                    wm_hi_ref[:, cols] = jnp.maximum(wm_hi_ref[:, cols],
-                                                     nu_i)
+    if record_guard:
+        # Chunk early-exit: freeze every grid step of records after the
+        # earliest trip (or past the host's stop_after cap).  min(trip)
+        # ≥ t keeps the remaining panels of the trip record live, so the
+        # trip record itself is fully recorded before the freeze.
+        live = jnp.logical_and(jnp.min(trip_ref[...]) >= t,
+                               t <= stop_ref[0, 0])
+
+        @pl.when(live)
+        def _run():
+            _step()
+    else:
+        _step()
 
 
 def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
@@ -290,6 +329,8 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
                           record_every: int, tile_i: Optional[int] = None,
                           ctrl_mask=None, record_beta: bool = False,
                           record_watermarks: bool = False,
+                          record_guard: bool = False, guard_lo=None,
+                          guard_hi=None, guard_stop=None,
                           interpret: bool = False):
     """Advance ``num_records × record_every`` periods on the ELL tables.
 
@@ -317,13 +358,23 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
         at every record from the same β aggregation pass, so a 1M-node
         run reports its peak excursion with NO (R, B, N) record.  Shares
         the extra table pass with ``record_beta`` when both are on.
+      record_guard: in-kernel reframing guard with chunk early-exit —
+        shares the measure pass, adds a (B, 1) int32 first-trip-record
+        output and freezes all records after the earliest trip (or past
+        the traced ``guard_stop`` cap).  See
+        :func:`repro.kernels.bittide_step.bittide_fused_pallas`.
+      guard_lo, guard_hi, guard_stop: traced guard band (frames per unit
+        weighted degree, scalar or per-draw) and stop-after record index;
+        required with ``record_guard``.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
-      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
-      beta_rec (num_records, B, N) or None, watermarks or None) — the
-      fused engines' contract; watermarks = (beta_abs_max (B, N) f32,
-      peak_record (B, N) i32, nu_min (B, N) f32, nu_max (B, N) f32).
+      :class:`repro.kernels.EngineOutputs` — the fused engines' contract:
+      (psi_final (B, N), nu_final (B, N), freq = nu_rec
+      (num_records, B, N), beta = beta_rec or None, watermarks or None,
+      guard_state (B, 1) int32 or None); watermarks = (beta_abs_max
+      (B, N) f32, peak_record (B, N) i32, nu_min (B, N) f32, nu_max
+      (B, N) f32).
     """
     b, n = psi.shape
     _check_shapes(b, n, num_records, record_every)
@@ -354,7 +405,8 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
     kern = functools.partial(
         _sparse_kernel, dt_frames=float(dt_frames), max_deg=int(k),
         multi_panel=multi_panel, record_beta=bool(record_beta),
-        record_watermarks=bool(record_watermarks))
+        record_watermarks=bool(record_watermarks),
+        record_guard=bool(record_guard))
 
     mask = _mask_row(ctrl_mask, n, b)
     full3 = lambda t, p, i: (0, 0)
@@ -381,6 +433,11 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
         for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
             out_specs.append(pl.BlockSpec((b, n), full3))
             out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
+    if record_guard:
+        # (B, 1) first-trip record index, constant index map shared by
+        # every panel (VMEM-resident; flushed once at the end).
+        out_specs.append(pl.BlockSpec((b, 1), full3))
+        out_shape.append(jax.ShapeDtypeStruct((b, 1), jnp.int32))
     scratch = [
         pltpu.VMEM((b, n), jnp.float32),                      # ψ carry
         pltpu.VMEM((b, n), jnp.float32),                      # ν carry
@@ -390,35 +447,42 @@ def bittide_sparse_pallas(psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off,
             pltpu.VMEM((b, n), jnp.float32),                  # ψ staging
             pltpu.VMEM((b, n), jnp.float32),                  # ν staging
         ]
-    measure = record_beta or record_watermarks
+    in_specs = [
+        # Table panels: the index map advances with i, so the Pallas
+        # pipeline double-buffers the HBM fetch of panel i+1 behind
+        # the gathers on panel i.
+        pl.BlockSpec((k, tile_i), panel2),                # nbr
+        pl.BlockSpec((latf.shape[0], k, tile_i),
+                     lambda t, p, i: (0, 0, i)),          # latf
+        pl.BlockSpec((w.shape[0], k, tile_i),
+                     lambda t, p, i: (0, 0, i)),          # w
+        pl.BlockSpec((b, n), full3),                      # psi0
+        pl.BlockSpec((b, n), full3),                      # nu0
+        pl.BlockSpec((b, tile_i), panel2),                # nu_u
+        pl.BlockSpec((b, 1), full3),                      # kp per draw
+        pl.BlockSpec((b, 1), full3),                      # beta_off
+        pl.BlockSpec((mask.shape[0], tile_i), panel2),    # ctrl mask
+        pl.BlockSpec((b, tile_i), panel2),                # lamsum
+    ]
+    args = [nbr.astype(jnp.int32), latf.astype(jnp.float32),
+            w.astype(jnp.float32), psi.astype(jnp.float32),
+            nu.astype(jnp.float32), nu_u.astype(jnp.float32),
+            _gain_col(kp, b, "kp"), _gain_col(beta_off, b, "beta_off"),
+            mask, _lamsum_rows(lamsum, b, n)]
+    if record_guard:
+        in_specs += [pl.BlockSpec((b, 1), full3),         # guard band lo
+                     pl.BlockSpec((b, 1), full3),         # guard band hi
+                     pl.BlockSpec((b, 1), full3)]         # stop-after
+        args += _guard_cols(guard_lo, guard_hi, guard_stop, b)
+    measure = record_beta or record_watermarks or record_guard
     out = pl.pallas_call(
         kern,
         grid=(num_records, record_every + (1 if measure else 0),
               i_panels),
-        in_specs=[
-            # Table panels: the index map advances with i, so the Pallas
-            # pipeline double-buffers the HBM fetch of panel i+1 behind
-            # the gathers on panel i.
-            pl.BlockSpec((k, tile_i), panel2),                # nbr
-            pl.BlockSpec((latf.shape[0], k, tile_i),
-                         lambda t, p, i: (0, 0, i)),          # latf
-            pl.BlockSpec((w.shape[0], k, tile_i),
-                         lambda t, p, i: (0, 0, i)),          # w
-            pl.BlockSpec((b, n), full3),                      # psi0
-            pl.BlockSpec((b, n), full3),                      # nu0
-            pl.BlockSpec((b, tile_i), panel2),                # nu_u
-            pl.BlockSpec((b, 1), full3),                      # kp per draw
-            pl.BlockSpec((b, 1), full3),                      # beta_off
-            pl.BlockSpec((mask.shape[0], tile_i), panel2),    # ctrl mask
-            pl.BlockSpec((b, tile_i), panel2),                # lamsum
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(nbr.astype(jnp.int32), latf.astype(jnp.float32),
-      w.astype(jnp.float32), psi.astype(jnp.float32),
-      nu.astype(jnp.float32), nu_u.astype(jnp.float32),
-      _gain_col(kp, b, "kp"), _gain_col(beta_off, b, "beta_off"), mask,
-      _lamsum_rows(lamsum, b, n))
-    return _split_outputs(out, record_beta, record_watermarks)
+    )(*args)
+    return _split_outputs(out, record_beta, record_watermarks, record_guard)

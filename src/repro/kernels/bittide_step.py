@@ -106,6 +106,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .api import EngineOutputs
+
 __all__ = ["bittide_step_pallas", "bittide_fused_pallas",
            "bittide_tiled_fused_pallas", "select_engine", "fused_vmem_bytes",
            "tiled_vmem_bytes", "sparse_vmem_bytes", "TILE", "SUBLANE",
@@ -267,20 +269,28 @@ def bittide_step_pallas(psi, nu, nu_u, a, lam_eff, lat_frames,
 
 
 def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
-                  boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
-                  nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                  record_every: int, num_classes: int, record_beta: bool,
-                  record_watermarks: bool):
+                  boff_ref, mask_ref, deg_ref, lamsum_ref, *rest,
+                  dt_frames: float, record_every: int, num_classes: int,
+                  record_beta: bool, record_watermarks: bool,
+                  record_guard: bool):
     t = pl.program_id(0)
 
-    # Optional outputs are spliced between the fixed outputs and the
-    # scratch refs (pallas_call passes outputs before scratch): β record
-    # first, then the four (B, N) watermark accumulators.
-    refs = list(opt_refs)
+    # Optional guard-band inputs trail the fixed inputs; optional outputs
+    # are spliced between the fixed outputs and the scratch refs
+    # (pallas_call passes inputs, then outputs, then scratch): β record
+    # first, then the four (B, N) watermark accumulators, then the (B, 1)
+    # trip-record index.
+    refs = list(rest)
+    if record_guard:
+        glo_ref, ghi_ref, stop_ref = refs[:3]
+        refs = refs[3:]
+    psi_out_ref, nu_out_ref, rec_ref = refs[:3]
+    refs = refs[3:]
     brec_ref = refs.pop(0) if record_beta else None
     if record_watermarks:
         wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
         refs = refs[4:]
+    trip_ref = refs.pop(0) if record_guard else None
     psi_s, nu_s = refs
 
     # First grid step: load initial state into the persistent VMEM scratch.
@@ -288,6 +298,10 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     def _seed():
         psi_s[...] = psi0_ref[...]
         nu_s[...] = nu0_ref[...]
+        if record_guard:
+            # "Never tripped" sentinel: num_records, one past any record.
+            trip_ref[...] = jnp.full(trip_ref.shape, pl.num_programs(0),
+                                     jnp.int32)
 
     nu_u = nu_u_ref[...]        # (B, N), resident across the whole run
     deg = deg_ref[...]          # (1, N), broadcasts over B
@@ -296,6 +310,7 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     beta_off = boff_ref[...]
     lat = lat_ref[...]          # (B, C) traced per-draw class latencies
     enabled = mask_ref[...] > 0.5   # (1, N)|(B, N) controller-enable mask
+    measure = record_beta or record_watermarks or record_guard
 
     def period(_, carry):
         psi, nu = carry
@@ -315,57 +330,87 @@ def _fused_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
         psi_next = psi + nu_next * dt_frames
         return psi_next, nu_next
 
-    psi, nu = jax.lax.fori_loop(
-        0, record_every, period, (psi_s[...], nu_s[...]))
-    psi_s[...] = psi
-    nu_s[...] = nu
+    def _advance():
+        psi, nu = jax.lax.fori_loop(
+            0, record_every, period, (psi_s[...], nu_s[...]))
+        psi_s[...] = psi
+        nu_s[...] = nu
 
-    # Decimated telemetry: ν once per record, not once per period.
-    rec_ref[...] = nu[None]
-    if record_beta or record_watermarks:
-        # Per-node net occupancy of the POST-update state (the segment-sum
-        # recording convention).  β is invariant under a uniform ψ shift,
-        # so center ψ by its row mean first: the matmul partial sums then
-        # stay O(ψ spread) instead of O(ψ magnitude), which is what keeps
-        # the float32 record within 1e-6 frames of the edge-list math.
-        # Cost: one extra C-class aggregation per RECORD on the resident
-        # adjacency — ~1/record_every of the period loop's matmul work.
-        # The watermarks reuse the SAME aggregation, so the in-kernel peak
-        # is bit-identical to a reduction of the full β record.
-        psi_c = psi - jnp.mean(psi, axis=1, keepdims=True)
-        bacc = jnp.zeros_like(psi)
-        for c in range(num_classes):
-            x = psi_c - nu * lat[:, c:c + 1]
-            bacc = bacc + jax.lax.dot_general(
-                x, a_ref[c],
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
-        bnode = bacc - psi_c * deg + lamsum
-        if record_beta:
-            brec_ref[...] = bnode[None]
-        if record_watermarks:
-            # O(B·N) running aggregates in the revisited output blocks
-            # (constant index maps: the blocks stay in VMEM across the
-            # whole grid and flush once at the end).  Strict > keeps the
-            # FIRST record attaining the max — np.argmax semantics.
-            babs = jnp.abs(bnode)
+        # Decimated telemetry: ν once per record, not once per period.
+        rec_ref[...] = nu[None]
+        if measure:
+            # Per-node net occupancy of the POST-update state (the
+            # segment-sum recording convention).  β is invariant under a
+            # uniform ψ shift, so center ψ by its row mean first: the
+            # matmul partial sums then stay O(ψ spread) instead of O(ψ
+            # magnitude), which is what keeps the float32 record within
+            # 1e-6 frames of the edge-list math.  Cost: one extra C-class
+            # aggregation per RECORD on the resident adjacency —
+            # ~1/record_every of the period loop's matmul work.  The
+            # watermarks and the in-kernel guard reuse the SAME
+            # aggregation, so the in-kernel peak is bit-identical to a
+            # reduction of the full β record.
+            psi_c = psi - jnp.mean(psi, axis=1, keepdims=True)
+            bacc = jnp.zeros_like(psi)
+            for c in range(num_classes):
+                x = psi_c - nu * lat[:, c:c + 1]
+                bacc = bacc + jax.lax.dot_general(
+                    x, a_ref[c],
+                    dimension_numbers=(((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            bnode = bacc - psi_c * deg + lamsum
+            if record_beta:
+                brec_ref[...] = bnode[None]
+            if record_watermarks:
+                # O(B·N) running aggregates in the revisited output blocks
+                # (constant index maps: the blocks stay in VMEM across the
+                # whole grid and flush once at the end).  Strict > keeps
+                # the FIRST record attaining the max — np.argmax semantics.
+                babs = jnp.abs(bnode)
 
-            @pl.when(t == 0)
-            def _wm_seed():
-                wm_beta_ref[...] = babs
-                wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
-                wm_lo_ref[...] = nu
-                wm_hi_ref[...] = nu
+                @pl.when(t == 0)
+                def _wm_seed():
+                    wm_beta_ref[...] = babs
+                    wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
+                    wm_lo_ref[...] = nu
+                    wm_hi_ref[...] = nu
 
-            @pl.when(t > 0)
-            def _wm_update():
-                wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...], t,
-                                            wm_idx_ref[...])
-                wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...], babs)
-                wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
-                wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
-    psi_out_ref[...] = psi
-    nu_out_ref[...] = nu
+                @pl.when(t > 0)
+                def _wm_update():
+                    wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...], t,
+                                                wm_idx_ref[...])
+                    wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...], babs)
+                    wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
+                    wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
+            if record_guard:
+                # In-kernel reframing guard: a draw trips when any live
+                # node's net occupancy leaves the degree-scaled band
+                # [lo·deg_i, hi·deg_i] (lo/hi = target ∓ guard, frames per
+                # unit weighted degree — the host lowers them from
+                # envelopes.reframe_guard_margin).  Strict inequalities
+                # keep degree-0 padding nodes (β ≡ 0) inert.
+                viol = jnp.logical_or(bnode > ghi_ref[...] * deg,
+                                      bnode < glo_ref[...] * deg)
+                row_viol = jnp.any(viol, axis=1, keepdims=True)   # (B, 1)
+                trip_ref[...] = jnp.where(row_viol, t, trip_ref[...])
+        psi_out_ref[...] = psi
+        nu_out_ref[...] = nu
+
+    if record_guard:
+        # Chunk early-exit: once ANY draw tripped at a record t' < t (or
+        # the host capped the launch at stop_after), the remaining grid
+        # steps are no-ops — state, record stream and watermarks freeze at
+        # the trip record, and the host resumes from there at zero
+        # recompiles.  min(trip) ≥ t (sentinel = num_records) keeps the
+        # trip record itself fully recorded.
+        live = jnp.logical_and(jnp.min(trip_ref[...]) >= t,
+                               t <= stop_ref[0, 0])
+
+        @pl.when(live)
+        def _run():
+            _advance()
+    else:
+        _advance()
 
 
 def fused_vmem_bytes(b: int, n: int, c: int) -> int:
@@ -518,6 +563,8 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                          *, num_records: int, record_every: int,
                          ctrl_mask=None, record_beta: bool = False,
                          record_watermarks: bool = False,
+                         record_guard: bool = False, guard_lo=None,
+                         guard_hi=None, guard_stop=None,
                          interpret: bool = False):
     """Advance ``num_records * record_every`` control periods in ONE kernel.
 
@@ -548,13 +595,33 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         once at the end, so peak excursions are available with no
         (R, B, N) record.  Compile-time switch, composable with
         ``record_beta``.
+      record_guard: run the reframing guard decision IN-KERNEL with chunk
+        early-exit.  The measure pass (shared with ``record_beta`` /
+        ``record_watermarks``) compares each node's net occupancy against
+        the traced degree-scaled band [``guard_lo``·deg, ``guard_hi``·deg]
+        and records the first violating record index per draw in a (B, 1)
+        int32 trip output (sentinel ``num_records`` = never tripped).
+        Once ANY draw trips, every later record freezes (predicated
+        no-ops): state, ν/β records and watermarks stop at the trip
+        record, so the host observes the trip after ONE record period and
+        resumes from the frozen state — no host-side β scan per chunk.
+        Compile-time switch; the guard-off path is byte-identical.
+      guard_lo, guard_hi: traced guard band in frames per unit weighted
+        degree — scalar or per-draw length-B (target ∓ margin-derived
+        threshold).  Required with ``record_guard``.
+      guard_stop: traced last record index to execute (scalar or per-draw
+        int32; same value across draws).  Records after ``guard_stop``
+        are no-ops even without a trip — the host uses this to run a
+        PARTIAL chunk on the same compiled kernel (zero-recompile splice
+        resumes).  Required with ``record_guard``.
       interpret: run in interpret mode (CPU validation).
 
     Returns:
-      (psi_final (B, N), nu_final (B, N), nu_rec (num_records, B, N),
-      beta_rec (num_records, B, N) or None, watermarks or None) where
-      watermarks = (beta_abs_max (B, N) f32, peak_record (B, N) i32,
-      nu_min (B, N) f32, nu_max (B, N) f32).
+      :class:`repro.kernels.EngineOutputs` — (psi_final (B, N), nu_final
+      (B, N), freq = nu_rec (num_records, B, N), beta = beta_rec
+      (num_records, B, N) or None, watermarks or None, guard_state (B, 1)
+      int32 or None) where watermarks = (beta_abs_max (B, N) f32,
+      peak_record (B, N) i32, nu_min (B, N) f32, nu_max (B, N) f32).
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -571,10 +638,34 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         _fused_kernel, dt_frames=float(dt_frames),
         record_every=int(record_every), num_classes=int(c),
         record_beta=bool(record_beta),
-        record_watermarks=bool(record_watermarks))
+        record_watermarks=bool(record_watermarks),
+        record_guard=bool(record_guard))
 
     mask = _mask_row(ctrl_mask, n, b)
     full2 = lambda t: (0, 0)
+    in_specs = [
+        pl.BlockSpec((b, c), full2),                 # lat per draw
+        pl.BlockSpec((c, n, n), lambda t: (0, 0, 0)),  # A, resident
+        pl.BlockSpec((b, n), full2),                 # psi0
+        pl.BlockSpec((b, n), full2),                 # nu0
+        pl.BlockSpec((b, n), full2),                 # nu_u
+        pl.BlockSpec((b, 1), full2),                 # kp per draw
+        pl.BlockSpec((b, 1), full2),                 # beta_off per draw
+        pl.BlockSpec((mask.shape[0], n), full2),     # ctrl mask
+        pl.BlockSpec((1, n), full2),                 # deg
+        pl.BlockSpec((b, n), full2),                 # lamsum per draw
+    ]
+    args = [_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
+            psi.astype(jnp.float32), nu.astype(jnp.float32),
+            nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
+            _gain_col(beta_off, b, "beta_off"), mask,
+            deg.reshape(1, n).astype(jnp.float32),
+            _lamsum_rows(lamsum, b, n)]
+    if record_guard:
+        in_specs += [pl.BlockSpec((b, 1), full2),    # guard band lo
+                     pl.BlockSpec((b, 1), full2),    # guard band hi
+                     pl.BlockSpec((b, 1), full2)]    # stop-after record
+        args += _guard_cols(guard_lo, guard_hi, guard_stop, b)
     out_specs = [
         pl.BlockSpec((b, n), full2),                     # psi final
         pl.BlockSpec((b, n), full2),                     # nu final
@@ -595,21 +686,15 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
             out_specs.append(pl.BlockSpec((b, n), full2))
             out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
+    if record_guard:
+        # (B, 1) first-trip record index, constant index map (stays in
+        # VMEM across the grid; flushed once at the end).
+        out_specs.append(pl.BlockSpec((b, 1), full2))
+        out_shape.append(jax.ShapeDtypeStruct((b, 1), jnp.int32))
     out = pl.pallas_call(
         kern,
         grid=(num_records,),
-        in_specs=[
-            pl.BlockSpec((b, c), full2),                 # lat per draw
-            pl.BlockSpec((c, n, n), lambda t: (0, 0, 0)),  # A, resident
-            pl.BlockSpec((b, n), full2),                 # psi0
-            pl.BlockSpec((b, n), full2),                 # nu0
-            pl.BlockSpec((b, n), full2),                 # nu_u
-            pl.BlockSpec((b, 1), full2),                 # kp per draw
-            pl.BlockSpec((b, 1), full2),                 # beta_off per draw
-            pl.BlockSpec((mask.shape[0], n), full2),     # ctrl mask
-            pl.BlockSpec((1, n), full2),                 # deg
-            pl.BlockSpec((b, n), full2),                 # lamsum per draw
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -617,43 +702,72 @@ def bittide_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pltpu.VMEM((b, n), jnp.float32),             # ν carry
         ],
         interpret=interpret,
-    )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
-      psi.astype(jnp.float32), nu.astype(jnp.float32),
-      nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"), mask,
-      deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    return _split_outputs(out, record_beta, record_watermarks)
+    )(*args)
+    return _split_outputs(out, record_beta, record_watermarks, record_guard)
 
 
-def _split_outputs(out, record_beta: bool, record_watermarks: bool):
-    """(psi, nu, rec, beta_rec|None, watermarks|None) from the flat
-    pallas_call output list — shared by every fused-engine wrapper."""
-    brec = out[3] if record_beta else None
-    wm = tuple(out[3 + int(record_beta):][:4]) if record_watermarks else None
-    return out[0], out[1], out[2], brec, wm
+def _guard_cols(guard_lo, guard_hi, guard_stop, b: int):
+    """Normalize the traced guard inputs to the (B, 1) columns the
+    kernels consume: f32 band edges + i32 stop-after record index."""
+    if guard_lo is None or guard_hi is None or guard_stop is None:
+        raise ValueError(
+            "record_guard=True requires guard_lo, guard_hi and guard_stop")
+    stop = jnp.asarray(guard_stop, jnp.int32).reshape(-1)
+    if stop.shape[0] == 1:
+        stop = jnp.broadcast_to(stop, (b,))
+    if stop.shape[0] != b:
+        raise ValueError(f"guard_stop must be scalar or length-{b}, "
+                         f"got shape {jnp.shape(guard_stop)}")
+    return [_gain_col(guard_lo, b, "guard_lo"),
+            _gain_col(guard_hi, b, "guard_hi"), stop.reshape(b, 1)]
+
+
+def _split_outputs(out, record_beta: bool, record_watermarks: bool,
+                   record_guard: bool = False):
+    """:class:`EngineOutputs` from the flat pallas_call output list —
+    shared by every fused-engine wrapper."""
+    i = 3
+    brec = wm = trip = None
+    if record_beta:
+        brec = out[i]
+        i += 1
+    if record_watermarks:
+        wm = tuple(out[i:i + 4])
+        i += 4
+    if record_guard:
+        trip = out[i]
+        i += 1
+    return EngineOutputs(psi=out[0], nu=out[1], freq=out[2], beta=brec,
+                         watermarks=wm, guard_state=trip)
 
 
 def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
-                  boff_ref, mask_ref, deg_ref, lamsum_ref, psi_out_ref,
-                  nu_out_ref, rec_ref, *opt_refs, dt_frames: float,
-                  tile_j: int, num_classes: int, record_beta: bool,
-                  record_watermarks: bool):
+                  boff_ref, mask_ref, deg_ref, lamsum_ref, *rest,
+                  dt_frames: float, tile_j: int, num_classes: int,
+                  record_beta: bool, record_watermarks: bool,
+                  record_guard: bool):
     t = pl.program_id(0)
     p = pl.program_id(1)
     j = pl.program_id(2)
     j_tiles = pl.num_programs(2)
-    # With β recording (or watermarks) the period axis carries one extra
-    # trailing pass per record: p < periods advances the state, p ==
-    # periods re-streams the panels once more to aggregate the POST-update
-    # state's occupancy.
-    measure = record_beta or record_watermarks
+    # With β recording (watermarks, or the in-kernel guard) the period
+    # axis carries one extra trailing pass per record: p < periods
+    # advances the state, p == periods re-streams the panels once more to
+    # aggregate the POST-update state's occupancy.
+    measure = record_beta or record_watermarks or record_guard
     periods = pl.num_programs(1) - (1 if measure else 0)
 
-    refs = list(opt_refs)
+    refs = list(rest)
+    if record_guard:
+        glo_ref, ghi_ref, stop_ref = refs[:3]
+        refs = refs[3:]
+    psi_out_ref, nu_out_ref, rec_ref = refs[:3]
+    refs = refs[3:]
     brec_ref = refs.pop(0) if record_beta else None
     if record_watermarks:
         wm_beta_ref, wm_idx_ref, wm_lo_ref, wm_hi_ref = refs[:4]
         refs = refs[4:]
+    trip_ref = refs.pop(0) if record_guard else None
     psi_s, nu_s, acc_s = refs
 
     first = jnp.logical_and(t == 0, jnp.logical_and(p == 0, j == 0))
@@ -662,89 +776,119 @@ def _tiled_kernel(lat_ref, a_ref, psi0_ref, nu0_ref, nu_u_ref, kp_ref,
     def _seed():
         psi_s[...] = psi0_ref[...]
         nu_s[...] = nu0_ref[...]
+        if record_guard:
+            # "Never tripped" sentinel: num_records, one past any record.
+            trip_ref[...] = jnp.full(trip_ref.shape, pl.num_programs(0),
+                                     jnp.int32)
 
-    # Partial aggregation over this j panel: columns [j·TJ, (j+1)·TJ).
-    # a_ref is the streamed (C, N, TILE_J) panel; the state stays whole in
-    # scratch and only its matching column slice feeds the contraction.
-    cols = pl.ds(pl.multiple_of(j * tile_j, TILE), tile_j)
-    psi_j = psi_s[:, cols]                                    # (B, TJ)
-    nu_j = nu_s[:, cols]
-    lat = lat_ref[...]                                        # (B, C)
-    if measure:
-        # β pass: center ψ by its mean (β is exactly shift-invariant; the
-        # centering keeps float32 partial sums O(ψ spread)).  The mean is
-        # over the full scratch row, so every panel of the pass — and every
-        # engine — subtracts the same constant.
-        m = jnp.mean(psi_s[...], axis=1, keepdims=True)       # (B, 1)
-        psi_j = jnp.where(p == periods, psi_j - m, psi_j)
-    partial = jnp.zeros(psi_s.shape, jnp.float32)
-    for c in range(num_classes):
-        x = psi_j - nu_j * lat[:, c:c + 1]
-        # err[b, i] += Σ_{j∈panel} A[c, i, j] · x[b, j]
-        partial = partial + jax.lax.dot_general(
-            x, a_ref[c],
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
+    def _step():
+        # Partial aggregation over this j panel: columns [j·TJ, (j+1)·TJ).
+        # a_ref is the streamed (C, N, TILE_J) panel; the state stays
+        # whole in scratch and only its matching column slice feeds the
+        # contraction.
+        cols = pl.ds(pl.multiple_of(j * tile_j, TILE), tile_j)
+        psi_j = psi_s[:, cols]                                # (B, TJ)
+        nu_j = nu_s[:, cols]
+        lat = lat_ref[...]                                    # (B, C)
+        if measure:
+            # β pass: center ψ by its mean (β is exactly shift-invariant;
+            # the centering keeps float32 partial sums O(ψ spread)).  The
+            # mean is over the full scratch row, so every panel of the
+            # pass — and every engine — subtracts the same constant.
+            m = jnp.mean(psi_s[...], axis=1, keepdims=True)   # (B, 1)
+            psi_j = jnp.where(p == periods, psi_j - m, psi_j)
+        partial = jnp.zeros(psi_s.shape, jnp.float32)
+        for c in range(num_classes):
+            x = psi_j - nu_j * lat[:, c:c + 1]
+            # err[b, i] += Σ_{j∈panel} A[c, i, j] · x[b, j]
+            partial = partial + jax.lax.dot_general(
+                x, a_ref[c],
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
 
-    @pl.when(j == 0)
-    def _init_acc():
-        acc_s[...] = partial
+        @pl.when(j == 0)
+        def _init_acc():
+            acc_s[...] = partial
 
-    @pl.when(j > 0)
-    def _accum():
-        acc_s[...] += partial
+        @pl.when(j > 0)
+        def _accum():
+            acc_s[...] += partial
 
-    # Last panel of the period: fold invariants, apply controller, step.
-    @pl.when(jnp.logical_and(j == j_tiles - 1, p < periods))
-    def _finalize():
-        psi = psi_s[...]
-        nu = nu_s[...]
-        nu_u = nu_u_ref[...]
-        err = (acc_s[...] - (psi + boff_ref[...]) * deg_ref[...]
-               + lamsum_ref[...])
-        c_rel = kp_ref[...] * err
-        nu_next = nu_u + c_rel + nu_u * c_rel
-        # Holdover: masked-out nodes freeze ν at its previous value.
-        nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu)
-        psi_next = psi + nu_next * dt_frames
-        psi_s[...] = psi_next
-        nu_s[...] = nu_next
-        # Telemetry flushes to HBM when the record index t advances, so
-        # overwriting every period within a record is decimation for free.
-        rec_ref[...] = nu_next[None]
-        psi_out_ref[...] = psi_next
-        nu_out_ref[...] = nu_next
+        # Last panel of the period: fold invariants, apply controller,
+        # step.
+        @pl.when(jnp.logical_and(j == j_tiles - 1, p < periods))
+        def _finalize():
+            psi = psi_s[...]
+            nu = nu_s[...]
+            nu_u = nu_u_ref[...]
+            err = (acc_s[...] - (psi + boff_ref[...]) * deg_ref[...]
+                   + lamsum_ref[...])
+            c_rel = kp_ref[...] * err
+            nu_next = nu_u + c_rel + nu_u * c_rel
+            # Holdover: masked-out nodes freeze ν at its previous value.
+            nu_next = jnp.where(mask_ref[...] > 0.5, nu_next, nu)
+            psi_next = psi + nu_next * dt_frames
+            psi_s[...] = psi_next
+            nu_s[...] = nu_next
+            # Telemetry flushes to HBM when the record index t advances,
+            # so overwriting every period within a record is decimation
+            # for free.
+            rec_ref[...] = nu_next[None]
+            psi_out_ref[...] = psi_next
+            nu_out_ref[...] = nu_next
 
-    if measure:
-        # Last panel of the β pass: the accumulator now holds the full
-        # aggregation of the record's post-update state.
-        last_beta_panel = jnp.logical_and(j == j_tiles - 1, p == periods)
+        if measure:
+            # Last panel of the β pass: the accumulator now holds the
+            # full aggregation of the record's post-update state.
+            last_beta_panel = jnp.logical_and(j == j_tiles - 1,
+                                              p == periods)
 
-        @pl.when(last_beta_panel)
-        def _record_beta():
-            bnode = (acc_s[...]
-                     - (psi_s[...] - m) * deg_ref[...]
-                     + lamsum_ref[...])
-            if record_beta:
-                brec_ref[...] = bnode[None]
-            if record_watermarks:
-                babs = jnp.abs(bnode)
-                nu = nu_s[...]
+            @pl.when(last_beta_panel)
+            def _record_beta():
+                bnode = (acc_s[...]
+                         - (psi_s[...] - m) * deg_ref[...]
+                         + lamsum_ref[...])
+                if record_beta:
+                    brec_ref[...] = bnode[None]
+                if record_watermarks:
+                    babs = jnp.abs(bnode)
+                    nu = nu_s[...]
 
-                @pl.when(t == 0)
-                def _wm_seed():
-                    wm_beta_ref[...] = babs
-                    wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
-                    wm_lo_ref[...] = nu
-                    wm_hi_ref[...] = nu
+                    @pl.when(t == 0)
+                    def _wm_seed():
+                        wm_beta_ref[...] = babs
+                        wm_idx_ref[...] = jnp.zeros_like(babs, jnp.int32)
+                        wm_lo_ref[...] = nu
+                        wm_hi_ref[...] = nu
 
-                @pl.when(t > 0)
-                def _wm_update():
-                    wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...],
-                                                t, wm_idx_ref[...])
-                    wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...], babs)
-                    wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
-                    wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
+                    @pl.when(t > 0)
+                    def _wm_update():
+                        wm_idx_ref[...] = jnp.where(babs > wm_beta_ref[...],
+                                                    t, wm_idx_ref[...])
+                        wm_beta_ref[...] = jnp.maximum(wm_beta_ref[...],
+                                                       babs)
+                        wm_lo_ref[...] = jnp.minimum(wm_lo_ref[...], nu)
+                        wm_hi_ref[...] = jnp.maximum(wm_hi_ref[...], nu)
+                if record_guard:
+                    # Degree-scaled band check — see _fused_kernel.
+                    viol = jnp.logical_or(
+                        bnode > ghi_ref[...] * deg_ref[...],
+                        bnode < glo_ref[...] * deg_ref[...])
+                    row_viol = jnp.any(viol, axis=1, keepdims=True)
+                    trip_ref[...] = jnp.where(row_viol, t, trip_ref[...])
+
+    if record_guard:
+        # Chunk early-exit: freeze every grid step of records after the
+        # earliest trip (or past the host's stop_after cap).  min(trip)
+        # ≥ t keeps the trip record itself fully processed.
+        live = jnp.logical_and(jnp.min(trip_ref[...]) >= t,
+                               t <= stop_ref[0, 0])
+
+        @pl.when(live)
+        def _run():
+            _step()
+    else:
+        _step()
 
 
 def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
@@ -753,6 +897,8 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
                                tile_j: int, ctrl_mask=None,
                                record_beta: bool = False,
                                record_watermarks: bool = False,
+                               record_guard: bool = False, guard_lo=None,
+                               guard_hi=None, guard_stop=None,
                                interpret: bool = False):
     """Tiled fused engine: adjacency streamed in (C, N, tile_j) panels.
 
@@ -772,6 +918,10 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     the flags are compile-time switches and the ν-only grid is unchanged
     when both are off.  Watermarks share the extra pass with β recording
     when both are on, so the combination costs no additional streaming.
+    ``record_guard`` (with traced ``guard_lo`` / ``guard_hi`` /
+    ``guard_stop``) shares the same measure pass and adds the (B, 1)
+    int32 trip output with chunk early-exit — see
+    :func:`bittide_fused_pallas`.
     """
     b, n = psi.shape
     c = a.shape[0]
@@ -791,10 +941,37 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
     kern = functools.partial(
         _tiled_kernel, dt_frames=float(dt_frames), tile_j=int(tile_j),
         num_classes=int(c), record_beta=bool(record_beta),
-        record_watermarks=bool(record_watermarks))
+        record_watermarks=bool(record_watermarks),
+        record_guard=bool(record_guard))
 
     mask = _mask_row(ctrl_mask, n, b)
     full3 = lambda t, p, j: (0, 0)
+    in_specs = [
+        pl.BlockSpec((b, c), full3),                   # lat per draw
+        # A column panel: the index map advances with j, so the Pallas
+        # pipeline double-buffers the HBM fetch of panel j+1 behind the
+        # matmul on panel j.
+        pl.BlockSpec((c, n, tile_j), lambda t, p, j: (0, 0, j)),
+        pl.BlockSpec((b, n), full3),                   # psi0
+        pl.BlockSpec((b, n), full3),                   # nu0
+        pl.BlockSpec((b, n), full3),                   # nu_u
+        pl.BlockSpec((b, 1), full3),                   # kp per draw
+        pl.BlockSpec((b, 1), full3),                   # beta_off
+        pl.BlockSpec((mask.shape[0], n), full3),       # ctrl mask
+        pl.BlockSpec((1, n), full3),                   # deg
+        pl.BlockSpec((b, n), full3),                   # lamsum per draw
+    ]
+    args = [_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
+            psi.astype(jnp.float32), nu.astype(jnp.float32),
+            nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
+            _gain_col(beta_off, b, "beta_off"), mask,
+            deg.reshape(1, n).astype(jnp.float32),
+            _lamsum_rows(lamsum, b, n)]
+    if record_guard:
+        in_specs += [pl.BlockSpec((b, 1), full3),      # guard band lo
+                     pl.BlockSpec((b, 1), full3),      # guard band hi
+                     pl.BlockSpec((b, 1), full3)]      # stop-after record
+        args += _guard_cols(guard_lo, guard_hi, guard_stop, b)
     out_specs = [
         pl.BlockSpec((b, n), full3),                     # psi final
         pl.BlockSpec((b, n), full3),                     # nu final
@@ -813,26 +990,15 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
         for dt_ in (jnp.float32, jnp.int32, jnp.float32, jnp.float32):
             out_specs.append(pl.BlockSpec((b, n), full3))
             out_shape.append(jax.ShapeDtypeStruct((b, n), dt_))
-    measure = record_beta or record_watermarks
+    if record_guard:
+        out_specs.append(pl.BlockSpec((b, 1), full3))
+        out_shape.append(jax.ShapeDtypeStruct((b, 1), jnp.int32))
+    measure = record_beta or record_watermarks or record_guard
     out = pl.pallas_call(
         kern,
         grid=(num_records, record_every + (1 if measure else 0),
               j_tiles),
-        in_specs=[
-            pl.BlockSpec((b, c), full3),                   # lat per draw
-            # A column panel: the index map advances with j, so the Pallas
-            # pipeline double-buffers the HBM fetch of panel j+1 behind the
-            # matmul on panel j.
-            pl.BlockSpec((c, n, tile_j), lambda t, p, j: (0, 0, j)),
-            pl.BlockSpec((b, n), full3),                   # psi0
-            pl.BlockSpec((b, n), full3),                   # nu0
-            pl.BlockSpec((b, n), full3),                   # nu_u
-            pl.BlockSpec((b, 1), full3),                   # kp per draw
-            pl.BlockSpec((b, 1), full3),                   # beta_off
-            pl.BlockSpec((mask.shape[0], n), full3),       # ctrl mask
-            pl.BlockSpec((1, n), full3),                   # deg
-            pl.BlockSpec((b, n), full3),                   # lamsum per draw
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -841,9 +1007,5 @@ def bittide_tiled_fused_pallas(psi, nu, nu_u, a, deg, lamsum, lat_frames,
             pltpu.VMEM((b, n), jnp.float32),               # err accumulator
         ],
         interpret=interpret,
-    )(_lat_rows(lat_frames, b, c), a.astype(jnp.float32),
-      psi.astype(jnp.float32), nu.astype(jnp.float32),
-      nu_u.astype(jnp.float32), _gain_col(kp, b, "kp"),
-      _gain_col(beta_off, b, "beta_off"), mask,
-      deg.reshape(1, n).astype(jnp.float32), _lamsum_rows(lamsum, b, n))
-    return _split_outputs(out, record_beta, record_watermarks)
+    )(*args)
+    return _split_outputs(out, record_beta, record_watermarks, record_guard)

@@ -64,8 +64,10 @@ import numpy as np
 
 from repro.core.frame_model import LinkParams, OMEGA_NOM, broadcast_gain
 from repro.core.topology import Topology
+from repro.telemetry.api import resolve_telemetry
 from repro.telemetry.watermarks import Watermarks
 
+from .api import EngineOutputs, resolve_options
 from .bittide_sparse import bittide_sparse_pallas, ellify, max_in_degree
 from .bittide_step import (SUBLANE, TILE, TILE_J_MAX, VMEM_BUDGET_BYTES,
                            bittide_fused_pallas, bittide_step_pallas,
@@ -275,11 +277,14 @@ def bittide_step(psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
                                              "record_every", "engine",
                                              "tile_j", "interpret",
                                              "use_ref", "record_beta",
-                                             "record_watermarks"))
+                                             "record_watermarks",
+                                             "record_guard"))
 def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
                   lamsum, lat, dt_frames, num_records, record_every, engine,
                   tile_j, interpret, use_ref, record_beta: bool = False,
-                  record_watermarks: bool = False):
+                  record_watermarks: bool = False,
+                  record_guard: bool = False, guard_lo=None, guard_hi=None,
+                  guard_stop=None):
     """jit entry for the fused engines; one compile per (B, N, C, statics).
 
     Traced arguments (data, never compile keys — the scenario runner swaps
@@ -296,15 +301,25 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
     Static compile keys: ``dt_frames`` (frames per control period),
     ``num_records`` / ``record_every`` (telemetry grid), ``engine`` /
     ``tile_j`` (from :func:`repro.kernels.bittide_step.select_engine`),
-    ``interpret``, ``use_ref``, ``record_beta``, and
-    ``record_watermarks`` — the telemetry switches are kernel *variants*
+    ``interpret``, ``use_ref``, ``record_beta``, ``record_watermarks``
+    and ``record_guard`` — the telemetry switches are kernel *variants*
     (extra outputs + extra work), so ν-only runs keep their exact
     previous executable.
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None)
-    with watermarks = (beta_abs_max, peak_record, nu_min, nu_max).
+    With ``record_guard`` the traced ``guard_lo`` / ``guard_hi`` (per-draw
+    band, frames per unit weighted degree) and ``guard_stop`` (last record
+    to execute) feed the in-kernel reframing guard — the kernel freezes
+    all records past the earliest trip and reports it in
+    ``EngineOutputs.guard_state`` (sentinel ``num_records``); since the
+    stop cap is traced too, a partial chunk reuses this exact executable.
+
+    Returns :class:`repro.kernels.EngineOutputs` with watermarks =
+    (beta_abs_max, peak_record, nu_min, nu_max).
     """
     if use_ref:
+        if record_guard:
+            raise ValueError("record_guard is not supported on the "
+                             "use_ref oracle lane")
         psi_f, nu_f, rec, brec = bittide_dense_multistep_ref(
             psi, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
             num_records, record_every, ctrl_mask,
@@ -320,30 +335,38 @@ def _fused_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, a, lam_eff,
                   jnp.min(rec, axis=0), jnp.max(rec, axis=0))
             if not record_beta:
                 brec = None
-        return psi_f, nu_f, rec, brec, wm
+        return EngineOutputs(psi=psi_f, nu=nu_f, freq=rec, beta=brec,
+                             watermarks=wm)
     # Step-invariant per-node degree fold, hoisted out of the record grid.
     deg = a.sum(axis=(0, 2))
+    guard_kw = dict(record_guard=record_guard, guard_lo=guard_lo,
+                    guard_hi=guard_hi, guard_stop=guard_stop)
     if engine == "tiled":
         return bittide_tiled_fused_pallas(
             psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
             num_records=num_records, record_every=record_every,
             tile_j=tile_j, ctrl_mask=ctrl_mask, record_beta=record_beta,
-            record_watermarks=record_watermarks, interpret=interpret)
+            record_watermarks=record_watermarks, interpret=interpret,
+            **guard_kw)
     return bittide_fused_pallas(
         psi, nu, nu_u, a, deg, lamsum, lat, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every,
         ctrl_mask=ctrl_mask, record_beta=record_beta,
-        record_watermarks=record_watermarks, interpret=interpret)
+        record_watermarks=record_watermarks, interpret=interpret,
+        **guard_kw)
 
 
 @functools.partial(jax.jit, static_argnames=("dt_frames", "num_records",
                                              "record_every", "tile_i",
                                              "interpret", "record_beta",
-                                             "record_watermarks"))
+                                             "record_watermarks",
+                                             "record_guard"))
 def _sparse_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, nbr, latf, w,
                    lamsum, dt_frames, num_records, record_every, tile_i,
                    interpret, record_beta: bool = False,
-                   record_watermarks: bool = False):
+                   record_watermarks: bool = False,
+                   record_guard: bool = False, guard_lo=None, guard_hi=None,
+                   guard_stop=None):
     """jit entry for the sparse ELL engine; one compile per (B, N, K, statics).
 
     Traced arguments (data, never compile keys — scenario segments AND
@@ -359,26 +382,32 @@ def _sparse_engine(psi, nu, nu_u, kp, beta_off, ctrl_mask, nbr, latf, w,
 
     Static compile keys: ``dt_frames``, ``num_records`` /
     ``record_every``, ``tile_i`` (node-panel width), ``interpret``,
-    ``record_beta``, ``record_watermarks``.
+    ``record_beta``, ``record_watermarks``, ``record_guard`` (the traced
+    guard band / stop cap follow :func:`_fused_engine`'s contract).
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None).
+    Returns :class:`repro.kernels.EngineOutputs`.
     """
     return bittide_sparse_pallas(
         psi, nu, nu_u, nbr, latf, w, lamsum, kp, beta_off, dt_frames,
         num_records=num_records, record_every=record_every, tile_i=tile_i,
         ctrl_mask=ctrl_mask, record_beta=record_beta,
-        record_watermarks=record_watermarks, interpret=interpret)
+        record_watermarks=record_watermarks, interpret=interpret,
+        record_guard=record_guard, guard_lo=guard_lo, guard_hi=guard_hi,
+        guard_stop=guard_stop)
 
 
 @functools.partial(jax.jit, static_argnames=("kp", "beta_off", "dt_frames",
                                              "num_records", "record_every",
                                              "interpret", "use_ref",
                                              "record_beta",
-                                             "record_watermarks"))
+                                             "record_watermarks",
+                                             "record_guard"))
 def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
                     dt_frames, num_records, record_every, interpret,
                     use_ref, record_beta: bool = False,
-                    record_watermarks: bool = False):
+                    record_watermarks: bool = False,
+                    record_guard: bool = False, guard_lo=None, guard_hi=None,
+                    guard_stop=None):
     """Capability-fallback engine with the fused engines' record contract.
 
     A scan of per-period 2-D kernels (one ``pallas_call`` per control
@@ -397,7 +426,15 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
     ``record_watermarks`` the running aggregates live in the scan carry,
     fed by the same in-kernel β measurements.
 
-    Returns (psi_f, nu_f, nu_rec, beta_rec-or-None, watermarks-or-None).
+    With ``record_guard`` the trip record index rides the scan carry
+    (sentinel ``num_records``): each record's β measurement is checked
+    against the traced degree-scaled band and, once tripped (or past the
+    traced ``guard_stop`` cap), every later record becomes a
+    ``lax.cond`` no-op that carries the frozen state through — the same
+    early-exit contract as the Pallas lanes, at scan granularity.
+
+    Returns :class:`repro.kernels.EngineOutputs` (``guard_state`` is a
+    scalar int32 on this single-draw lane).
     """
 
     def period(carry, _):
@@ -423,12 +460,14 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
             psi_c, nu, nu_u, a, lam_eff, lat, kp, beta_off, dt_frames,
             ctrl_mask=ctrl_mask, emit_beta=True, interpret=interpret)[2]
 
-    def record(carry, t_idx):
-        state, wm = carry
+    measure_pass = record_beta or record_watermarks or record_guard
+    if record_guard:
+        deg = a.sum(axis=(0, 2))
+
+    def step_record(state, wm, trip, t_idx):
         state, _ = jax.lax.scan(period, state, None, length=record_every)
         psi_t, nu_t = state
-        bnode = (measure(psi_t, nu_t)
-                 if record_beta or record_watermarks else None)
+        bnode = measure(psi_t, nu_t) if measure_pass else None
         if record_watermarks:
             # Running aggregates in the scan carry, from the SAME
             # in-kernel β measurement the record lane emits.  Strict >
@@ -438,8 +477,40 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
             wm = (jnp.maximum(bmax, babs),
                   jnp.where(babs > bmax, t_idx, idx),
                   jnp.minimum(lo, nu_t), jnp.maximum(hi, nu_t))
-        out = (nu_t, bnode) if record_beta else nu_t
-        return (state, wm), out
+        if record_guard:
+            # Degree-scaled band check, same criterion as the Pallas
+            # lanes (strict inequalities keep degree-0 padding inert).
+            viol = jnp.any(jnp.logical_or(bnode > guard_hi * deg,
+                                          bnode < guard_lo * deg))
+            trip = jnp.where(viol, t_idx, trip)
+        return (state, wm, trip) + ((bnode,) if record_beta else ())
+
+    def record(carry, t_idx):
+        state, wm, trip = carry
+        if record_guard:
+            live = jnp.logical_and(trip >= num_records,
+                                   t_idx <= guard_stop)
+
+            def frozen():
+                # Early-exit no-op: carry the frozen state through (the
+                # ν record re-emits the trip record's value; frozen β
+                # slots are zeros — the host truncates at the trip).
+                out = (state, wm, trip)
+                if record_beta:
+                    out = out + (jnp.zeros_like(state[0]),)
+                return out
+
+            res = jax.lax.cond(
+                live, lambda: step_record(state, wm, trip, t_idx), frozen)
+        else:
+            res = step_record(state, wm, trip, t_idx)
+        if record_beta:
+            state, wm, trip, bnode = res
+            out = (state[1], bnode)
+        else:
+            state, wm, trip = res
+            out = state[1]
+        return (state, wm, trip), out
 
     n_p = psi.shape[-1]
     wm0 = ((jnp.full((n_p,), -jnp.inf, jnp.float32),
@@ -447,12 +518,18 @@ def _perstep_engine(psi, nu, nu_u, ctrl_mask, a, lam_eff, lat, kp, beta_off,
             jnp.full((n_p,), jnp.inf, jnp.float32),
             jnp.full((n_p,), -jnp.inf, jnp.float32))
            if record_watermarks else ())
-    ((psi, nu), wm), rec = jax.lax.scan(
-        record, ((psi, nu), wm0), jnp.arange(num_records, dtype=jnp.int32))
+    trip0 = (jnp.asarray(num_records, jnp.int32) if record_guard
+             else jnp.int32(0))
+    ((psi, nu), wm, trip), rec = jax.lax.scan(
+        record, ((psi, nu), wm0, trip0),
+        jnp.arange(num_records, dtype=jnp.int32))
     wm = wm if record_watermarks else None
+    trip = trip if record_guard else None
     if record_beta:
-        return psi, nu, rec[0], rec[1], wm
-    return psi, nu, rec, None, wm
+        return EngineOutputs(psi=psi, nu=nu, freq=rec[0], beta=rec[1],
+                             watermarks=wm, guard_state=trip)
+    return EngineOutputs(psi=psi, nu=nu, freq=rec, beta=None,
+                         watermarks=wm, guard_state=trip)
 
 
 def _pad_batch(ppm_u: np.ndarray, n: int, n_pad: int) -> Tuple[jnp.ndarray, int]:
@@ -664,21 +741,21 @@ def _run_sparse(topo: Topology, lat_be, beta0_be, beta0_batched: bool,
     ti = (int(tile_j) if tile_j is not None
           else _sparse_tile(b_pad, n_pad, k, rows_t, interp))
 
-    psi_f, nu_f, rec, brec, wm = _sparse_engine(
+    out = _sparse_engine(
         psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
         jnp.asarray(mask_pad), nbr, latf, w, jnp.asarray(lamsum_pad),
         float(omega_nom * dt), int(num_records), int(record_every),
         int(ti), interp, bool(record_beta), bool(record_watermarks))
 
-    freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
+    freq = np.asarray(out.freq)[:, :b, :n] * 1e6   # (R, B, N)
     beta = (np.ascontiguousarray(
-        np.transpose(np.asarray(brec)[:, :b, :n], (1, 0, 2)))
+        np.transpose(np.asarray(out.beta)[:, :b, :n], (1, 0, 2)))
         if record_beta else None)
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
-        np.asarray(psi_f)[:b, :n], "sparse", ti,
-        nu=np.asarray(nu_f)[:b, :n], beta=beta,
-        watermarks=(_host_watermarks(wm, num_records, b, n)
+        np.asarray(out.psi)[:b, :n], "sparse", ti,
+        nu=np.asarray(out.nu)[:b, :n], beta=beta,
+        watermarks=(_host_watermarks(out.watermarks, num_records, b, n)
                     if record_watermarks else None))
 
 
@@ -688,13 +765,14 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                             omega_nom: float = OMEGA_NOM,
                             interpret: Optional[bool] = None,
                             use_ref: bool = False,
-                            engine: str = "auto",
+                            engine: Optional[str] = None,
                             tile_j: Optional[int] = None,
                             init=None, ctrl_mask=None,
                             lat_classes: Optional[np.ndarray] = None,
                             edge_w: Optional[np.ndarray] = None,
-                            record_beta: bool = False,
-                            record_watermarks: bool = False) -> DenseResult:
+                            record_beta: Optional[bool] = None,
+                            record_watermarks: Optional[bool] = None,
+                            options=None, telemetry=None) -> DenseResult:
     """Batched fused synchronization: B draws in one compiled call.
 
     Args:
@@ -747,6 +825,14 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
         materializing any (R, B, N) record (the only way a 1M-node
         sparse run can report them).  Also a compile-time kernel
         variant, independent of (and composable with) ``record_beta``.
+      options: :class:`repro.kernels.EngineOptions` — the typed home of
+        ``engine`` / ``interpret``.  Explicit legacy kwargs win over the
+        corresponding fields; ``interpret=`` emits a one-release
+        :class:`DeprecationWarning` (``engine=`` maps silently).
+      telemetry: :class:`repro.telemetry.Telemetry` — the typed home of
+        ``record_beta`` / ``record_watermarks`` (both legacy kwargs
+        deprecated).  ``trace`` / ``guard`` need the scenario runner and
+        raise here.
 
     Returns:
       DenseResult ``(freq_ppm (B, R, N), psi (B, N))`` with
@@ -755,6 +841,23 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
       ((B, R, N) frames, or None without ``record_beta``) and
       ``.watermarks`` (:class:`repro.telemetry.Watermarks` or None).
     """
+    opts = resolve_options(options, "simulate_ensemble_dense",
+                           engine=engine, interpret=interpret)
+    tel = resolve_telemetry(telemetry, "simulate_ensemble_dense",
+                            beta=record_beta, watermarks=record_watermarks)
+    if tel.trace or tel.guard:
+        raise ValueError(
+            "simulate_ensemble_dense: Telemetry.trace / Telemetry.guard "
+            "need the scenario runner — use run_scenario, which owns the "
+            "flight recorder and the reframing splice")
+    if opts.chunk_records is not None:
+        raise ValueError(
+            "simulate_ensemble_dense runs one launch per call; "
+            "chunk_records is a run_scenario option")
+    engine = opts.engine
+    interpret = opts.interpret
+    record_beta = tel.beta
+    record_watermarks = tel.watermarks
     ppm_u = np.atleast_2d(np.asarray(ppm_u, np.float32))
     if ppm_u.shape[1] != topo.num_nodes:
         raise ValueError(
@@ -878,19 +981,20 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
                     omega_nom, lat_classes=classes_np, edge_w=edge_w)
             else:
                 lam_bi = lam_eff
-            psi_f, nu_f, rec, brec, wm = _perstep_engine(
+            out = _perstep_engine(
                 psi0[bi], nu0[bi], nu_u[bi], mask_row(bi), a, lam_bi,
                 jnp.asarray(latv[bi]), float(kp[bi]), float(beta_off[bi]),
                 float(omega_nom * dt), int(num_records), int(record_every),
                 interp, bool(use_ref), bool(record_beta),
                 bool(record_watermarks))
-            freqs.append(np.asarray(rec)[:, :n] * 1e6)
-            psis.append(np.asarray(psi_f)[:n])
-            nus.append(np.asarray(nu_f)[:n])
+            freqs.append(np.asarray(out.freq)[:, :n] * 1e6)
+            psis.append(np.asarray(out.psi)[:n])
+            nus.append(np.asarray(out.nu)[:n])
             if record_beta:
-                betas.append(np.asarray(brec)[:, :n])
+                betas.append(np.asarray(out.beta)[:, :n])
             if record_watermarks:
-                wms.append(_host_watermarks(wm, num_records, None, n))
+                wms.append(_host_watermarks(out.watermarks, num_records,
+                                            None, n))
         wm_res = Watermarks.stack(wms) if record_watermarks else None
         return DenseResult(np.stack(freqs), np.stack(psis), "per-step", 0,
                            nu=np.stack(nus),
@@ -903,22 +1007,22 @@ def simulate_ensemble_dense(topo: Topology, links: LinkParams, ppm_u,
     lamsum_pad = np.zeros((b_pad, n_pad), np.float32)
     lamsum_pad[:b] = np.broadcast_to(lamsum_rows, (b, n_pad))
 
-    psi_f, nu_f, rec, brec, wm = _fused_engine(
+    out = _fused_engine(
         psi0, nu0, nu_u, _pad_gain(kp, b_pad), _pad_gain(beta_off, b_pad),
         jnp.asarray(mask_pad), a, lam_eff, jnp.asarray(lamsum_pad),
         jnp.asarray(lat_pad), float(omega_nom * dt), int(num_records),
         int(record_every), str(chosen), int(tj), interp, bool(use_ref),
         bool(record_beta), bool(record_watermarks))
 
-    freq = np.asarray(rec)[:, :b, :n] * 1e6   # (R, B, N)
+    freq = np.asarray(out.freq)[:, :b, :n] * 1e6   # (R, B, N)
     beta = (np.ascontiguousarray(
-        np.transpose(np.asarray(brec)[:, :b, :n], (1, 0, 2)))
+        np.transpose(np.asarray(out.beta)[:, :b, :n], (1, 0, 2)))
         if record_beta else None)
     return DenseResult(
         np.ascontiguousarray(np.transpose(freq, (1, 0, 2))),
-        np.asarray(psi_f)[:b, :n], chosen, tj,
-        nu=np.asarray(nu_f)[:b, :n], beta=beta,
-        watermarks=(_host_watermarks(wm, num_records, b, n)
+        np.asarray(out.psi)[:b, :n], chosen, tj,
+        nu=np.asarray(out.nu)[:b, :n], beta=beta,
+        watermarks=(_host_watermarks(out.watermarks, num_records, b, n)
                     if record_watermarks else None))
 
 
@@ -926,28 +1030,36 @@ def simulate_fused(topo: Topology, links: LinkParams, ppm_u, steps: int,
                    kp: float, dt: float = 1e-3, beta_off: float = 0.0,
                    record_every: int = 1, omega_nom: float = OMEGA_NOM,
                    interpret: Optional[bool] = None,
-                   use_ref: bool = False, engine: str = "auto",
+                   use_ref: bool = False, engine: Optional[str] = None,
                    tile_j: Optional[int] = None, init=None,
                    ctrl_mask=None, lat_classes=None,
-                   edge_w=None, record_beta: bool = False,
-                   record_watermarks: bool = False) -> DenseResult:
+                   edge_w=None, record_beta: Optional[bool] = None,
+                   record_watermarks: Optional[bool] = None,
+                   options=None, telemetry=None) -> DenseResult:
     """Single-draw fused run; returns (freq_ppm (R, N), psi (N,)).
 
     ``init`` takes (psi (N,), nu (N,)) for segment chaining; the scenario
     kwargs (``ctrl_mask``, ``lat_classes``, ``edge_w``) pass through to
-    :func:`simulate_ensemble_dense`, as do ``record_beta`` (the result's
-    ``.beta`` is then (R, N) per-node net occupancy in frames) and
-    ``record_watermarks`` (``.watermarks`` holds per-node (N,) aggregates).
+    :func:`simulate_ensemble_dense`, as do ``options=`` (EngineOptions)
+    and ``telemetry=`` (Telemetry; ``.beta`` is then (R, N) per-node net
+    occupancy in frames, ``.watermarks`` per-node (N,) aggregates).  The
+    legacy ``interpret=`` / ``record_beta=`` / ``record_watermarks=``
+    kwargs are one-release deprecation shims resolved here (so the
+    warning names this entry point, not the delegate).
     """
+    opts = resolve_options(options, "simulate_fused",
+                           engine=engine, interpret=interpret)
+    tel = resolve_telemetry(telemetry, "simulate_fused",
+                            beta=record_beta, watermarks=record_watermarks)
     if init is not None and not isinstance(init, DenseResult):
         init = (np.atleast_2d(init[0]), np.atleast_2d(init[1]))
     res = simulate_ensemble_dense(
         topo, links, np.atleast_2d(np.asarray(ppm_u, np.float32)), steps, kp,
         dt=dt, beta_off=beta_off, record_every=record_every,
-        omega_nom=omega_nom, interpret=interpret, use_ref=use_ref,
-        engine=engine, tile_j=tile_j, init=init, ctrl_mask=ctrl_mask,
-        lat_classes=lat_classes, edge_w=edge_w, record_beta=record_beta,
-        record_watermarks=record_watermarks)
+        omega_nom=omega_nom, use_ref=use_ref,
+        tile_j=tile_j, init=init, ctrl_mask=ctrl_mask,
+        lat_classes=lat_classes, edge_w=edge_w,
+        options=opts, telemetry=tel)
     freq, psi = res
     return DenseResult(freq[0], psi[0], res.engine, res.tile_j,
                        nu=None if res.nu is None else res.nu[0],

@@ -80,6 +80,8 @@ from repro.core.envelopes import (freq_step_envelopes, laplacian,
 from repro.core.frame_model import (PIPE_FRAMES, SIGNAL_VELOCITY, LinkParams,
                                     SimConfig, make_links)
 from repro.core.topology import Topology
+from repro.kernels.api import EngineOptions, resolve_options
+from repro.telemetry.api import Telemetry, resolve_telemetry
 
 from .events import (DriftRamp, FreqStep, LatencyStep, LinkDrop,
                      LinkRestore, NodeHoldover, NodeReset, Scenario)
@@ -507,9 +509,10 @@ class ShrunkRepro:
         """Replay the repro; returns its verdict (and asserts nothing —
         callers compare against :attr:`expected_verdict`)."""
         res = run_scenario(self.topo, self.links, self.ctrl, self.ppm_u,
-                           self.scenario, self.cfg, engine=self.engine,
-                           record_beta=True,
-                           auto_reframe=self.auto_reframe)
+                           self.scenario, self.cfg,
+                           options=EngineOptions(engine=self.engine),
+                           telemetry=Telemetry(beta=True,
+                                               guard=self.auto_reframe))
         verdicts, _, _, _ = triage_result(res, depth=self.depth)
         return str(verdicts[0])
 
@@ -643,26 +646,42 @@ class ChaosCampaign:
                 f"has {self.num_draws}")
         return scenario, ppm
 
-    def run(self, record_watermarks: bool = False,
-            trace=False) -> CampaignResult:
+    def run(self, record_watermarks: Optional[bool] = None,
+            trace=None, telemetry: Optional[Telemetry] = None,
+            options: Optional[EngineOptions] = None) -> CampaignResult:
         """Build, simulate (one compile per engine), and triage.
 
-        ``trace`` threads a flight recorder through the whole campaign
-        (same contract as ``run_scenario``): the build, the batched run
-        (with its engine spans), and one ``chaos_draw`` verdict event
-        per draw land in a single :class:`repro.telemetry.RunTrace`,
-        available as ``CampaignResult.result.trace``.
-        ``record_watermarks`` additionally carries the in-kernel O(N)
-        excursion watermarks (per-draw: ``result.watermarks[b]``).
+        ``telemetry`` (:class:`repro.telemetry.Telemetry`) selects what
+        to observe — the campaign always adds the β record (triage needs
+        it) and its own ``auto_reframe`` guard unless the caller set
+        one.  ``Telemetry.trace`` threads a flight recorder through the
+        whole campaign (same contract as ``run_scenario``): the build,
+        the batched run (with its engine spans), and one ``chaos_draw``
+        verdict event per draw land in a single
+        :class:`repro.telemetry.RunTrace`, available as
+        ``CampaignResult.result.trace``.  ``Telemetry.watermarks``
+        additionally carries the in-kernel O(N) excursion watermarks
+        (per-draw: ``result.watermarks[b]``).  ``options``
+        (:class:`repro.kernels.EngineOptions`) overrides the campaign's
+        ``engine`` field and the runner's chunking.  The legacy
+        ``record_watermarks=`` / ``trace=`` booleans keep working with a
+        one-per-process :class:`DeprecationWarning`.
         """
         from repro.telemetry import coerce_trace
-        tr = coerce_trace(trace, name=f"chaos:{self.name}")
+        opts = resolve_options(options, "ChaosCampaign.run",
+                               default_engine=self.engine)
+        tel = resolve_telemetry(
+            telemetry, "ChaosCampaign.run",
+            watermarks=record_watermarks,
+            trace=trace if trace else None)
+        tr = coerce_trace(tel.trace, name=f"chaos:{self.name}")
+        tel = dataclasses.replace(
+            tel, beta=True, trace=tr,
+            guard=tel.guard if tel.guard else self.auto_reframe)
         with tr.span("segment", name="chaos-build", draws=self.num_draws):
             scenario, ppm = self.build()
         res = run_scenario(self.topo, self.links, self.ctrl, ppm, scenario,
-                           self.cfg, engine=self.engine, record_beta=True,
-                           record_watermarks=record_watermarks,
-                           auto_reframe=self.auto_reframe, trace=tr)
+                           self.cfg, options=opts, telemetry=tel)
         verdicts, margins, peaks, reframed = triage_result(
             res, depth=self.depth)
         for b in range(self.num_draws):

@@ -65,15 +65,22 @@ Closed-loop buffer re-centering (``auto_reframe=``): real elastic
 buffers are 32 frames deep, and the hardware keeps them there by
 *reframing* — rotating read pointers so occupancy returns to the
 setpoint, trading λ for headroom (paper §4.2; arXiv:2504.07044).  With
-``auto_reframe`` enabled the runner closes that loop in simulation:
-between record chunks it inspects the in-kernel β record against the
-guard band ``depth/2 − margin`` (margin defaults to
-:func:`repro.core.envelopes.reframe_guard_margin`).  The record is per
-NODE but the buffer wall is per EDGE, so the trigger reconstructs the
-graph-consistent per-edge occupancy estimate — node potentials from the
-Laplacian pseudo-inverse of the net record, differenced along each edge
-— before comparing against the guard.  When tripped, the runner
-splices a pointer rotation computed from the live threaded state
+``auto_reframe`` enabled the runner closes that loop in simulation,
+with the guard check placed per lane.  On the kernel lanes the guard
+runs IN-KERNEL: every measure pass compares the per-node net occupancy
+against the per-draw degree-scaled band ``target ± (depth/2 − margin)``
+and freezes the chunk at the first tripping record (post-trip records
+are predicated no-ops), so the splice lands one record period after the
+crossing regardless of ``chunk_records``, and the resumed partial chunk
+re-enters the same executable through a traced stop cap.  On
+segment-sum the runner inspects each completed chunk's per-edge record:
+the record is per NODE but the buffer wall is per EDGE, so the trigger
+reconstructs the graph-consistent per-edge occupancy estimate — node
+potentials from the Laplacian pseudo-inverse of the net record,
+differenced along each edge — before comparing against the guard
+(exposure up to one chunk there).  Margins default to the per-draw
+:func:`repro.core.envelopes.reframe_guard_margins`.  When tripped, the
+runner splices a pointer rotation computed from the live threaded state
 (:func:`repro.core.reframing.graph_shifts`): integer
 node potentials solve the Laplacian least-squares problem against the
 net occupancy deviation, every edge's λeff shifts by
@@ -111,13 +118,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.controller import ControllerConfig
-from repro.core.envelopes import laplacian, reframe_guard_margin
+from repro.core.envelopes import laplacian, reframe_guard_margins
 from repro.core.frame_model import (EB_INIT, LinkParams, SimConfig,
                                     _convergence_time, broadcast_gain,
                                     simulate, simulate_ensemble)
 from repro.core.reframing import (ReframePolicy, edge_occupancy,
                                   node_net_occupancy, shift_assignment)
 from repro.core.topology import Topology
+from repro.kernels.api import resolve_options
 from repro.kernels.bittide_sparse import ellify
 from repro.kernels.bittide_step import TILE, select_engine
 from repro.kernels.ops import (_auto_interpret, _fused_engine,
@@ -125,6 +133,7 @@ from repro.kernels.ops import (_auto_interpret, _fused_engine,
                                _pad_gain, _pad_table_rows, _perstep_engine,
                                _sparse_engine, _sparse_tile, latency_classes)
 from repro.telemetry import Watermarks, coerce_trace, compile_stats
+from repro.telemetry.api import resolve_telemetry
 
 from .compiler import CompiledScenario, compile_scenario
 from .events import Scenario
@@ -132,6 +141,18 @@ from .events import Scenario
 __all__ = ["AppliedReframe", "ScenarioResult", "run_scenario"]
 
 _DENSE_ENGINES = ("auto", "fused", "tiled", "per-step")
+
+
+def _guard_band_cols(b_pad: int, b: int, target: float, guard_rows):
+    """Padded (B_pad, 1) f32 in-kernel guard-band columns.
+
+    Padding draws get an unbounded band (their zero state must never trip
+    the shared early-exit freeze for the real draws)."""
+    glo = np.full((b_pad, 1), -1e30, np.float32)
+    ghi = np.full((b_pad, 1), 1e30, np.float32)
+    glo[:b, 0] = target - guard_rows
+    ghi[:b, 0] = target + guard_rows
+    return jnp.asarray(glo), jnp.asarray(ghi)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,12 +165,19 @@ class AppliedReframe:
       batched run's draws rotated independently.  Δλ per edge equals the
       shift exactly (the frame-rotation invariant).
     auto: True for guard-band splices, False for explicit Reframe events.
+    guard_latency: records of exposure between the guard crossing and the
+      splice — 1 on the kernel lanes (the in-kernel guard freezes the
+      chunk at the trip record, so the rotation lands one record period
+      after the crossing), ``chunk − crossing_offset`` on the
+      host-inspected segment-sum lane (the trip is only visible once the
+      chunk returns), 0 for explicit Reframe events.
     """
 
     record: int
     time: float
     shift: np.ndarray
     auto: bool
+    guard_latency: int = 0
 
 
 @dataclasses.dataclass
@@ -642,14 +670,15 @@ def _prep_dense_segment(topo: Topology, links_seg: LinkParams, seg, comp,
 def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                  ppm_u: np.ndarray, scenario: Scenario,
                  cfg: SimConfig = SimConfig(),
-                 engine: str = "segment-sum",
+                 engine: Optional[str] = None,
                  chunk_records: Optional[int] = None,
                  compiled: Optional[CompiledScenario] = None,
                  record_beta: Optional[bool] = None,
-                 record_watermarks: bool = False,
-                 auto_reframe=False,
-                 trace=False,
-                 interpret: Optional[bool] = None) -> ScenarioResult:
+                 record_watermarks: Optional[bool] = None,
+                 auto_reframe=None,
+                 trace=None,
+                 interpret: Optional[bool] = None,
+                 options=None, telemetry=None) -> ScenarioResult:
     """Run a dynamic-event scenario, chaining one engine across segments.
 
     Args:
@@ -684,24 +713,58 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
         available with or without a full ``record_beta`` record, which
         is how 10⁶-node sparse runs report peak excursions at all.
       auto_reframe: closed-loop buffer re-centering.  ``True`` (or a
-        :class:`repro.core.reframing.ReframePolicy`) makes the runner
-        inspect each chunk's β record — the in-kernel per-node net
-        occupancy on the dense lanes, the per-edge record's
-        destination fold on segment-sum — reconstruct the
-        graph-consistent per-edge occupancy estimate from it, compare
-        against the guard band ``depth/2 − margin``, and, when tripped,
-        splice an RTT-conserving graph-mode pointer rotation (computed
-        from the live threaded state) before the next chunk.  The rotation rewrites only traced
-        λeff inputs, so the same compiled engine continues across every
-        splice; each one is logged in ``ScenarioResult.reframes``.
-        On batched runs the trip decision and the rotation are PER
-        DRAW: a drifting draw reframes alone while its batchmates' λeff
-        stays untouched (their shift rows are zero).
-        Implies β recording on every lane (``record_beta=False`` is
-        rejected).  Trip decisions are made once per chunk, so pick
-        ``chunk_records`` (and the policy margin) such that one chunk of
-        occupancy slew cannot cross from the guard band to the buffer
-        wall.
+        :class:`repro.core.reframing.ReframePolicy`) closes the
+        reframing loop; when the guard trips, the runner splices an
+        RTT-conserving graph-mode pointer rotation (computed from the
+        live threaded state) and resumes.  The rotation rewrites only
+        traced λeff inputs, so the same compiled engine continues
+        across every splice; each one is logged in
+        ``ScenarioResult.reframes``.  On batched runs the trip decision
+        and the rotation are PER DRAW: a drifting draw reframes alone
+        while its batchmates' λeff stays untouched (their shift rows
+        are zero).  WHERE the guard runs differs by lane:
+
+        * kernel lanes (dense / sparse / per-step) — the guard runs
+          INSIDE the engine: every measure pass checks the per-node net
+          occupancy against the degree-scaled per-draw band
+          ``target ± (depth/2 − margin)`` and freezes the chunk at the
+          first tripping record (post-trip records are predicated
+          no-ops), so the splice lands ONE record period after the
+          crossing (``AppliedReframe.guard_latency == 1``) regardless
+          of ``chunk_records``, and the resumed partial chunk re-enters
+          the same executable via a traced stop cap (zero recompiles).
+          The β record is NOT required on these lanes — the guard reads
+          its own in-kernel measurement.
+        * segment-sum — the runner inspects each completed chunk's
+          per-edge record (folded by destination, then edge-estimated
+          through the Laplacian pseudo-inverse) and splices before the
+          next chunk; exposure is up to one chunk
+          (``guard_latency == chunk − crossing_offset``), so pick
+          ``chunk_records`` (and the policy margin) such that one chunk
+          of occupancy slew cannot cross from the guard band to the
+          buffer wall.  This lane records β internally for the trigger
+          even when the result omits it (only the legacy spelling
+          ``auto_reframe=... , record_beta=False`` is rejected as
+          contradictory).
+
+        Per-draw margins: with ``policy.margin=None`` each draw's
+        margin derives from its OWN gain and disturbance bound
+        (:func:`repro.core.envelopes.reframe_guard_margins`), so a
+        gain-sweep batch no longer shares one margin computed from the
+        stiffest draw.
+      options: :class:`repro.kernels.EngineOptions` — the typed home of
+        ``engine`` / ``interpret`` / ``chunk_records``.  Explicit
+        legacy kwargs win over the corresponding fields; ``interpret=``
+        warns (one release), the non-boolean two map silently.
+      telemetry: :class:`repro.telemetry.Telemetry` — the typed home of
+        ``record_beta`` / ``record_watermarks`` / ``trace`` /
+        ``auto_reframe`` (→ ``Telemetry.guard``); each legacy kwarg
+        emits a one-per-process :class:`DeprecationWarning` when
+        passed.  When neither ``telemetry`` nor ``record_beta`` is
+        given, β recording keeps its legacy default (segment-sum
+        follows ``cfg.record_beta``; kernel lanes stay ν-only, except
+        that a legacy ``auto_reframe=`` request still implies the β
+        record for back-compat).
       trace: flight recorder.  ``True`` attaches a fresh
         :class:`repro.telemetry.RunTrace`; an existing ``RunTrace``
         threads this run's events into it (a chaos campaign shares one
@@ -715,10 +778,27 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
       ScenarioResult with concatenated telemetry, threaded final state,
       and the per-segment logical-latency table.
     """
+    if auto_reframe and record_beta is False:
+        raise ValueError(
+            "auto_reframe inspects the β record; record_beta=False is "
+            "contradictory on this legacy spelling (the typed "
+            "telemetry=Telemetry(guard=...) runs the guard without "
+            "surfacing the record)")
+    opts = resolve_options(options, "run_scenario", engine=engine,
+                           interpret=interpret, chunk_records=chunk_records,
+                           default_engine="segment-sum")
+    beta_explicit = telemetry is not None or record_beta is not None
+    tel = resolve_telemetry(
+        telemetry, "run_scenario", beta=record_beta,
+        watermarks=record_watermarks,
+        trace=trace if trace else None,
+        guard=auto_reframe if auto_reframe else None)
+    engine = opts.engine
+    interpret = opts.interpret
     ppm_u = np.asarray(ppm_u, np.float32)
     single = ppm_u.ndim == 1
     comp = compiled or compile_scenario(scenario, topo, links, cfg)
-    chunk = chunk_records or comp.chunk_records
+    chunk = opts.chunk_records or comp.chunk_records
     for s in comp.segments:
         if chunk < 1 or s.records % chunk:
             raise ValueError(
@@ -758,37 +838,50 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             raise ValueError(
                 "quantize_beta / telemetry noise are segment-sum features")
 
-    # β recording: explicit flag wins; None keeps segment-sum on the
-    # cfg.record_beta default and the dense lanes on the ν-only fast path.
-    rb_seg = cfg.record_beta if record_beta is None else bool(record_beta)
-    rb_dense = False if record_beta is None else bool(record_beta)
-    rw = bool(record_watermarks)
-    tr = coerce_trace(trace, name="run_scenario")
+    # β recording: the typed request wins; with neither telemetry= nor
+    # record_beta= passed, segment-sum keeps the cfg.record_beta default
+    # and the kernel lanes their ν-only fast path.
+    rb_seg = tel.beta if beta_explicit else cfg.record_beta
+    rb_dense = tel.beta if beta_explicit else False
+    rw = tel.watermarks
+    tr = coerce_trace(tel.trace, name="run_scenario")
     cs0 = dict(compile_stats()) if tr else None
 
+    guard_on = bool(tel.guard)
     policy: Optional[ReframePolicy] = None
-    guard = 0.0
-    if auto_reframe:
-        policy = (auto_reframe if isinstance(auto_reframe, ReframePolicy)
+    guard_rows = None        # (B,) per-draw trip thresholds (frames/degree)
+    if guard_on:
+        policy = (tel.guard if isinstance(tel.guard, ReframePolicy)
                   else ReframePolicy())
-        if record_beta is False:
-            raise ValueError(
-                "auto_reframe inspects the β record; record_beta=False is "
-                "contradictory")
-        rb_seg = rb_dense = True   # the guard trigger needs the record
+        b_g = 1 if single else ppm_u.shape[0]
+        if not beta_explicit:
+            # Legacy auto_reframe= implied the β record; the in-kernel
+            # guard no longer needs it (and segment-sum records it
+            # internally for the host trigger either way), but keep the
+            # record in the RESULT by default so pre-redesign callers
+            # still see ScenarioResult.beta.
+            rb_seg = rb_dense = True
         if policy.margin is None:
-            kp_max = float(np.max(np.asarray(ctrl.kp)))
-            nu_bound = (float(np.abs(ppm_u).max())
-                        + max(float(np.abs(s.dppm).max())
-                              for s in comp.segments)) * 1e-6
+            # Per-draw margins: each draw's OWN gain and disturbance
+            # bound — one margin computed from the stiffest draw
+            # under-guarded the rest of a gain-sweep batch.
+            kp_rows = np.asarray(broadcast_gain(ctrl.kp, b_g), np.float64)
+            ppm_rows = np.broadcast_to(
+                np.abs(np.atleast_2d(ppm_u)).max(axis=1), (b_g,))
+            dppm_rows = np.zeros(b_g, np.float64)
+            for s in comp.segments:
+                d = np.abs(np.asarray(s.dppm, np.float64))
+                dppm_rows = np.maximum(
+                    dppm_rows, d.max(axis=1) if d.ndim == 2 else d.max())
             lat_max = max(float(np.asarray(s.latency_s).max())
                           for s in comp.segments) * cfg.omega_nom
-            margin = reframe_guard_margin(
-                topo, kp_max, cfg.dt, cfg.record_every, nu_bound, lat_max,
-                cfg.omega_nom)
+            margins = reframe_guard_margins(
+                topo, kp_rows, cfg.dt, cfg.record_every,
+                (ppm_rows + dppm_rows) * 1e-6, lat_max, cfg.omega_nom)
         else:
-            margin = policy.margin
-        guard = policy.guard(margin)
+            margins = np.full(b_g, float(policy.margin))
+        guard_rows = np.asarray(policy.guard(margins),
+                                np.float64).reshape(-1)
 
     rec_period = cfg.dt * cfg.record_every
     beta0_base = np.asarray(links.beta0, np.float64)
@@ -802,6 +895,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
     lam_rows, launches = [], 0
     reframes: List[AppliedReframe] = []
     guard_cache: dict = {}     # edge_w bytes -> (deg_w, Laplacian pinv)
+    gband = None               # padded (B_pad, 1) kernel-lane guard band
     rec_done, total = 0, comp.total_records
     eng_label, tile_j = engine, 0
     # All segments' dense adjacency stacks / sparse slot tables, built
@@ -871,19 +965,19 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             src_np, dst_np = np.asarray(topo.src), np.asarray(topo.dst)
 
             def edge_estimates(net_records):
-                """Per-draw max |β̂_e| over a chunk of (..., N) net rows.
+                """Per-draw per-record max |β̂_e| of (..., T, N) net rows.
 
-                Returns (B,) when the records carry a leading draw axis
-                (ndim 3: draw × record × node), else a length-1 array —
-                so the guard trips, and rotates, draws INDIVIDUALLY.
+                Returns (B_eff, T) — a leading draw axis (ndim 3: draw ×
+                record × node) is kept, a single run becomes B_eff=1 —
+                so the segment-sum guard trips, and rotates, draws
+                INDIVIDUALLY, and the crossing's record offset inside
+                the chunk prices ``AppliedReframe.guard_latency``.
                 """
                 dev = np.asarray(net_records, np.float64) \
                     - policy.target * deg_w
                 pot = dev @ lap_pinv.T
                 est = np.abs(pot[..., src_np] - pot[..., dst_np])
-                if est.ndim <= 2:
-                    return np.array([est.max()])
-                return est.max(axis=tuple(range(1, est.ndim)))
+                return np.atleast_2d(est.max(axis=-1))
 
         if sparse:
             # Sparse ELL lane: same once-per-segment prep / chunk-replay
@@ -903,55 +997,72 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             if psi_pad is None:
                 psi_pad, nu_pad = jnp.zeros_like(nu_u_j), nu_u_j
             dt_frames = float(cfg.omega_nom * cfg.dt)
-            chunks_in_seg = seg.records // chunk
-            for ci in range(chunks_in_seg):
+            if guard_on and gband is None:
+                gband = _guard_band_cols(b_pad, b, policy.target, guard_rows)
+            seg_done = 0
+            while seg_done < seg.records:
+                # Traced stop cap: a post-splice partial chunk keeps the
+                # static num_records and no-ops its tail — zero recompiles.
+                stop = min(chunk, seg.records - seg_done) - 1
                 with tr.span("chunk", engine="sparse", segment=si,
-                             launch=launches, records=int(chunk)):
-                    psi_pad, nu_pad, rec, brec, wm = _sparse_engine(
+                             launch=launches, records=int(stop + 1)):
+                    out = _sparse_engine(
                         psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j,
                         tables.nbr, latf_j, w_j, lamsum_j, dt_frames,
                         int(chunk), int(cfg.record_every), int(ti), interp,
-                        rb_dense, rw)
+                        rb_dense, rw, record_guard=guard_on,
+                        guard_lo=gband[0] if guard_on else None,
+                        guard_hi=gband[1] if guard_on else None,
+                        guard_stop=stop if guard_on else None)
+                    psi_pad, nu_pad = out.psi, out.nu
+                    trips = (np.asarray(out.guard_state)[:b, 0]
+                             if guard_on else None)
+                    tstar = int(trips.min()) if guard_on else chunk
+                    valid = min(tstar, stop) + 1
                     if rb_dense:
                         beta_chunks.append(
-                            np.asarray(brec)[:, :b, :n].transpose(1, 0, 2))
+                            np.asarray(out.beta)[:valid, :b, :n]
+                            .transpose(1, 0, 2))
                     freq_chunks.append(
-                        np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                        np.asarray(out.freq)[:valid, :b, :n]
+                        .transpose(1, 0, 2) * 1e6)
                 if rw:
-                    wm_c = _host_watermarks(wm, chunk, b, n)
+                    wm_c = _host_watermarks(out.watermarks, valid, b, n)
                     wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
                 launches += 1
-                rec_done += chunk
-                if policy is not None and rec_done < total:
-                    # Same per-draw guard trip + rotation as the dense
-                    # lanes (the in-kernel record is the identical
-                    # per-node net occupancy quantity).
-                    tripped = edge_estimates(beta_chunks[-1]) >= guard
+                seg_done += valid
+                rec_done += valid
+                tripped_now = guard_on and tstar <= stop
+                if guard_on:
                     tr.event("guard_eval", record=int(rec_done),
-                             guard=float(guard),
-                             tripped=int(np.count_nonzero(tripped)))
-                    if tripped.any():
-                        psi_now, nu_now = live_state()
-                        lam_eff, shift = _rotation_shifts(
-                            topo, lam_eff, psi_now, nu_now, lat_frames,
-                            seg.edge_w, "graph", policy.target,
-                            lap_pinv=lap_pinv, rows_mask=tripped)
-                        reframes.append(AppliedReframe(
-                            record=rec_done, time=rec_done * rec_period,
-                            shift=shift, auto=True))
-                        tr.event("reframe", record=int(rec_done), auto=True,
-                                 segment=si,
-                                 max_shift=int(np.abs(shift).max()))
-                        if ci + 1 < chunks_in_seg:
-                            links_seg = LinkParams(
-                                latency_s=seg.latency_s,
-                                beta0=np.array(lam_eff, copy=True))
-                            (latf_j, w_j, lamsum_j, mask_j, nu_u_j, kp_j,
-                             boff_j, ti, b_pad, n_pad) = \
-                                _prep_sparse_segment(
-                                    topo, links_seg, seg, ctrl,
-                                    np.atleast_2d(ppm_seg), cfg, tables,
-                                    si, interp)
+                             guard=float(guard_rows.min()),
+                             tripped=(int(np.count_nonzero(trips == tstar))
+                                      if tripped_now else 0))
+                if tripped_now and rec_done < total:
+                    # Same per-draw trip + rotation as the dense lanes
+                    # (the in-kernel measurement is the identical
+                    # per-node net occupancy quantity).
+                    psi_now, nu_now = live_state()
+                    lam_eff, shift = _rotation_shifts(
+                        topo, lam_eff, psi_now, nu_now, lat_frames,
+                        seg.edge_w, "graph", policy.target,
+                        lap_pinv=lap_pinv, rows_mask=(trips == tstar))
+                    reframes.append(AppliedReframe(
+                        record=rec_done, time=rec_done * rec_period,
+                        shift=shift, auto=True, guard_latency=1))
+                    tr.event("reframe", record=int(rec_done), auto=True,
+                             segment=si,
+                             max_shift=int(np.abs(shift).max()))
+                    if seg_done < seg.records:
+                        links_seg = LinkParams(
+                            latency_s=seg.latency_s,
+                            beta0=np.array(lam_eff, copy=True))
+                        (latf_j, w_j, lamsum_j, mask_j, nu_u_j, kp_j,
+                         boff_j, ti, b_pad, n_pad) = \
+                            _prep_sparse_segment(
+                                topo, links_seg, seg, ctrl,
+                                np.atleast_2d(ppm_seg), cfg, tables,
+                                si, interp)
             continue
 
         if dense:
@@ -976,89 +1087,139 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             dt_frames = float(cfg.omega_nom * cfg.dt)
             kp_np = np.asarray(kp_j)
             boff_np = np.asarray(boff_j)
-            chunks_in_seg = seg.records // chunk
-            for ci in range(chunks_in_seg):
+            if guard_on and gband is None:
+                gband = _guard_band_cols(b_pad, b, policy.target, guard_rows)
+            seg_done = 0
+            while seg_done < seg.records:
+                # Traced stop cap: a post-splice partial chunk keeps the
+                # static num_records and no-ops its tail — zero recompiles.
+                stop = min(chunk, seg.records - seg_done) - 1
                 with tr.span("chunk", engine=chosen, segment=si,
-                             launch=launches, records=int(chunk)):
+                             launch=launches, records=int(stop + 1)):
                     if chosen == "per-step":
-                        rows = [_perstep_engine(
-                            psi_pad[bi], nu_pad[bi], nu_u_j[bi],
-                            mask_j[bi] if mask_j.ndim == 2 else mask_j, a,
-                            lam_list[bi], lat_j[bi], float(kp_np[bi]),
-                            float(boff_np[bi]), dt_frames, int(chunk),
-                            int(cfg.record_every), interp, False, rb_dense,
-                            rw)
-                            for bi in range(b)]
+                        psi_prev, nu_prev = psi_pad, nu_pad
+
+                        def launch_ps(bi, stop_i):
+                            return _perstep_engine(
+                                psi_prev[bi], nu_prev[bi], nu_u_j[bi],
+                                mask_j[bi] if mask_j.ndim == 2 else mask_j,
+                                a, lam_list[bi], lat_j[bi],
+                                float(kp_np[bi]), float(boff_np[bi]),
+                                dt_frames, int(chunk),
+                                int(cfg.record_every), interp, False,
+                                rb_dense, rw, record_guard=guard_on,
+                                guard_lo=(float(policy.target
+                                                - guard_rows[bi])
+                                          if guard_on else None),
+                                guard_hi=(float(policy.target
+                                                + guard_rows[bi])
+                                          if guard_on else None),
+                                guard_stop=stop_i if guard_on else None)
+
+                        rows = [launch_ps(bi, stop) for bi in range(b)]
+                        trips = (np.array([int(r.guard_state)
+                                           for r in rows])
+                                 if guard_on else None)
+                        tstar = int(trips.min()) if guard_on else chunk
+                        if guard_on and tstar <= stop \
+                                and bool((trips > tstar).any()):
+                            # This lane launches draws separately, so the
+                            # Pallas lanes' global batch freeze needs a
+                            # host resync: re-run the draws that ran past
+                            # the earliest trip with the stop cap AT that
+                            # record — the deterministic prefix lands
+                            # their state exactly there, through the same
+                            # executable (the cap is traced).
+                            for bi in np.flatnonzero(trips > tstar):
+                                rows[int(bi)] = launch_ps(int(bi),
+                                                          int(tstar))
+                        valid = min(tstar, stop) + 1
                         psi_pad = psi_pad.at[:b].set(
-                            jnp.stack([r[0] for r in rows]))
+                            jnp.stack([r.psi for r in rows]))
                         nu_pad = nu_pad.at[:b].set(
-                            jnp.stack([r[1] for r in rows]))
-                        rec = jnp.stack([r[2] for r in rows], axis=1)
+                            jnp.stack([r.nu for r in rows]))
+                        freq_chunks.append(np.stack(
+                            [np.asarray(r.freq)[:valid, :n]
+                             for r in rows]) * 1e6)
                         if rb_dense:
                             beta_chunks.append(np.stack(
-                                [np.asarray(r[3])[:, :n] for r in rows]))
+                                [np.asarray(r.beta)[:valid, :n]
+                                 for r in rows]))
                         if rw:
                             wm_c = Watermarks.stack(
-                                [_host_watermarks(r[4], chunk, None, n)
-                                 for r in rows])
+                                [_host_watermarks(r.watermarks, valid,
+                                                  None, n) for r in rows])
                     else:
-                        psi_pad, nu_pad, rec, brec, wm = _fused_engine(
+                        out = _fused_engine(
                             psi_pad, nu_pad, nu_u_j, kp_j, boff_j, mask_j, a,
                             lam_list[0], lamsum_j, lat_j, dt_frames,
                             int(chunk), int(cfg.record_every), chosen,
-                            int(tj), interp, False, rb_dense, rw)
+                            int(tj), interp, False, rb_dense, rw,
+                            record_guard=guard_on,
+                            guard_lo=gband[0] if guard_on else None,
+                            guard_hi=gband[1] if guard_on else None,
+                            guard_stop=stop if guard_on else None)
+                        psi_pad, nu_pad = out.psi, out.nu
+                        trips = (np.asarray(out.guard_state)[:b, 0]
+                                 if guard_on else None)
+                        tstar = int(trips.min()) if guard_on else chunk
+                        valid = min(tstar, stop) + 1
                         if rb_dense:
                             beta_chunks.append(
-                                np.asarray(brec)[:, :b, :n]
+                                np.asarray(out.beta)[:valid, :b, :n]
                                 .transpose(1, 0, 2))
                         if rw:
-                            wm_c = _host_watermarks(wm, chunk, b, n)
-                    freq_chunks.append(
-                        np.asarray(rec)[:, :b, :n].transpose(1, 0, 2) * 1e6)
+                            wm_c = _host_watermarks(out.watermarks, valid,
+                                                    b, n)
+                        freq_chunks.append(
+                            np.asarray(out.freq)[:valid, :b, :n]
+                            .transpose(1, 0, 2) * 1e6)
                 if rw:
                     wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
                 launches += 1
-                rec_done += chunk
-                if policy is not None and rec_done < total:
-                    # Guard-band trip: the chunk's in-kernel β record,
-                    # edge-estimated PER DRAW, against depth/2 − margin.
-                    # Only tripping draws rotate — a drifting draw must
-                    # not perturb its well-behaved batchmates.
-                    tripped = edge_estimates(beta_chunks[-1]) >= guard
+                seg_done += valid
+                rec_done += valid
+                tripped_now = guard_on and tstar <= stop
+                if guard_on:
                     tr.event("guard_eval", record=int(rec_done),
-                             guard=float(guard),
-                             tripped=int(np.count_nonzero(tripped)))
-                    if tripped.any():
-                        psi_now, nu_now = live_state()
-                        lam_eff, shift = _rotation_shifts(
-                            topo, lam_eff, psi_now, nu_now, lat_frames,
-                            seg.edge_w, "graph", policy.target,
-                            lap_pinv=lap_pinv, rows_mask=tripped)
-                        reframes.append(AppliedReframe(
-                            record=rec_done, time=rec_done * rec_period,
-                            shift=shift, auto=True))
-                        tr.event("reframe", record=int(rec_done), auto=True,
-                                 segment=si,
-                                 max_shift=int(np.abs(shift).max()))
-                        # The rotation rewrites only traced inputs (the
-                        # lamsum fold / per-step λeff tensors), so the
-                        # re-prepped segment replays the SAME compiled
-                        # engine — zero recompiles across splices.  On a
-                        # segment's final chunk the next segment's own
-                        # prep picks the shifted lam_eff up, so skip the
-                        # re-prep there (its outputs would be discarded).
-                        if ci + 1 < chunks_in_seg:
-                            links_seg = LinkParams(
-                                latency_s=seg.latency_s,
-                                beta0=np.array(lam_eff, copy=True))
-                            (a, lam_list, lamsum_j, lat_j, mask_j, nu_u_j,
-                             kp_j, boff_j, chosen, tj, b_pad, n_pad) = \
-                                _prep_dense_segment(
-                                    topo, links_seg, seg, comp, ctrl,
-                                    np.atleast_2d(ppm_seg), cfg, engine,
-                                    stacks, si)
-                            kp_np = np.asarray(kp_j)
-                            boff_np = np.asarray(boff_j)
+                             guard=float(guard_rows.min()),
+                             tripped=(int(np.count_nonzero(trips == tstar))
+                                      if tripped_now else 0))
+                if tripped_now and rec_done < total:
+                    # In-kernel guard trip: only the draws that tripped AT
+                    # the freeze record rotate — a drifting draw must not
+                    # perturb its well-behaved batchmates (they keep λeff
+                    # bit-exactly and log a zero shift row).
+                    psi_now, nu_now = live_state()
+                    lam_eff, shift = _rotation_shifts(
+                        topo, lam_eff, psi_now, nu_now, lat_frames,
+                        seg.edge_w, "graph", policy.target,
+                        lap_pinv=lap_pinv, rows_mask=(trips == tstar))
+                    reframes.append(AppliedReframe(
+                        record=rec_done, time=rec_done * rec_period,
+                        shift=shift, auto=True, guard_latency=1))
+                    tr.event("reframe", record=int(rec_done), auto=True,
+                             segment=si,
+                             max_shift=int(np.abs(shift).max()))
+                    # The rotation rewrites only traced inputs (the
+                    # lamsum fold / per-step λeff tensors), so the
+                    # re-prepped segment replays the SAME compiled
+                    # engine — zero recompiles across splices.  On a
+                    # segment's final record the next segment's own
+                    # prep picks the shifted lam_eff up, so skip the
+                    # re-prep there (its outputs would be discarded).
+                    if seg_done < seg.records:
+                        links_seg = LinkParams(
+                            latency_s=seg.latency_s,
+                            beta0=np.array(lam_eff, copy=True))
+                        (a, lam_list, lamsum_j, lat_j, mask_j, nu_u_j,
+                         kp_j, boff_j, chosen, tj, b_pad, n_pad) = \
+                            _prep_dense_segment(
+                                topo, links_seg, seg, comp, ctrl,
+                                np.atleast_2d(ppm_seg), cfg, engine,
+                                stacks, si)
+                        kp_np = np.asarray(kp_j)
+                        boff_np = np.asarray(boff_j)
             continue
 
         tr.event("engine_dispatch", segment=si, engine="segment-sum",
@@ -1072,7 +1233,7 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
             cfg_chunk = dataclasses.replace(
                 cfg, steps=chunk * cfg.record_every,
                 seed=cfg.seed + 104729 * launches,
-                record_beta=rb_seg or rw)
+                record_beta=rb_seg or rw or guard_on)
             with tr.span("chunk", engine="segment-sum", segment=si,
                          launch=launches, records=int(chunk)):
                 if single:
@@ -1098,22 +1259,28 @@ def run_scenario(topo: Topology, links: LinkParams, ctrl: ControllerConfig,
                                               res.freq_ppm)
                 wm_acc = wm_c if wm_acc is None else wm_acc.merge(wm_c)
             if policy is not None and rec_done < total:
-                # Same trigger quantity as the dense lanes: the per-edge
-                # record folded by destination, then edge-estimated per
-                # draw — only tripping draws rotate.
+                # Host-side trigger: the per-edge record folded by
+                # destination, then edge-estimated per draw AND per
+                # record — only tripping draws rotate, and the earliest
+                # crossing's offset inside the chunk prices the exposure
+                # (``guard_latency = chunk − offset``; the kernel lanes'
+                # in-kernel guard holds this at 1).
                 net = node_net_occupancy(topo, res.beta, seg.edge_w)
-                tripped = edge_estimates(net) >= guard
+                hit = edge_estimates(net) >= guard_rows[:, None]
+                tripped = hit.any(axis=1)
                 tr.event("guard_eval", record=int(rec_done),
-                         guard=float(guard),
+                         guard=float(guard_rows.min()),
                          tripped=int(np.count_nonzero(tripped)))
                 if tripped.any():
+                    first = int(np.flatnonzero(hit.any(axis=0))[0])
                     lam_eff, shift = _rotation_shifts(
                         topo, lam_eff, res.psi, res.nu, lat_frames,
                         seg.edge_w, "graph", policy.target,
                         lap_pinv=lap_pinv, rows_mask=tripped)
                     reframes.append(AppliedReframe(
                         record=rec_done, time=rec_done * rec_period,
-                        shift=shift, auto=True))
+                        shift=shift, auto=True,
+                        guard_latency=int(chunk - first)))
                     tr.event("reframe", record=int(rec_done), auto=True,
                              segment=si,
                              max_shift=int(np.abs(shift).max()))

@@ -11,13 +11,20 @@ Two halves (see the module docstrings):
   with JSONL export and ``scripts/trace_report.py`` rendering.
 * :mod:`repro.telemetry.compile_stats` — jit-cache introspection
   (promoted from the test harness) backing the zero-recompile events.
+* :mod:`repro.telemetry.api` — :class:`Telemetry`, the typed
+  what-to-observe request object that replaced the boolean kwarg sprawl
+  (``record_beta=`` / ``record_watermarks=`` / ``trace=`` /
+  ``auto_reframe=`` remain as one-release deprecation shims).
 """
+from repro.telemetry.api import Telemetry, resolve_telemetry
 from repro.telemetry.compile_stats import (compile_stats, engine_cache_sizes,
                                            no_new_compiles)
 from repro.telemetry.trace import NULL_TRACE, RunTrace, TraceEvent, coerce_trace
 from repro.telemetry.watermarks import Watermarks
 
 __all__ = [
+    "Telemetry",
+    "resolve_telemetry",
     "Watermarks",
     "RunTrace",
     "TraceEvent",

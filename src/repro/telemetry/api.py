@@ -1,0 +1,78 @@
+"""The typed telemetry request object: what a run should observe.
+
+``Telemetry`` replaces the boolean kwarg sprawl (``record_beta=``,
+``record_watermarks=``, ``trace=``, ``auto_reframe=``) that had grown on
+every engine entry point.  One frozen object names the four observation
+axes; the engines and the scenario runner accept ``telemetry=`` and keep
+the old kwargs as one-release deprecation shims (see
+:func:`resolve_telemetry` and :mod:`repro._compat`).
+
+This module must stay importable without the kernel stack (the same
+constraint as :mod:`repro.telemetry.compile_stats`), so ``trace`` and
+``guard`` are duck-typed: ``trace`` is ``False`` / ``True`` / a
+:class:`repro.telemetry.RunTrace`, ``guard`` is ``False`` / ``True`` / a
+:class:`repro.core.reframing.ReframePolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro._compat import deprecated_kwarg
+
+__all__ = ["Telemetry", "resolve_telemetry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """What one engine run should record.
+
+    Attributes:
+      beta: record the (R, B, N) per-node net-occupancy stream.
+      watermarks: carry the O(N) in-kernel excursion watermarks.
+      trace: thread a flight recorder (``True`` builds one, or pass a
+        :class:`~repro.telemetry.RunTrace` to append to).
+      guard: closed-loop buffer re-centering — ``True`` for the default
+        :class:`~repro.core.reframing.ReframePolicy`, or a policy
+        instance.  On the Pallas lanes the guard decision runs INSIDE
+        the kernel (PR 10): the measure pass compares per-node |β|
+        against the lowered guard band and freezes the chunk at the
+        trip record, so exposure is one record period, not one chunk.
+    """
+
+    beta: bool = False
+    watermarks: bool = False
+    trace: Any = False
+    guard: Any = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "beta", bool(self.beta))
+        object.__setattr__(self, "watermarks", bool(self.watermarks))
+
+
+def resolve_telemetry(telemetry: Optional[Telemetry], caller: str, *,
+                      beta=None, watermarks=None, trace=None,
+                      guard=None) -> Telemetry:
+    """Merge legacy boolean kwargs into a :class:`Telemetry`.
+
+    Each legacy value is ``None`` when the caller did not pass it; a
+    non-``None`` value wins over the corresponding ``telemetry`` field
+    and emits the one-per-process :class:`DeprecationWarning`.  ``beta``
+    may be the literal ``None``-means-auto sentinel some callers expose;
+    those callers pass it through only when explicitly set.
+    """
+    base = telemetry if telemetry is not None else Telemetry()
+    if not isinstance(base, Telemetry):
+        raise TypeError(
+            f"{caller}: telemetry= must be a repro.telemetry.Telemetry, "
+            f"got {type(telemetry).__name__}")
+    updates = {}
+    for field, val, old in (("beta", beta, "record_beta"),
+                            ("watermarks", watermarks, "record_watermarks"),
+                            ("trace", trace, "trace"),
+                            ("guard", guard, "auto_reframe")):
+        if val is None:
+            continue
+        deprecated_kwarg(f"{old}=", f"telemetry=Telemetry({field}=...)")
+        updates[field] = val
+    return dataclasses.replace(base, **updates) if updates else base

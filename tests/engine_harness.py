@@ -4,8 +4,11 @@ Five lanes now have to agree — segment-sum, fused, tiled, per-step, and
 the sparse ELL engine — and every PR that adds a lane (or tunes one)
 re-proves the same contracts: 1e-6-ppm frequency parity at every record
 point, β-telemetry parity in the converged bounded-occupancy regime,
-zero recompiles across scenario segments, and per-draw chaos batches
-matching their single-draw replays.  This module is the single home for
+zero recompiles across scenario segments, per-draw chaos batches
+matching their single-draw replays, and — since the in-kernel reframing
+guard — identical trip records across the kernel lanes with
+bit-identical outputs when the guard never trips (``guard_case`` /
+``run_guarded``).  This module is the single home for
 those contracts, factored out of the per-PR ad-hoc matrices that
 ``test_kernels_fused.py`` / ``test_beta_telemetry.py`` / ``test_chaos.py``
 grew: one topology matrix, one tolerance policy, one segment-sum
@@ -181,6 +184,46 @@ def assert_beta_parity(beta, ref, atol: float = BETA_ATOL_FRAMES):
 #
 # engine_cache_sizes / no_new_compiles live in repro.telemetry.compile_stats
 # now (imported above).
+
+
+# -------------------------------------------------------- guard-on lane
+#
+# The in-kernel reframing guard is part of the cross-engine contract:
+# all four kernel lanes must trip at the SAME record index (the guard is
+# the same degree-scaled band over the same in-kernel β measurement) and
+# splice identical rotations, and the guard-variant executables must be
+# observation-free — bit-identical outputs when the band is never
+# crossed.
+
+def guard_case(n: int = 8, steps: int = 480, rec: int = 12,
+               kp: float = 2e-8, rate: float = 40.0,
+               depth: int = 16, margin: float = 4.0):
+    """A DriftRamp slew that crosses a ``depth``-deep guard band on every
+    kernel lane — the guard-on parity case."""
+    from repro.core import ReframePolicy
+    from repro.scenarios import DriftRamp, Scenario
+    topo = fully_connected(n)
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ControllerConfig(kp=kp)
+    cfg = SimConfig(dt=1e-3, steps=steps, record_every=rec)
+    ppm = zero_mean_ppm(n, 0.5)
+    sc = Scenario(events=(DriftRamp(t=0.06, t_end=0.3, nodes=(0, 1),
+                                    rate_ppm_per_s=rate),))
+    pol = ReframePolicy(depth=depth, margin=margin)
+    return topo, links, ctrl, ppm, sc, cfg, pol
+
+
+def run_guarded(topo, links, ctrl, ppm, sc, cfg, engine, pol,
+                record_beta: bool = True):
+    """One scenario lane through the typed API, guard on (``pol`` may be
+    None for the guard-off comparison run of the same lane)."""
+    from repro.kernels import EngineOptions
+    from repro.scenarios import run_scenario
+    from repro.telemetry import Telemetry
+    return run_scenario(topo, links, ctrl, ppm, sc, cfg,
+                        options=EngineOptions(engine=engine),
+                        telemetry=Telemetry(beta=record_beta,
+                                            guard=pol if pol else False))
 
 
 # ------------------------------------------- property-test graph builders

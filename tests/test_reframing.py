@@ -32,7 +32,7 @@ from repro.core import (ControllerConfig, ReframePolicy, SimConfig,
                         fully_connected, make_links, reframe, reframe_net,
                         reframe_state, ring, simulate, torus3d)
 from repro.core import frame_level as fl
-from repro.core.envelopes import reframe_guard_margin
+from repro.core.envelopes import reframe_guard_margin, reframe_guard_margins
 from repro.core.frame_model import EB_INIT, OMEGA_NOM
 from repro.core.reframing import (check_rotation_invariant, graph_shifts,
                                   node_net_occupancy, potential_residual)
@@ -41,6 +41,7 @@ from repro.core.frame_model import _jitted_run
 from repro.kernels.ops import _fused_engine, _perstep_engine
 from repro.scenarios import (DriftRamp, FreqStep, LatencyStep, Reframe,
                              Scenario, edges_between, run_scenario)
+from repro.telemetry import Telemetry
 
 ENGINES = ["fused", "tiled", "per-step"]
 
@@ -287,50 +288,70 @@ def _torus_case():
     return topo, links, ctrl, ppm, sc, cfg, pol, 1e-3
 
 
+def _late_shift_sum(res, topo):
+    """Rotations spliced after the final segment's start (strict: a splice
+    exactly on the boundary is already in the lam row)."""
+    late = np.zeros(topo.num_edges, np.int64)
+    for r in res.reframes:
+        if r.record > res.segment_records[-1]:
+            late = late + np.asarray(r.shift, np.int64)
+    return late
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("case", [_fc8_case, _torus_case],
                          ids=["fc8", "torus3d8"])
 def test_auto_reframe_long_horizon_parity_matrix(case):
     """Acceptance: the auto-reframed DriftRamp+LatencyStep scenario stays
-    inside the buffer on all three Pallas lanes, with splice decisions and
-    shifts IDENTICAL to segment-sum and trajectories matching to the
-    engines' float32 parity floor (the same scenario run with NO
-    reframing diverges comparably — the rotation costs no parity)."""
+    inside the buffer on every lane.  The kernel lanes share ONE
+    in-kernel trip contract — splice records and shifts IDENTICAL to the
+    fused reference, trajectories matching to the engines' float32
+    parity floor, ``guard_latency == 1`` on every splice — while the
+    host-inspected segment-sum lane (per-edge Laplacian-estimate
+    trigger, exposure up to one chunk) is checked standalone for the
+    same survival and RTT-conservation properties."""
     topo, links, ctrl, ppm, sc, cfg, pol, tol = case()
     hw_half = 32 / 2    # the hardware buffer: 32 deep, 0 = half-full
-    plain = run_scenario(topo, links, ctrl, ppm, sc, cfg, record_beta=True)
-    ref = run_scenario(topo, links, ctrl, ppm, sc, cfg, auto_reframe=pol)
-    # Without reframing the per-edge occupancy leaves the 32-deep buffer...
-    assert np.abs(plain.beta).max() > hw_half
-    # ...with it, every recorded per-edge occupancy stays inside.
-    assert np.abs(ref.beta).max() < hw_half
-    assert len(ref.reframes) >= 3
-    # Rotations conserve every RTT: reverse-pair shifts cancel exactly.
     rev = topo.reverse_edge_index()
+    plain = run_scenario(topo, links, ctrl, ppm, sc, cfg,
+                         telemetry=Telemetry(beta=True))
+    # Without reframing the per-edge occupancy leaves the 32-deep buffer.
+    assert np.abs(plain.beta).max() > hw_half
+
+    # segment-sum, standalone: survival + RTT conservation + λ books.
+    seg = run_scenario(topo, links, ctrl, ppm, sc, cfg,
+                       telemetry=Telemetry(beta=True, guard=pol))
+    assert np.abs(seg.beta).max() < hw_half
+    assert len(seg.reframes) >= 3
+    total = seg.total_reframe_shift
+    np.testing.assert_array_equal(total + total[rev], 0)
+    np.testing.assert_array_equal(seg.lam_final,
+                                  seg.lam[-1] + _late_shift_sum(seg, topo))
+
+    # Kernel lanes: fused is the reference for the in-kernel contract.
+    ref = run_scenario(topo, links, ctrl, ppm, sc, cfg, engine="fused",
+                       telemetry=Telemetry(beta=True, guard=pol))
+    deg = np.zeros(topo.num_nodes)
+    np.add.at(deg, np.asarray(topo.dst), 1.0)
+    assert len(ref.reframes) >= 3
+    assert all(r.guard_latency == 1 for r in ref.reframes)
+    assert np.abs(ref.beta / deg).max() < hw_half
     total = ref.total_reframe_shift
     np.testing.assert_array_equal(total + total[rev], 0)
-    # lam rows are segment-START snapshots; lam_final reconciles them with
-    # the rotations spliced during the final segment.
-    late = np.zeros(topo.num_edges, np.int64)
-    for r in ref.reframes:
-        # strict: a splice exactly on the boundary (applied at the end of
-        # the previous segment's last chunk) is already in the lam row
-        if r.record > ref.segment_records[-1]:
-            late = late + np.asarray(r.shift, np.int64)
-    np.testing.assert_array_equal(ref.lam_final, ref.lam[-1] + late)
-    for eng in ENGINES:
+    np.testing.assert_array_equal(ref.lam_final,
+                                  ref.lam[-1] + _late_shift_sum(ref, topo))
+    for eng in ["tiled", "per-step"]:
         res = run_scenario(topo, links, ctrl, ppm, sc, cfg, engine=eng,
-                           auto_reframe=pol)
+                           telemetry=Telemetry(beta=True, guard=pol))
         assert res.engine == eng
         np.testing.assert_allclose(res.freq_ppm, ref.freq_ppm, rtol=0,
                                    atol=tol)
         assert len(res.reframes) == len(ref.reframes)
         for a, b in zip(ref.reframes, res.reframes):
             assert a.record == b.record
+            assert b.guard_latency == 1
             np.testing.assert_array_equal(a.shift, b.shift)
-        # The dense lanes' in-kernel record agrees it stayed inside.
-        deg = np.zeros(topo.num_nodes)
-        np.add.at(deg, np.asarray(topo.dst), 1.0)
+        # The in-kernel record agrees each lane stayed inside.
         assert np.abs(res.beta / deg).max() < hw_half
 
 
@@ -423,8 +444,10 @@ def test_auto_reframe_validation():
 
 
 def test_auto_reframe_ensemble_per_draw_shifts():
-    """Batched runs rotate per draw: shifts are (B, E), decisions match
-    the fused lane, and each draw's RTTs are conserved."""
+    """Batched runs rotate per draw: shifts are (B, E), the kernel lanes
+    share one in-kernel trip decision, and each draw's RTTs are
+    conserved; segment-sum's host-side trigger is checked standalone for
+    the same per-draw shape and conservation properties."""
     topo = fully_connected(8)
     links = make_links(topo, cable_m=2.0)
     ctrl = ControllerConfig(kp=2e-8)
@@ -435,15 +458,123 @@ def test_auto_reframe_ensemble_per_draw_shifts():
     sc = Scenario(events=(DriftRamp(t=0.06, t_end=0.18, nodes=(0, 1),
                                     rate_ppm_per_s=20.0),))
     pol = ReframePolicy(depth=16, margin=4.0)
-    ref = run_scenario(topo, links, ctrl, ppm_b, sc, cfg, auto_reframe=pol)
-    fus = run_scenario(topo, links, ctrl, ppm_b, sc, cfg, engine="fused",
-                       auto_reframe=pol)
-    assert len(ref.reframes) >= 1
-    assert ref.reframes[0].shift.shape == (4, topo.num_edges)
-    assert len(fus.reframes) == len(ref.reframes)
-    for a, b in zip(ref.reframes, fus.reframes):
-        np.testing.assert_array_equal(a.shift, b.shift)
     rev = topo.reverse_edge_index()
-    total = ref.total_reframe_shift
+    fus = run_scenario(topo, links, ctrl, ppm_b, sc, cfg, engine="fused",
+                       telemetry=Telemetry(guard=pol))
+    til = run_scenario(topo, links, ctrl, ppm_b, sc, cfg, engine="tiled",
+                       telemetry=Telemetry(guard=pol))
+    assert len(fus.reframes) >= 1
+    assert fus.reframes[0].shift.shape == (4, topo.num_edges)
+    assert len(til.reframes) == len(fus.reframes)
+    for a, b in zip(fus.reframes, til.reframes):
+        assert a.record == b.record
+        assert a.guard_latency == b.guard_latency == 1
+        np.testing.assert_array_equal(a.shift, b.shift)
+    total = fus.total_reframe_shift
     np.testing.assert_array_equal(total + total[..., rev], 0)
-    np.testing.assert_allclose(fus.freq_ppm, ref.freq_ppm, rtol=0, atol=1e-5)
+    np.testing.assert_allclose(til.freq_ppm, fus.freq_ppm, rtol=0,
+                               atol=1e-5)
+    seg = run_scenario(topo, links, ctrl, ppm_b, sc, cfg,
+                       telemetry=Telemetry(guard=pol))
+    assert len(seg.reframes) >= 1
+    assert seg.reframes[0].shift.shape == (4, topo.num_edges)
+    assert all(r.guard_latency >= 1 for r in seg.reframes)
+    total = seg.total_reframe_shift
+    np.testing.assert_array_equal(total + total[..., rev], 0)
+
+
+def test_guard_lane_kernel_parity_matrix():
+    """Harness guard-on lane: the in-kernel trip record index, the
+    spliced shifts, and the one-record guard latency are IDENTICAL
+    across all four kernel engines (same degree-scaled band over the
+    same in-kernel β measurement)."""
+    from engine_harness import KERNEL_ENGINES, guard_case, run_guarded
+    topo, links, ctrl, ppm, sc, cfg, pol = guard_case()
+    ref = None
+    for eng in KERNEL_ENGINES:
+        res = run_guarded(topo, links, ctrl, ppm, sc, cfg, eng, pol)
+        assert len(res.reframes) >= 1, eng
+        assert all(r.guard_latency == 1 for r in res.reframes), eng
+        recs = [(r.record, np.asarray(r.shift).tolist())
+                for r in res.reframes]
+        if ref is None:
+            ref = recs
+        else:
+            assert recs == ref, f"{eng} trip decisions diverge from fused"
+
+
+def test_guard_lane_never_trips_bit_identical():
+    """Harness guard-on lane: the guard-variant executables are
+    observation-free — when the band is never crossed, every kernel
+    lane's trajectory is BIT-identical to its guard-off run and no
+    splice is logged."""
+    from engine_harness import KERNEL_ENGINES, run_guarded
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    ctrl = ControllerConfig(kp=2e-7)
+    cfg = SimConfig(dt=1e-3, steps=240, record_every=12)
+    sc = Scenario(events=())
+    ppm = _zero_mean_ppm(8, 0.5)
+    pol = ReframePolicy(depth=64, margin=1.0)   # band far outside reach
+    for eng in KERNEL_ENGINES:
+        off = run_guarded(topo, links, ctrl, ppm, sc, cfg, eng, None)
+        on = run_guarded(topo, links, ctrl, ppm, sc, cfg, eng, pol)
+        assert on.reframes == []
+        np.testing.assert_array_equal(on.freq_ppm, off.freq_ppm, err_msg=eng)
+        np.testing.assert_array_equal(on.beta, off.beta, err_msg=eng)
+        np.testing.assert_array_equal(on.psi, off.psi, err_msg=eng)
+        np.testing.assert_array_equal(on.nu, off.nu, err_msg=eng)
+
+
+@pytest.mark.slow
+def test_guard_lane_spliced_resume_no_new_compiles():
+    """Harness guard-on lane: a warm re-run of a guard-tripping scenario
+    adds ZERO compile entries on every kernel lane — the in-kernel trip,
+    the partial-chunk resume (traced stop cap), and the λeff rotation
+    all reuse one executable per lane."""
+    from engine_harness import (KERNEL_ENGINES, guard_case, no_new_compiles,
+                                run_guarded)
+    topo, links, ctrl, ppm, sc, cfg, pol = guard_case()
+    for eng in KERNEL_ENGINES:
+        run_guarded(topo, links, ctrl, ppm, sc, cfg, eng, pol)    # warm
+        with no_new_compiles():
+            res = run_guarded(topo, links, ctrl, ppm, sc, cfg, eng, pol)
+        assert len(res.reframes) >= 1, eng
+
+
+def test_auto_reframe_per_draw_guard_margins():
+    """Satellite regression (two-draw two-gain): with ``margin=None``
+    each draw's default margin derives from its OWN gain and disturbance
+    bound via :func:`reframe_guard_margins` — the pre-redesign runner
+    computed ONE margin from the batch-max gain and batch-max
+    disturbance, over-guarding quiet draws.  The batched helper must
+    match the scalar one element-wise and actually differ across draws
+    whose bounds differ; the runner must thread per-draw gains AND
+    per-draw disturbance magnitudes through the guard end to end."""
+    topo = fully_connected(8)
+    links = make_links(topo, cable_m=2.0)
+    cfg = SimConfig(dt=1e-3, steps=240, record_every=12)
+    lat_big = 2000.0    # frames — enough ν·ω·l coupling to leave the
+    #                     1-frame floor and expose the per-draw term
+    m = reframe_guard_margins(topo, [2e-8, 2e-7], cfg.dt, cfg.record_every,
+                              [5e-5, 2e-4], lat_big)
+    assert m.shape == (2,)
+    for i, (kp, nu) in enumerate([(2e-8, 5e-5), (2e-7, 2e-4)]):
+        assert m[i] == reframe_guard_margin(topo, kp, cfg.dt,
+                                            cfg.record_every, nu, lat_big)
+    assert m[0] != m[1]
+    # End to end: two draws, two gains, per-draw FreqStep magnitudes,
+    # margin=None — the fused lane's in-kernel guard rotates ONLY the
+    # drifting draw (the quiet draw logs zero shift rows bit-exactly).
+    ctrl = ControllerConfig(kp=np.array([2e-8, 3e-8]))
+    ppm_b = np.tile(_zero_mean_ppm(8, 0.5), (2, 1))
+    sc = Scenario(events=(FreqStep(t=0.06, nodes=(0,),
+                                   delta_ppm=np.array([0.0, 8.0])),))
+    pol = ReframePolicy(depth=12, margin=None)
+    res = run_scenario(topo, links, ctrl, ppm_b, sc, cfg, engine="fused",
+                       telemetry=Telemetry(beta=True, guard=pol))
+    assert len(res.reframes) >= 1
+    for r in res.reframes:
+        assert r.guard_latency == 1
+        np.testing.assert_array_equal(r.shift[0], 0)
+    assert max(np.abs(r.shift[1]).max() for r in res.reframes) > 0
